@@ -1,0 +1,31 @@
+"""Paper Fig. 12: prediction vs number of GTL aggregators (Section 9)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import gtl as G
+from repro.core.experiment import make_scenario
+from repro.training import metrics as M
+
+
+def run(quick: bool = False):
+    rows = []
+    n = 4000 if quick else 8000
+    for scen in ("mnist_balanced", "mnist_class_unbalanced",
+                 "mnist_node_unbalanced", "hapt"):
+        t0 = time.time()
+        shards, (Xte, yte), spec = make_scenario(scen, 0, n)
+        k = spec.n_classes
+        key = jax.random.PRNGKey(5)
+        L = shards.X.shape[0]
+        pts = []
+        for n_agg in (1, 3, 6, 12, L):
+            res = G.run_gtl_with_aggregators(key, shards, k, n_agg)
+            f = float(M.f_measure(
+                yte, G.predict_linear(res.consensus_flat, Xte), k))
+            pts.append(f"agg{n_agg}:{f:.3f}")
+        us = (time.time() - t0) * 1e6
+        rows.append((f"fig12_aggregators_{scen}", us, ";".join(pts)))
+    return rows

@@ -1,0 +1,65 @@
+"""Framework-level Table 6/7 analogue: cross-pod GTL sync traffic vs dense
+per-step all-reduce, plus wall-time of local steps and syncs (CPU, smoke
+configs — trend data, not TPU timings)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core import crosspod as cp
+from repro.data.lm import SyntheticLM
+from repro.training import optimizer as O
+from repro.training import train_step as TS
+
+
+def run(quick: bool = False):
+    rows = []
+    cfg = get_smoke_config("qwen3_0_6b")
+    opt = O.adamw(lr=1e-3)
+    n_pods = 4
+    state = TS.init_crosspod_train_state(jax.random.PRNGKey(0), cfg, opt,
+                                         n_pods)
+    step = jax.jit(TS.make_crosspod_train_step(cfg, opt))
+    data = SyntheticLM(cfg.vocab_size, n_pods=n_pods, pod_skew=0.3)
+    batch = data.pod_batches(0, 2, 64)
+    state, _ = step(state, batch)  # compile
+    t0 = time.time()
+    for i in range(3):
+        state, m = step(state, data.pod_batches(i, 2, 64))
+    jax.block_until_ready(m["loss"])
+    us_step = (time.time() - t0) / 3 * 1e6
+
+    single = jax.tree.map(lambda a: a[0], state.cross.params)
+    for frac, tag in [(0.0, "dense"), (0.01, "top1pct"), (0.001, "top0.1pct")]:
+        sc = cp.SyncConfig(mode="consensus", sparse_frac=frac)
+        oh = cp.crosspod_overhead_bytes(single, n_pods, sc)
+        sync = jax.jit(TS.make_sync_step(cfg, sc))
+        st2, _ = sync(state)  # compile
+        t0 = time.time()
+        st2, _ = sync(state)
+        jax.block_until_ready(jax.tree.leaves(st2.cross.params)[0])
+        us_sync = (time.time() - t0) * 1e6
+        rows.append((
+            f"crosspod_sync_{tag}", us_sync,
+            f"exchanged={oh['exchanged_bytes']/1e6:.2f}MB"
+            f";dense={oh['dense_bytes']/1e6:.2f}MB"
+            f";gain={oh['gain_vs_dense']:.1%}"
+            f";local_step_us={us_step:.0f}"))
+
+    # per-step traffic comparison: GTL sync every H steps vs per-step
+    # gradient all-reduce across pods (the "cloud" of the framework world)
+    n_params = oh["params"]
+    per_step_allreduce = 2 * (n_pods - 1) / n_pods * n_params * 2  # ring, bf16
+    for H in (10, 100):
+        sc = cp.SyncConfig(mode="gtl", sparse_frac=0.01)
+        ohh = cp.crosspod_overhead_bytes(single, n_pods, sc)
+        per_step_gtl = ohh["exchanged_bytes"] / H
+        rows.append((
+            f"crosspod_traffic_sync_every_{H}", 0.0,
+            f"gtl_bytes_per_step={per_step_gtl/1e3:.1f}KB"
+            f";allreduce_per_step={per_step_allreduce/1e3:.1f}KB"
+            f";gain={1 - per_step_gtl / per_step_allreduce:.1%}"))
+    return rows

@@ -1,0 +1,49 @@
+"""Paper Figs. 13/14 + Tables 8/9: dynamic (arrival) scenario."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import overhead as oh
+from repro.core.dynamic import run_dynamic_gtl, run_dynamic_nohtl
+from repro.core.experiment import make_scenario
+from repro.core.gtl import predict_linear
+from repro.training import metrics as M
+
+
+def run(quick: bool = False):
+    rows = []
+    n = 4000 if quick else 8000
+    for scen, tag in [("hapt", "hapt"), ("mnist_balanced", "mnist")]:
+        shards, (Xte, yte), spec = make_scenario(scen, 0, n)
+        k = spec.n_classes
+
+        def eval_fn(model):
+            return float(M.f_measure(yte, predict_linear(model, Xte), k))
+
+        for s in (1, 4):
+            t0 = time.time()
+            _, ev_g = run_dynamic_gtl(jax.random.PRNGKey(0), shards, k,
+                                      arrivals_per_phase=s, alpha=0.5,
+                                      eval_fn=eval_fn)
+            _, ev_n = run_dynamic_nohtl(shards, k, arrivals_per_phase=s,
+                                        alpha=0.5, eval_fn=eval_fn)
+            us = (time.time() - t0) * 1e6
+            rows.append((
+                f"fig1314_dynamic_{tag}_s{s}", us,
+                f"gtl_first={ev_g[0]:.3f};gtl_final={ev_g[-1]:.3f}"
+                f";nohtl_final={ev_n[-1]:.3f};phases={len(ev_g)}"))
+
+            # Tables 8/9: per-phase traffic
+            d0 = spec.n_features + 1
+            per_phase = oh.oh_dyn_gtl(s, k, d0, 64)
+            per_phase_nohtl = oh.oh_nohtl_mu(s + 1, k, d0)
+            cloud = (n // shards.X.shape[0]) * s * spec.n_features
+            rows.append((
+                f"table89_dynamic_oh_{tag}_s{s}", us,
+                f"OHdynGTL={oh.to_mb(per_phase):.2f}MB"
+                f";OHnoHTL={oh.to_mb(per_phase_nohtl):.2f}MB"
+                f";gain_gtl={1 - per_phase / max(cloud,1):.0%}"
+                f";gain_nohtl={1 - per_phase_nohtl / max(cloud,1):.0%}"))
+    return rows

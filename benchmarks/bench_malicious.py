@@ -1,0 +1,35 @@
+"""Paper Tables 1-4: robustness to malicious devices."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core.corruption import corrupt_malicious1, corrupt_malicious2
+from repro.core.experiment import run_scenario
+
+
+def run(quick: bool = False):
+    rows = []
+    n = 4000 if quick else 8000
+    key = jax.random.PRNGKey(7)
+    cases = [("mnist_balanced", "t1_mnist"), ("hapt", "t2_hapt")]
+    for scen, tag in cases:
+        for frac in (0.25, 0.5, 0.75):
+            t0 = time.time()
+            cf = lambda m: corrupt_malicious1(
+                jax.random.fold_in(key, int(frac * 100)), m, frac)[0]
+            r = run_scenario(scen, n_samples=n, corrupt_fn=cf)
+            us = (time.time() - t0) * 1e6
+            rows.append((f"{tag}_malicious1_{int(frac*100)}pct", us,
+                         f"noHTLmu={r.f_nohtl_mu:.3f};muGTL={r.f_gtl4_mu:.3f}"))
+    for scen, tag in [("mnist_balanced", "t3_mnist"), ("hapt", "t4_hapt")]:
+        for frac in (0.25, 0.5, 0.75):
+            t0 = time.time()
+            cf = lambda m: corrupt_malicious2(
+                jax.random.fold_in(key, 1 + int(frac * 100)), m, frac)
+            r = run_scenario(scen, n_samples=n, corrupt_fn=cf)
+            us = (time.time() - t0) * 1e6
+            rows.append((f"{tag}_malicious2_{int(frac*100)}pct", us,
+                         f"noHTLmu={r.f_nohtl_mu:.3f};muGTL={r.f_gtl4_mu:.3f}"))
+    return rows

@@ -1,0 +1,48 @@
+"""Paper Tables 6/7 (empirical network overhead) + Fig. 11 (bound
+sensitivity analysis, Eqs. 12-15)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import overhead as oh
+from repro.core.experiment import run_scenario
+
+
+def run(quick: bool = False):
+    rows = []
+    # MNIST at the paper's N=70000 (Table 6 row; the gain is N-dependent)
+    for scen, tag, n_full in [("hapt", "hapt", None),
+                              ("mnist_balanced", "mnist", 70_000)]:
+        t0 = time.time()
+        r = run_scenario(scen, n_samples=4000 if quick else n_full)
+        rep = r.overhead
+        us = (time.time() - t0) * 1e6
+        g = rep.gains()
+        rows.append((
+            f"table6_gtl_overhead_{tag}", us,
+            f"OH0={rep.oh0_mb:.1f}MB;OH1={rep.oh1_mb:.1f}MB"
+            f";OHtot={rep.oh_gtl_mb:.1f}MB;OHcl={rep.oh_cloud_mb:.0f}MB"
+            f";OHraw={rep.oh_raw_mb:.0f}MB;gain={g['gain_gtl']:.0%}"
+            f";gain_raw={g['gain_gtl_raw']:.0%}"))
+        rows.append((
+            f"table7_nohtl_overhead_{tag}", us,
+            f"OHmu={rep.oh_nohtl_mu_mb:.2f}MB;OHmv={rep.oh_nohtl_mv_mb:.1f}MB"
+            f";gain_mu={g['gain_nohtl_mu']:.0%}"
+            f";gain_mv={g['gain_nohtl_mv']:.0%}"))
+
+    # Fig. 11: sensitivity of the gain lower bound
+    t0 = time.time()
+    s_sweep = ";".join(
+        f"s{s}:{oh.gain_lower_bound(s, 10, 325, 70000, 324):.2f}"
+        for s in (10, 30, 60, 90, 120))
+    k_sweep = ";".join(
+        f"k{k}:{oh.gain_lower_bound(30, k, 325, 70000, 324):.2f}"
+        for k in (2, 10, 20, 40))
+    n_sweep = ";".join(
+        f"N{n//1000}k:{oh.gain_lower_bound(30, 10, 325, n, 324):.2f}"
+        for n in (20_000, 70_000, 200_000, 1_000_000))
+    us = (time.time() - t0) * 1e6
+    rows.append(("fig11a_bound_vs_locations", us, s_sweep))
+    rows.append(("fig11b_bound_vs_classes", us, k_sweep))
+    rows.append(("fig11c_bound_vs_datasize", us, n_sweep))
+    return rows

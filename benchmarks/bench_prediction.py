@@ -1,0 +1,30 @@
+"""Paper Figs. 3/5/7/9 (+ per-class Figs. 4/6/8/10): prediction performance
+of GTL vs noHTL vs Cloud on the four scenarios."""
+from __future__ import annotations
+
+import time
+
+from repro.core.experiment import SCENARIOS, run_scenario
+
+
+def run(quick: bool = False):
+    rows = []
+    n = 5000 if quick else None  # None = paper-scale defaults
+    for name in SCENARIOS:
+        t0 = time.time()
+        r = run_scenario(name, n_samples=n)
+        us = (time.time() - t0) * 1e6
+        derived = (f"local={r.f_local.mean():.3f}"
+                   f";gtl2={r.f_gtl2.mean():.3f}"
+                   f";muGTL4={r.f_gtl4_mu:.3f}"
+                   f";mvGTL4={r.f_gtl4_mv:.3f}"
+                   f";noHTLmu={r.f_nohtl_mu:.3f}"
+                   f";noHTLmv={r.f_nohtl_mv:.3f}"
+                   f";cloud={r.f_cloud:.3f}")
+        rows.append((f"fig3579_prediction_{name}", us, derived))
+        # per-class gain for the minor classes (Figs 4/8)
+        pc = r.per_class
+        minors = ";".join(f"c{c}:{pc['gtl4'][c]-pc['local'][c]:+.2f}"
+                          for c in range(len(pc["gtl4"])))
+        rows.append((f"fig46810_perclass_{name}", us, minors))
+    return rows

@@ -1,0 +1,51 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads benchmarks/results/dryrun/*.json (produced by
+`python -m repro.launch.dryrun`); one CSV row per (arch x shape x mesh) with
+the three terms and the bottleneck.  Missing combos are reported as such —
+run the dry-run sweep first."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_records():
+    recs = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            recs.append((json.load(f), path))
+    return recs
+
+
+def run(quick: bool = False):
+    rows = []
+    recs = load_records()
+    if not recs:
+        return [("roofline_table", 0.0,
+                 "no dry-run artifacts; run python -m repro.launch.dryrun")]
+    for r, path in recs:
+        parts = os.path.basename(path)[:-5].split("__")
+        n_base = 4 if r.get("sync") else 3
+        variant = "_" + parts[-1] if len(parts) > n_base else ""
+        name = (f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+                + ("_sync" if r.get("sync") else "") + variant)
+        if not r.get("ok"):
+            rows.append((name, 0.0, "FAILED:" + r.get("error", "?")[:80]))
+            continue
+        rl = r["roofline"]
+        if r.get("sync"):
+            rows.append((name, r["seconds"] * 1e6,
+                         f"coll_bytes={r['collectives']['total']:.2e}"))
+            continue
+        derived = (f"compute_ms={rl['compute_s']*1e3:.2f}"
+                   f";memory_ms={rl['memory_s']*1e3:.2f}"
+                   f";collective_ms={rl['collective_s']*1e3:.2f}"
+                   f";bottleneck={rl['bottleneck']}"
+                   f";useful={rl['useful_ratio']:.2f}"
+                   f";temp_GB={r['memory']['temp_bytes']/2**30:.2f}")
+        rows.append((name, r["seconds"] * 1e6, derived))
+    return rows

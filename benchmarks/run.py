@@ -1,0 +1,46 @@
+"""Benchmark harness — one function per paper table/figure plus framework
+benches.  Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+SUITES = ("prediction", "malicious", "overhead", "aggregators", "dynamic",
+          "kernels", "crosspod", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced dataset sizes (CI-friendly)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of suites")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    import importlib
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for suite in SUITES:
+        if only and suite not in only:
+            continue
+        try:
+            mod = importlib.import_module(f"benchmarks.bench_{suite}")
+            for name, us, derived in mod.run(quick=args.quick):
+                print(f"{name},{us:.0f},{derived}", flush=True)
+        except Exception as e:
+            failures += 1
+            traceback.print_exc(file=sys.stderr)
+            print(f"bench_{suite},0,ERROR:{type(e).__name__}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Continuous-batching serving demo: a stream of requests with mixed prompt
+lengths and generation budgets flows through a fixed slot pool; finished
+slots are refilled immediately so the decode batch stays full.
+
+    PYTHONPATH=src python examples/continuous_batching.py --slots 3
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_0_6b")
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=8)
+    args = ap.parse_args()
+
+    from repro.configs import get_smoke_config
+    from repro.models import params as Pm
+    from repro.serving import ContinuousBatcher, Request
+
+    cfg = get_smoke_config(args.arch)
+    params, _ = Pm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ContinuousBatcher(cfg, params, n_slots=args.slots, capacity=96)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        rng.integers(2, 10)).tolist(),
+                    max_new=int(rng.integers(3, 12)))
+            for i in range(args.requests)]
+    eng.submit(reqs)
+    t0 = time.time()
+    done, steps = eng.run()
+    dt = time.time() - t0
+    print(f"{len(done)} requests over {args.slots} slots in {steps} engine "
+          f"steps ({dt:.1f}s CPU), slot utilization "
+          f"{eng.utilization(steps):.0%}")
+    for c in sorted(done, key=lambda c: c.rid)[:5]:
+        print(f"  rid={c.rid} prompt_len={c.prompt_len} "
+              f"-> {len(c.tokens)} tokens: {c.tokens[:6]}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Full paper reproduction driver: every table/figure family in one run.
+
+    PYTHONPATH=src python examples/paper_repro.py [--quick]
+
+Sections produced (paper reference in brackets):
+  1. prediction per scenario          [Figs 3, 5, 7, 9]
+  2. malicious robustness             [Tables 1-4]
+  3. network overhead + bound         [Tables 6-7, Fig 11]
+  4. aggregator trade-off             [Fig 12]
+  5. dynamic scenario                 [Figs 13-14, Tables 8-9]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    import importlib
+
+    for suite in ("prediction", "malicious", "overhead", "aggregators",
+                  "dynamic"):
+        print(f"\n=== {suite} " + "=" * (60 - len(suite)))
+        mod = importlib.import_module(f"benchmarks.bench_{suite}")
+        for name, us, derived in mod.run(quick=args.quick):
+            print(f"  {name:40s} {derived}")
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    main()

@@ -1,0 +1,43 @@
+"""Quickstart: the paper's distributed learning procedure in 30 lines.
+
+Runs GTL (Hypothesis Transfer Learning) vs noHTL (consensus) vs Cloud on a
+synthetic MNIST-HOG-like dataset spread over 30 locations, and prints the
+paper's headline comparison: distributed ~ Cloud accuracy at a fraction of
+the network traffic.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.experiment import run_scenario
+
+
+def main():
+    print("GTL vs noHTL vs Cloud — MNIST-like, class-unbalanced, 30 nodes")
+    r = run_scenario("mnist_class_unbalanced", n_samples=8000)
+    for name, f in r.summary_rows():
+        print(f"  {name:14s} F-measure = {f:.3f}")
+    g = r.overhead.gains()
+    rep = r.overhead
+    print(f"\nnetwork overhead (paper Table 6/7 accounting, n={rep.n_samples}):")
+    print(f"  GTL      : {rep.oh_gtl_mb:6.1f} MB  (gain vs cloud "
+          f"{g['gain_gtl']:+.0%})")
+    print(f"  noHTL_mu : {rep.oh_nohtl_mu_mb:6.2f} MB  (gain "
+          f"{g['gain_nohtl_mu']:+.0%})")
+    print(f"  Cloud    : {rep.oh_cloud_mb:6.1f} MB  (ships the dataset)")
+    # the gain grows with dataset size (paper Fig. 11c) — project to the
+    # paper's full MNIST
+    rep70 = type(rep)(s=rep.s, k=rep.k, d0=rep.d0, d1=rep.d1,
+                      n_samples=70_000, d_point=rep.d_point)
+    print(f"  at the paper's N=70000 the same models give GTL gain "
+          f"{rep70.gains()['gain_gtl']:+.0%} (paper: 83%) — model traffic "
+          f"is constant, data traffic is not (Fig. 11c)")
+    print("\nkey claim: the best distributed scheme is within a few F points"
+          "\nof Cloud while cutting network traffic drastically at scale.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Batched serving demo: KV-cache decode across architecture families.
+
+Decodes a batch of streams with three different state kinds — KV cache
+(dense), ring-buffer window cache (sliding window), and O(1) recurrent state
+(RWKV6) — and reports per-token latency on CPU.
+
+    PYTHONPATH=src python examples/serve_demo.py --gen 24
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+
+    from repro.configs import get_smoke_config
+    from repro.models import params as Pm
+    from repro.serving import greedy_generate, init_cache, make_serve_step
+
+    cases = [
+        ("qwen3_0_6b", {}, "dense KV cache"),
+        ("mistral_nemo_12b", {"sliding_window": 32}, "ring window cache"),
+        ("rwkv6_7b", {}, "O(1) recurrent state"),
+        ("musicgen_medium", {}, "4-codebook audio decode"),
+    ]
+    for arch, over, desc in cases:
+        cfg = get_smoke_config(arch)
+        if over:
+            cfg = cfg.replace(**over)
+        params, _ = Pm.init_params(jax.random.PRNGKey(0), cfg)
+        B = args.batch
+        cap = cfg.sliding_window or 128
+        cache = init_cache(cfg, B, cap, pos=0, dtype=jnp.float32)
+        tok_shape = ((B, 1, cfg.num_codebooks) if cfg.num_codebooks > 1
+                     else (B, 1))
+        first = jnp.zeros(tok_shape, jnp.int32)
+        out = greedy_generate(cfg, params, cache, first, args.gen)
+        jax.block_until_ready(out)  # compile
+        t0 = time.time()
+        out = greedy_generate(cfg, params, cache, first, args.gen)
+        jax.block_until_ready(out)
+        dt = (time.time() - t0) / args.gen * 1e3
+        print(f"{arch:20s} [{desc:24s}] batch={B} gen={args.gen} "
+              f"-> {dt:6.1f} ms/token (CPU)")
+        print(f"  sample: {jax.device_get(out)[0].tolist()[:8]}")
+
+
+if __name__ == "__main__":
+    main()

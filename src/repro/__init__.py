@@ -1,0 +1,3 @@
+"""repro — communication-efficient distributed learning (GTL/noHTL) as a
+multi-pod JAX training/serving framework."""
+__version__ = "1.0.0"

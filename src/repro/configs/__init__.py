@@ -1,0 +1,42 @@
+"""Architecture registry: one module per assigned architecture, each with a
+full `CONFIG` (exact assigned dimensions, citation in `citation`) and a
+`smoke()` reduced variant (<=2 layers, d_model<=512, <=4 experts) for CPU
+tests."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.shapes import SHAPES, InputShape  # noqa: F401
+
+ARCHS = (
+    "llama4_scout_17b_a16e",
+    "rwkv6_7b",
+    "musicgen_medium",
+    "qwen3_moe_30b_a3b",
+    "qwen1_5_4b",
+    "mistral_nemo_12b",
+    "qwen3_0_6b",
+    "qwen2_vl_7b",
+    "qwen2_72b",
+    "zamba2_2_7b",
+    "gtl_paper",  # the paper's own (linear) model as a config entry
+)
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+
+
+def get_config(name: str):
+    mod_name = _ALIASES.get(name, name).replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str):
+    mod_name = _ALIASES.get(name, name).replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.smoke()
+
+
+def model_archs():
+    """The 10 assigned transformer-scale architectures (excludes gtl_paper)."""
+    return tuple(a for a in ARCHS if a != "gtl_paper")

@@ -1,0 +1,31 @@
+"""Llama-4 Scout 17B-active / 16 experts  [hf:meta-llama/Llama-4-Scout-17B-16E]
+
+MoE with top-1 routing, early-fusion multimodal family; attention is
+chunked-local on 3 of every 4 layers (the 4th is global) — which is also what
+qualifies it for long_500k decode with a chunk-sized ring cache."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    arch_type="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202048,
+    n_experts=16,
+    n_experts_per_token=1,
+    chunked_attention=8192,
+    chunked_global_every=4,
+    rope_theta=5e5,
+    citation="hf:meta-llama/Llama-4-Scout-17B-16E",
+)
+
+
+def smoke():
+    return CONFIG.replace(
+        n_layers=2, d_model=256, n_heads=4, n_kv_heads=2, head_dim=64,
+        d_ff=512, vocab_size=512, n_experts=4, chunked_attention=64,
+        moe_group_size=64, dtype="float32", remat=False)

@@ -1,0 +1,24 @@
+"""Mistral-NeMo 12B  [hf:mistralai/Mistral-Nemo-Base-2407]
+
+Dense GQA decoder, 128k context (head_dim 128, 40 layers)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mistral-nemo-12b",
+    arch_type="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=131072,
+    rope_theta=1e6,
+    citation="hf:mistralai/Mistral-Nemo-Base-2407",
+)
+
+
+def smoke():
+    return CONFIG.replace(
+        n_layers=2, d_model=256, n_heads=4, n_kv_heads=2, head_dim=64,
+        d_ff=512, vocab_size=512, dtype="float32", remat=False)

@@ -1,0 +1,28 @@
+"""MusicGen-medium  [arXiv:2306.05284]
+
+Decoder-only transformer over EnCodec audio tokens (4 codebooks, vocab 2048
+each, delay interleaving).  The EnCodec codec itself is the stubbed audio
+frontend: input_specs() feeds 4-codebook token frames directly."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    arch_type="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    head_dim=64,
+    d_ff=6144,
+    vocab_size=2048,
+    num_codebooks=4,
+    frontend="audio",
+    rope_theta=1e4,
+    citation="arXiv:2306.05284",
+)
+
+
+def smoke():
+    return CONFIG.replace(
+        n_layers=2, d_model=256, n_heads=4, n_kv_heads=4, head_dim=64,
+        d_ff=512, vocab_size=128, dtype="float32", remat=False)

@@ -1,0 +1,25 @@
+"""Qwen1.5-4B  [hf:Qwen/Qwen1.5-0.5B family card]
+
+Dense decoder with QKV bias (the Qwen1.5 signature)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-4b",
+    arch_type="dense",
+    n_layers=40,
+    d_model=2560,
+    n_heads=20,
+    n_kv_heads=20,
+    head_dim=128,
+    d_ff=6912,
+    vocab_size=151936,
+    qkv_bias=True,
+    rope_theta=1e6,
+    citation="hf:Qwen/Qwen1.5-0.5B",
+)
+
+
+def smoke():
+    return CONFIG.replace(
+        n_layers=2, d_model=256, n_heads=4, n_kv_heads=4, head_dim=64,
+        d_ff=512, vocab_size=512, dtype="float32", remat=False)

@@ -1,0 +1,25 @@
+"""Qwen2-72B  [arXiv:2407.10671]
+
+Large dense decoder: GQA (64 q / 8 kv heads), QKV bias, 80 layers."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-72b",
+    arch_type="dense",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=29568,
+    vocab_size=152064,
+    qkv_bias=True,
+    rope_theta=1e6,
+    citation="arXiv:2407.10671",
+)
+
+
+def smoke():
+    return CONFIG.replace(
+        n_layers=2, d_model=256, n_heads=4, n_kv_heads=2, head_dim=64,
+        d_ff=512, vocab_size=512, dtype="float32", remat=False)

@@ -1,0 +1,33 @@
+"""Qwen2-VL-7B  [arXiv:2409.12191]
+
+VLM backbone with M-RoPE (3-section rotary: temporal/height/width) and
+dynamic resolution.  The ViT vision tower is the stubbed frontend:
+input_specs() feeds precomputed patch embeddings (n_patches x d_model),
+prepended to the text tokens."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    arch_type="vlm",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=18944,
+    vocab_size=152064,
+    qkv_bias=True,
+    mrope=True,
+    mrope_sections=(16, 24, 24),
+    frontend="vision",
+    n_patches=1024,
+    rope_theta=1e6,
+    citation="arXiv:2409.12191",
+)
+
+
+def smoke():
+    return CONFIG.replace(
+        n_layers=2, d_model=256, n_heads=4, n_kv_heads=2, head_dim=64,
+        d_ff=512, vocab_size=512, n_patches=16, mrope_sections=(8, 12, 12),
+        dtype="float32", remat=False)

@@ -1,0 +1,29 @@
+"""Qwen3-30B-A3B  [hf:Qwen/Qwen3-30B-A3B]
+
+Fine-grained MoE: 128 experts, top-8, small d_ff=768 per expert; qk-norm GQA."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    arch_type="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=768,
+    vocab_size=151936,
+    n_experts=128,
+    n_experts_per_token=8,
+    qk_norm=True,
+    moe_group_size=256,   # fine-grained experts: keep dispatch overhead low
+    rope_theta=1e6,
+    citation="hf:Qwen/Qwen3-30B-A3B",
+)
+
+
+def smoke():
+    return CONFIG.replace(
+        n_layers=2, d_model=256, n_heads=4, n_kv_heads=2, head_dim=64,
+        d_ff=128, vocab_size=512, n_experts=4, n_experts_per_token=2,
+        moe_group_size=64, dtype="float32", remat=False)

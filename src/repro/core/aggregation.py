@@ -1,0 +1,43 @@
+"""Model-aggregation operators (paper Sections 4.2 step 4, 4.3, 10).
+
+- consensus_mean:   h = (1/L) sum_l h_l  (the mu- variants)
+- majority voting:  most frequent class over the per-model predictions
+                    (the mv- variants)
+- ema_merge:        dynamic-scenario merge, Eq. 16.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def consensus_mean(stacked_models, weight_mask=None):
+    """Mean over the leading location axis of every leaf.
+
+    weight_mask: optional (L,) weights (e.g. to exclude absent locations in
+    the dynamic scenario); normalised internally.
+    """
+    if weight_mask is None:
+        return jax.tree.map(lambda a: jnp.mean(a, axis=0), stacked_models)
+    w = weight_mask / jnp.maximum(jnp.sum(weight_mask), 1e-12)
+
+    def reduce(a):
+        wb = w.reshape((-1,) + (1,) * (a.ndim - 1))
+        return jnp.sum(a * wb, axis=0)
+
+    return jax.tree.map(reduce, stacked_models)
+
+
+def majority_vote(predictions, n_classes: int, valid_mask=None):
+    """predictions: (L, m) int class labels -> (m,) most frequent label."""
+    onehot = jax.nn.one_hot(predictions, n_classes)  # (L, m, k)
+    if valid_mask is not None:
+        onehot = onehot * valid_mask[:, None, None]
+    votes = jnp.sum(onehot, axis=0)  # (m, k)
+    return jnp.argmax(votes, axis=-1)
+
+
+def ema_merge(old_model, new_model, alpha: float):
+    """Eq. 16: m_new = alpha * m_old + (1 - alpha) * m'."""
+    return jax.tree.map(lambda o, n: alpha * o + (1.0 - alpha) * n,
+                        old_model, new_model)

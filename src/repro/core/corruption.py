@@ -1,0 +1,50 @@
+"""Malicious-device model corruption (paper Section 7).
+
+- Malicious1: a fraction of devices send a *fully* corrupted model — every
+  parameter replaced by N(0, 1) noise.
+- Malicious2: *all* devices send models in which a fraction p of the
+  parameters (chosen i.i.d.) is replaced by N(0, 1) noise.
+
+Both operate on a pytree of stacked per-location models (leading axis L).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def corrupt_malicious1(key, stacked_models, frac_malicious: float):
+    """Replace the models of ceil(frac * L) devices with pure noise.
+
+    Returns (corrupted_models, malicious_mask (L,) bool).
+    """
+    leaves = jax.tree.leaves(stacked_models)
+    L = leaves[0].shape[0]
+    n_bad = int(round(frac_malicious * L))
+    k_sel, k_noise = jax.random.split(key)
+    perm = jax.random.permutation(k_sel, L)
+    bad = jnp.zeros((L,), bool).at[perm[:n_bad]].set(True)
+
+    def corrupt(leaf, k):
+        noise = jax.random.normal(k, leaf.shape, leaf.dtype)
+        sel = bad.reshape((L,) + (1,) * (leaf.ndim - 1))
+        return jnp.where(sel, noise, leaf)
+
+    keys = jax.random.split(k_noise, len(leaves))
+    flat = [corrupt(l, k) for l, k in zip(leaves, keys)]
+    return jax.tree.unflatten(jax.tree.structure(stacked_models), flat), bad
+
+
+def corrupt_malicious2(key, stacked_models, frac_params: float):
+    """Replace a fraction of every model's parameters with noise."""
+    leaves = jax.tree.leaves(stacked_models)
+
+    def corrupt(leaf, k):
+        k_m, k_n = jax.random.split(k)
+        mask = jax.random.bernoulli(k_m, frac_params, leaf.shape)
+        noise = jax.random.normal(k_n, leaf.shape, leaf.dtype)
+        return jnp.where(mask, noise, leaf)
+
+    keys = jax.random.split(key, len(leaves))
+    flat = [corrupt(l, k) for l, k in zip(leaves, keys)]
+    return jax.tree.unflatten(jax.tree.structure(stacked_models), flat)

@@ -1,0 +1,95 @@
+"""Dynamic scenario — paper Section 10.
+
+Devices arrive in batches of `s` per learning phase.  A permanent device (the
+"totem" G) stores the running aggregate model m.  Each phase:
+
+  1. the s arriving devices receive m from G,
+  2. they run the GTL procedure among themselves, *including m as an
+     additional transfer source*,
+  3. the phase consensus m' is merged into the running model with the
+     exponential moving average of Eq. 16:  m_new = alpha m_old + (1-alpha) m'.
+
+noHTL in the same setting simply averages the arrivals' base models with the
+running model (the arrivals do not re-train).
+
+Thanks to linear base learners every aggregate stays a (k, d+1) linear model
+(see core.gtl.flatten_gtl), so phases compose exactly.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gtl as gtl_mod
+from repro.core.aggregation import consensus_mean, ema_merge
+from repro.core.gtl import StackedLinear
+
+
+class DynamicTrace(NamedTuple):
+    models: jax.Array  # (n_phases, k, d+1) running aggregate after each phase
+
+
+def _with_totem(base: StackedLinear, totem_flat):
+    """Append the running aggregate model as an extra linear source."""
+    W_t = totem_flat[None, :, :-1]
+    b_t = totem_flat[None, :, -1]
+    return StackedLinear(
+        W=jnp.concatenate([base.W, W_t], axis=0),
+        b=jnp.concatenate([base.b, b_t], axis=0),
+    )
+
+
+def run_dynamic_gtl(key, shards, k: int, arrivals_per_phase: int,
+                    alpha: float = 0.5, kappa: int = 64, lam: float = 3.0,
+                    svm_kw: dict | None = None,
+                    eval_fn: Callable | None = None):
+    """Process locations in arrival order, `arrivals_per_phase` at a time.
+
+    Returns (DynamicTrace, list of eval_fn outputs per phase).
+    """
+    svm_kw = svm_kw or {}
+    L = shards.X.shape[0]
+    d1 = shards.X.shape[-1] + 1
+    totem = jnp.zeros((k, d1), jnp.float32)
+    traces, evals = [], []
+    for start in range(0, L - (L % arrivals_per_phase), arrivals_per_phase):
+        sl = slice(start, start + arrivals_per_phase)
+        X = jnp.asarray(shards.X[sl])
+        y = jnp.asarray(shards.y[sl])
+        mask = jnp.asarray(shards.mask[sl])
+        base = gtl_mod.train_base_models(X, y, mask, k, **svm_kw)
+        first_phase = start == 0
+        sources = base if first_phase else _with_totem(base, totem)
+        key, sub = jax.random.split(key)
+        coef, flat = gtl_mod.gtl_step2_all(sub, X, y, mask, sources, k,
+                                           kappa, lam)
+        m_prime = consensus_mean(flat)
+        totem = m_prime if first_phase else ema_merge(totem, m_prime, alpha)
+        traces.append(totem)
+        if eval_fn is not None:
+            evals.append(eval_fn(totem))
+    return DynamicTrace(jnp.stack(traces)), evals
+
+
+def run_dynamic_nohtl(shards, k: int, arrivals_per_phase: int,
+                      alpha: float = 0.5, svm_kw: dict | None = None,
+                      eval_fn: Callable | None = None):
+    svm_kw = svm_kw or {}
+    L = shards.X.shape[0]
+    d1 = shards.X.shape[-1] + 1
+    totem = jnp.zeros((k, d1), jnp.float32)
+    traces, evals = [], []
+    for start in range(0, L - (L % arrivals_per_phase), arrivals_per_phase):
+        sl = slice(start, start + arrivals_per_phase)
+        X = jnp.asarray(shards.X[sl])
+        y = jnp.asarray(shards.y[sl])
+        mask = jnp.asarray(shards.mask[sl])
+        base = gtl_mod.train_base_models(X, y, mask, k, **svm_kw)
+        m_prime = consensus_mean(base.augmented())
+        totem = m_prime if start == 0 else ema_merge(totem, m_prime, alpha)
+        traces.append(totem)
+        if eval_fn is not None:
+            evals.append(eval_fn(totem))
+    return DynamicTrace(jnp.stack(traces)), evals

@@ -1,0 +1,159 @@
+"""End-to-end experiment harness for the paper's comparative study.
+
+Runs one scenario (dataset generator + partitioner) through:
+  - Cloud      : linear SVM with access to the full training set,
+  - GTL        : Algorithm 1 (steps 0/2/4, mu and mv aggregation),
+  - noHTL      : Algorithm 2 (mu and mv variants),
+and reports the paper's indices (F-measure per step/location, PPG,
+per-class accuracy, empirical network overhead).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import base_learner as bl
+from repro.core import gtl as gtl_mod
+from repro.core import nohtl as nohtl_mod
+from repro.core import overhead as oh
+from repro.data import synth as synth_mod
+from repro.data import partition as part_mod
+from repro.training import metrics as M
+
+
+@dataclass
+class ScenarioResult:
+    name: str
+    f_local: np.ndarray          # (L,) F of h^(0) per location
+    f_gtl2: np.ndarray           # (L,) F of h^(2) per location
+    f_gtl4_mu: float             # F of mu-GTL^(4)
+    f_gtl4_mv: float             # F of mv-GTL^(4)
+    f_nohtl_mu: float
+    f_nohtl_mv: float
+    f_cloud: float
+    per_class: dict = field(default_factory=dict)
+    overhead: oh.OverheadReport | None = None
+
+    def ppg(self):
+        f0 = self.f_local
+        return {
+            "gtl2": np.asarray(M.ppg(self.f_gtl2, f0)),
+            "gtl4_mu": np.asarray(M.ppg(self.f_gtl4_mu, f0)),
+            "nohtl_mu": np.asarray(M.ppg(self.f_nohtl_mu, f0)),
+            "nohtl_mv": np.asarray(M.ppg(self.f_nohtl_mv, f0)),
+        }
+
+    def summary_rows(self):
+        return [
+            ("local(mean)", float(self.f_local.mean())),
+            ("GTL(2)(mean)", float(self.f_gtl2.mean())),
+            ("mu-GTL(4)", self.f_gtl4_mu),
+            ("mv-GTL(4)", self.f_gtl4_mv),
+            ("noHTL_mu", self.f_nohtl_mu),
+            ("noHTL_mv", self.f_nohtl_mv),
+            ("Cloud", self.f_cloud),
+        ]
+
+
+SCENARIOS = ("hapt", "mnist_balanced", "mnist_class_unbalanced",
+             "mnist_node_unbalanced")
+
+
+def make_scenario(name: str, seed: int = 0, n_samples: int | None = None):
+    """Returns (shards, (X_test, y_test), spec)."""
+    key = jax.random.PRNGKey(seed)
+    rng = np.random.default_rng(seed)
+    if name == "hapt":
+        spec = synth_mod.HAPT_LIKE
+        X, y = synth_mod.make_dataset(key, spec, n_samples)
+        (Xtr, ytr), test = synth_mod.train_test_split(
+            jax.random.fold_in(key, 1), X, y)
+        # native class unbalance, uniform across locations
+        shards = part_mod.partition_uniform(rng, np.asarray(Xtr),
+                                            np.asarray(ytr), spec.n_locations)
+    elif name.startswith("mnist"):
+        spec = synth_mod.MNIST_HOG_LIKE
+        X, y = synth_mod.make_dataset(key, spec, n_samples)
+        (Xtr, ytr), test = synth_mod.train_test_split(
+            jax.random.fold_in(key, 1), X, y)
+        Xtr, ytr = np.asarray(Xtr), np.asarray(ytr)
+        if name == "mnist_balanced":
+            shards = part_mod.partition_uniform(rng, Xtr, ytr, spec.n_locations)
+        elif name == "mnist_class_unbalanced":
+            shards = part_mod.partition_class_unbalanced(
+                rng, Xtr, ytr, spec.n_locations, spec.n_classes)
+        elif name == "mnist_node_unbalanced":
+            shards = part_mod.partition_node_unbalanced(
+                rng, Xtr, ytr, spec.n_locations, spec.n_classes)
+        else:
+            raise ValueError(name)
+    else:
+        raise ValueError(name)
+    return shards, (jnp.asarray(test[0]), jnp.asarray(test[1])), spec
+
+
+def run_scenario(name: str, seed: int = 0, n_samples: int | None = None,
+                 kappa: int = 64, lam: float = 3.0,
+                 svm_steps: int = 600, corrupt_fn=None,
+                 raw_dims=None) -> ScenarioResult:
+    shards, (Xte, yte), spec = make_scenario(name, seed, n_samples)
+    k = spec.n_classes
+    key = jax.random.PRNGKey(seed + 1000)
+
+    # --- Cloud: one SVM on the concatenated training set
+    flatX = jnp.asarray(shards.X.reshape(-1, shards.X.shape[-1]))
+    flaty = jnp.asarray(shards.y.reshape(-1))
+    flatm = jnp.asarray(shards.mask.reshape(-1))
+    cloud = bl.fit_linear_svm(flatX, flaty, k, steps=svm_steps,
+                              sample_mask=flatm)
+    f_cloud = float(M.f_measure(yte, bl.predict(cloud, Xte), k))
+
+    # --- GTL
+    res = gtl_mod.run_gtl(key, shards, k, kappa=kappa, lam=lam,
+                          svm_steps=svm_steps, corrupt_fn=corrupt_fn)
+    aug0 = res.base.augmented()  # honest local models, (L, k, d+1)
+    f_local = np.asarray(jax.vmap(
+        lambda c: M.f_measure(yte, gtl_mod.predict_linear(c, Xte), k))(aug0))
+    f_gtl2 = np.asarray(jax.vmap(
+        lambda c: M.f_measure(yte, gtl_mod.predict_linear(c, Xte), k))(res.gtl_flat))
+    pred_mu = gtl_mod.predict_linear(res.consensus_flat, Xte)
+    f_gtl4_mu = float(M.f_measure(yte, pred_mu, k))
+    pred_mv = gtl_mod.predict_majority(res.gtl_flat, Xte, k)
+    f_gtl4_mv = float(M.f_measure(yte, pred_mv, k))
+
+    # --- noHTL
+    nres = nohtl_mod.run_nohtl(shards, k, svm_steps=svm_steps,
+                               corrupt_fn=corrupt_fn)
+    f_nohtl_mu = float(M.f_measure(yte, nohtl_mod.predict_consensus(nres, Xte), k))
+    f_nohtl_mv = float(M.f_measure(yte, nohtl_mod.predict_mv(nres, Xte, k), k))
+
+    # --- per-class accuracy (Figs. 4/6/8/10)
+    per_class = {
+        "local": np.asarray(M.per_class_accuracy(
+            yte, gtl_mod.predict_linear(aug0[0], Xte), k)),
+        "gtl2": np.asarray(M.per_class_accuracy(
+            yte, gtl_mod.predict_linear(res.gtl_flat[0], Xte), k)),
+        "gtl4": np.asarray(M.per_class_accuracy(yte, pred_mu, k)),
+        "nohtl": np.asarray(M.per_class_accuracy(
+            yte, nohtl_mod.predict_consensus(nres, Xte), k)),
+    }
+
+    # --- empirical overhead (Table 6/7).  Cloud ships the FULL dataset
+    # (train+test) at the paper's nominal dataset size; raw dims chosen so
+    # OH^raw matches the paper's 103MB (HAPT) / 358MB (MNIST).
+    d0, d1 = oh.measured_nnz_from_models(aug0, res.gtl_coef)
+    nominal_n = spec.n_samples if n_samples is None else n_samples
+    report = oh.OverheadReport(
+        s=shards.X.shape[0], k=k, d0=d0, d1=d1, n_samples=nominal_n,
+        d_point=spec.n_features,
+        d_raw=raw_dims if raw_dims is not None else
+        (1178 if name == "hapt" else 640),
+    )
+
+    return ScenarioResult(
+        name=name, f_local=f_local, f_gtl2=f_gtl2, f_gtl4_mu=f_gtl4_mu,
+        f_gtl4_mv=f_gtl4_mv, f_nohtl_mu=f_nohtl_mu, f_nohtl_mv=f_nohtl_mv,
+        f_cloud=f_cloud, per_class=per_class, overhead=report)

@@ -1,0 +1,189 @@
+"""GTL — the paper's distributed learning procedure (Algorithm 1).
+
+Five steps, executed at every location (vmapped over the location axis):
+
+  Step 0: train a local base learner (linear SVM) on the local shard.
+  Step 1: exchange base models (everybody receives everybody's h^(0)).
+  Step 2: re-train locally with GreedyTL, using all received base models as
+          transfer sources: h^(2)(x) = w^T x + sum_i beta_i h_i^(0)(x).
+  Step 3: exchange the h^(2) models.
+  Step 4: aggregate into h^(4) — consensus mean (mu-GTL) or majority voting
+          (mv-GTL).
+
+Because the base learners are *linear*, every GTL model collapses exactly to
+a (k, d+1) linear model in feature space:
+
+    h(x) = w^T [x;1] + sum_i beta_i (W_i [x;1]) = (w + sum_i beta_i W_i)^T [x;1]
+
+`flatten_gtl` performs that collapse; consensus, EMA merging (dynamic
+scenario) and evaluation all operate on the flattened form, while the
+overhead accounting uses the sparse (w, beta) form actually sent on the wire.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import base_learner as bl
+from repro.core import greedytl as gtl_solver
+from repro.core.aggregation import consensus_mean, majority_vote
+
+
+class StackedLinear(NamedTuple):
+    """Per-location linear models. W: (L, k, d), b: (L, k)."""
+
+    W: jax.Array
+    b: jax.Array
+
+    @property
+    def n_locations(self):
+        return self.W.shape[0]
+
+    def augmented(self):
+        """(L, k, d+1) with the bias folded in as the last column."""
+        return jnp.concatenate([self.W, self.b[..., None]], axis=-1)
+
+
+class GTLResult(NamedTuple):
+    base: StackedLinear          # h^(0) per location
+    sources: StackedLinear       # what each location *received* (may be corrupted)
+    gtl_coef: jax.Array          # (L, k, n) sparse GreedyTL coefficients, n=d+1+L
+    gtl_flat: jax.Array          # (L, k, d+1) flattened h^(2)
+    consensus_flat: jax.Array    # (k, d+1) flattened mu-GTL h^(4)
+
+
+# --------------------------------------------------------------- step 0
+
+
+def train_base_models(shards_X, shards_y, shards_mask, k: int,
+                      lam: float = 1e-4, lr: float = 0.01,
+                      steps: int = 600) -> StackedLinear:
+    """Step 0 at every location (vmap over the leading L axis)."""
+
+    def fit(X, y, m):
+        mdl = bl.fit_linear_svm(X, y, k, lam=lam, lr=lr, steps=steps,
+                                sample_mask=m)
+        return mdl.W, mdl.b
+
+    W, b = jax.vmap(fit)(shards_X, shards_y, shards_mask)
+    return StackedLinear(W, b)
+
+
+# --------------------------------------------------------------- step 2
+
+
+def source_margins(X, sources: StackedLinear):
+    """(k, m, L): margin of source model l, class c, on each row of X."""
+    # (m, d) x (L, k, d) -> (L, m, k)
+    marg = jnp.einsum("md,lkd->lmk", X, sources.W) + sources.b[:, None, :]
+    return jnp.transpose(marg, (2, 1, 0))  # (k, m, L)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "kappa", "n_bags", "bag_size"))
+def gtl_step2_all(key, shards_X, shards_y, shards_mask, sources: StackedLinear,
+                  k: int, kappa: int, lam: float,
+                  n_bags: int = 0, bag_size: int = 0,
+                  own: StackedLinear | None = None):
+    """Step 2 at every location.
+
+    `sources` are the models *received over the network* (possibly corrupted,
+    Section 7); `own` are the honest local models.  Algorithm 1 line 8
+    (H_src <- H_src U {h_own}) means every location's source set includes its
+    own honest model — so slot l is substituted with own[l] at location l
+    before GreedyTL runs.
+
+    Returns (coef (L, k, n), flat (L, k, d+1)), n = d+1+L; `flat` is the
+    exact linear collapse of each location's h^(2) against *its* source set.
+    """
+
+    def one(l, loc_key, X, y, mask):
+        if own is None:
+            src_l = sources
+        else:
+            src_l = StackedLinear(W=sources.W.at[l].set(own.W[l]),
+                                  b=sources.b.at[l].set(own.b[l]))
+        H = source_margins(X, src_l)  # (k, m, L)
+        Y = bl.onehot_pm(y, k) * mask[None, :]
+        if n_bags > 0:
+            mdl = gtl_solver.greedytl_fit_bagged(
+                loc_key, X, Y, H, kappa, lam, n_bags, bag_size,
+                sample_mask=mask)
+        else:
+            mdl = gtl_solver.greedytl_fit_multiclass(
+                X, Y, H, kappa, lam, sample_mask=mask)
+        return mdl.coef, flatten_gtl(mdl.coef, src_l)
+
+    L = shards_X.shape[0]
+    keys = jax.random.split(key, L)
+    return jax.vmap(one)(jnp.arange(L), keys, shards_X, shards_y, shards_mask)
+
+
+def flatten_gtl(coef, sources: StackedLinear):
+    """Collapse h^(2) = (w, beta) + linear sources into (k, d+1) weights.
+
+    coef: (k, n) or (L, k, n) with n = d+1+L_src.
+    """
+    d1 = sources.W.shape[-1] + 1
+    omega = coef[..., :d1]            # (..., k, d+1)
+    beta = coef[..., d1:]             # (..., k, L_src)
+    aug = sources.augmented()         # (L_src, k, d+1)
+    transfer = jnp.einsum("...kl,lke->...ke", beta, aug)
+    return omega + transfer
+
+
+# --------------------------------------------------------------- procedure
+
+
+def run_gtl(key, shards, k: int, kappa: int = 64, lam: float = 3.0,
+            svm_lam: float = 1e-4, svm_lr: float = 0.01, svm_steps: int = 600,
+            n_bags: int = 0, bag_size: int = 0,
+            corrupt_fn=None) -> GTLResult:
+    """Full Algorithm 1.  `corrupt_fn(models) -> models` (if given) corrupts
+    the *exchanged* base models at Step 1 (Section 7 malicious scenarios);
+    each location still trusts its own honest local model is included in the
+    received set in the same slot order, as the paper prescribes.
+    """
+    X, y, mask = jnp.asarray(shards.X), jnp.asarray(shards.y), jnp.asarray(shards.mask)
+    base = train_base_models(X, y, mask, k, lam=svm_lam, lr=svm_lr,
+                             steps=svm_steps)
+    sources = corrupt_fn(base) if corrupt_fn is not None else base
+    coef, flat = gtl_step2_all(key, X, y, mask, sources, k, kappa, lam,
+                               n_bags=n_bags, bag_size=bag_size, own=base)
+    consensus = consensus_mean(flat)           # (k, d+1) == mu-GTL^(4)
+    return GTLResult(base=base, sources=sources, gtl_coef=coef,
+                     gtl_flat=flat, consensus_flat=consensus)
+
+
+def run_gtl_with_aggregators(key, shards, k: int, n_aggregators: int,
+                             kappa: int = 64, lam: float = 3.0,
+                             **svm_kw) -> GTLResult:
+    """Section 9: only `n_aggregators` locations run Step 2; the consensus is
+    taken over the aggregators' models only and sent back to everyone.
+    n_aggregators == 1 has noHTL_mu-like traffic; == L recovers full GTL.
+    """
+    X, y, mask = jnp.asarray(shards.X), jnp.asarray(shards.y), jnp.asarray(shards.mask)
+    base = train_base_models(X, y, mask, k, **svm_kw)
+    agg_X, agg_y, agg_mask = X[:n_aggregators], y[:n_aggregators], mask[:n_aggregators]
+    coef, flat = gtl_step2_all(key, agg_X, agg_y, agg_mask, base, k, kappa, lam)
+    consensus = consensus_mean(flat)           # (n_agg, k, d+1) -> (k, d+1)
+    return GTLResult(base=base, sources=base, gtl_coef=coef, gtl_flat=flat,
+                     consensus_flat=consensus)
+
+
+# --------------------------------------------------------------- prediction
+
+
+def predict_linear(flat_coef, X):
+    """flat_coef: (k, d+1) flattened model -> decoded class labels."""
+    m = X.shape[0]
+    feats = jnp.concatenate([X, jnp.ones((m, 1), X.dtype)], axis=1)
+    return bl.decode_codewords(feats @ flat_coef.T)
+
+
+def predict_majority(flat_coefs, X, n_classes: int):
+    """flat_coefs: (L, k, d+1) -> majority vote over the L models."""
+    preds = jax.vmap(lambda c: predict_linear(c, X))(flat_coefs)
+    return majority_vote(preds, n_classes)

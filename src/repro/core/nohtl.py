@@ -1,0 +1,46 @@
+"""noHTL — the paper's baseline distributed procedure (Algorithm 2).
+
+The subset of GTL without the second (GreedyTL) training phase:
+
+  Step 0: local base learners (identical to GTL's Step 0).
+  Consensus variant (noHTL_mu): all models go to a single *models collector*,
+      which averages them and broadcasts the mean back (2k(s-1)d traffic).
+  Majority-voting variant (noHTL_mv): all models go to all locations and each
+      prediction is the most frequent class over the L models (ks(s-1)d
+      traffic).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import consensus_mean, majority_vote
+from repro.core.gtl import StackedLinear, train_base_models, predict_linear
+
+
+class NoHTLResult(NamedTuple):
+    base: StackedLinear        # h^(0) per location (possibly corrupted copies
+    sources: StackedLinear     # of what was actually exchanged)
+    consensus_flat: jax.Array  # (k, d+1) mean model (noHTL_mu)
+
+
+def run_nohtl(shards, k: int, svm_lam: float = 1e-4, svm_lr: float = 0.01,
+              svm_steps: int = 600, corrupt_fn=None) -> NoHTLResult:
+    X, y, mask = jnp.asarray(shards.X), jnp.asarray(shards.y), jnp.asarray(shards.mask)
+    base = train_base_models(X, y, mask, k, lam=svm_lam, lr=svm_lr,
+                             steps=svm_steps)
+    sources = corrupt_fn(base) if corrupt_fn is not None else base
+    consensus = consensus_mean(sources.augmented())  # (k, d+1)
+    return NoHTLResult(base=base, sources=sources, consensus_flat=consensus)
+
+
+def predict_consensus(result: NoHTLResult, X):
+    return predict_linear(result.consensus_flat, X)
+
+
+def predict_mv(result: NoHTLResult, X, n_classes: int):
+    aug = result.sources.augmented()  # (L, k, d+1)
+    preds = jax.vmap(lambda c: predict_linear(c, X))(aug)
+    return majority_vote(preds, n_classes)

@@ -1,0 +1,12 @@
+from repro.data.synth import (  # noqa: F401
+    SynthSpec,
+    HAPT_LIKE,
+    MNIST_HOG_LIKE,
+    make_dataset,
+)
+from repro.data.partition import (  # noqa: F401
+    partition_uniform,
+    partition_class_unbalanced,
+    partition_node_unbalanced,
+    LocationShards,
+)

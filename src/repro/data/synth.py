@@ -1,0 +1,93 @@
+"""Synthetic stand-ins for the paper's HAPT and MNIST-HOG datasets.
+
+The original files are not available offline, so we generate statistically
+matched Gaussian class-cluster data:
+
+- HAPT-like: d=561 features, k=12 classes (6 basic activities + 6 postural
+  transitions), skewed class pdf as in Fig. 1 of the paper (static/dynamic
+  postures far more frequent than transitions), 21 locations/users.
+- MNIST-HOG-like: d=324 HOG features, k=10 digits, 30 locations/users.
+
+Each class c draws x ~ N(mu_c, sigma^2 I) with ||mu_c - mu_c'|| controlled by
+`separation`, calibrated so a full-data ("Cloud") linear SVM reaches the
+paper's ~0.97-0.995 F-measure while small local shards underperform — the
+regime in which the paper's comparisons live.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class SynthSpec(NamedTuple):
+    name: str
+    n_features: int
+    n_classes: int
+    n_locations: int
+    n_samples: int
+    separation: float = 3.0
+    noise: float = 1.0
+    class_pdf: tuple | None = None  # skewed class frequencies (Fig. 1)
+
+
+# Class pdf shaped like the paper's Fig. 1: 6 frequent basic activities,
+# 6 rare postural transitions.
+_HAPT_PDF = tuple([0.14] * 6 + [0.0267] * 6)
+
+HAPT_LIKE = SynthSpec(
+    name="hapt",
+    n_features=561,
+    n_classes=12,
+    n_locations=21,
+    n_samples=10929,
+    separation=4.6,
+    noise=1.0,
+    class_pdf=_HAPT_PDF,
+)
+
+MNIST_HOG_LIKE = SynthSpec(
+    name="mnist_hog",
+    n_features=324,
+    n_classes=10,
+    n_locations=30,
+    n_samples=12000,
+    separation=4.2,
+    noise=1.0,
+    class_pdf=None,  # balanced by default; partitioners skew it
+)
+
+
+def make_dataset(key, spec: SynthSpec, n_samples: int | None = None,
+                 class_pdf=None):
+    """Returns (X (N, d) float32, y (N,) int32)."""
+    n = n_samples or spec.n_samples
+    pdf = class_pdf if class_pdf is not None else spec.class_pdf
+    k_mu, k_y, k_x = jax.random.split(key, 3)
+    mus = jax.random.normal(k_mu, (spec.n_classes, spec.n_features))
+    mus = mus / jnp.linalg.norm(mus, axis=1, keepdims=True) * spec.separation
+    if pdf is None:
+        p = jnp.ones((spec.n_classes,)) / spec.n_classes
+    else:
+        p = jnp.asarray(pdf)
+        p = p / p.sum()
+    y = jax.random.choice(k_y, spec.n_classes, shape=(n,), p=p)
+    x = mus[y] + spec.noise * jax.random.normal(k_x, (n, spec.n_features))
+    return x.astype(jnp.float32), y.astype(jnp.int32)
+
+
+def train_test_split(key, X, y, test_frac: float = 0.3):
+    """The paper's 70-30 hold-out (Section 6.1)."""
+    n = X.shape[0]
+    perm = jax.random.permutation(key, n)
+    n_test = int(round(n * test_frac))
+    test, train = perm[:n_test], perm[n_test:]
+    return (X[train], y[train]), (X[test], y[test])
+
+
+def numpy_class_pdf(y, k):
+    y = np.asarray(y)
+    counts = np.bincount(y, minlength=k).astype(np.float64)
+    return counts / counts.sum()

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_attention(q, k, v, *, causal=True, window=0, chunk=0):
+    """q/k/v: (B, H, S, hd) (GQA pre-expanded).  fp32 softmax, full mask."""
+    B, H, S, hd = q.shape
+    scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= kp > (qp - window)
+    if chunk:
+        mask &= (kp // chunk) == (qp // chunk)
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(v.dtype)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracles for the GreedyTL scoring kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def reference_gram(Z):
+    return (Z.astype(jnp.float32).T @ Z.astype(jnp.float32))
+
+
+def reference_scores(corr, diag, selected_mask, lam: float):
+    s = (corr.astype(jnp.float32) ** 2) / (diag.astype(jnp.float32) + lam)
+    s = jnp.where(selected_mask > 0, NEG_INF, s)
+    return s, jnp.argmax(s).astype(jnp.int32)

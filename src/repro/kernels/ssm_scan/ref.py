@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the chunked GLA scan kernel: the exact sequential
+recurrence from models/ssm.py."""
+from __future__ import annotations
+
+from repro.models.ssm import gla_scan_exact
+
+
+def reference_scan(q, k, v, ld, u=None):
+    """q/k/ld: (B, S, H, Dk), v: (B, S, H, Dv) (model layout).
+
+    Returns (y (B, S, H, Dv), final_state (B, H, Dk, Dv))."""
+    return gla_scan_exact(q, k, v, ld, u=u)

@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+Target: TPU v5e, 256 chips/pod (16x16), optionally 2 pods (512 chips).
+Importing this module never touches jax device state — meshes are built
+lazily by the functions below (the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import;
+see launch/dryrun.py)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(*, multi_pod: bool = False):
+    """Tiny mesh for CI-scale sharding tests (requires >= 8 host devices)."""
+    shape = (2, 2, 2) if multi_pod else (2, 2)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """Axes that shard the batch dimension."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def has_pod_axis(mesh) -> bool:
+    return "pod" in mesh.axis_names
+
+
+HW = {
+    # TPU v5e per-chip constants (see ROOFLINE ANALYSIS in EXPERIMENTS.md)
+    "peak_flops_bf16": 197e12,   # FLOP/s
+    "hbm_bw": 819e9,             # B/s
+    "ici_link_bw": 50e9,         # B/s per link
+    "hbm_bytes": 16 * 1024**3,   # 16 GB
+}

@@ -1,0 +1,61 @@
+"""Serving launcher: batched prefill-free decode demo with KV/SSM state.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6_7b --smoke \
+      --batch 4 --prompt-len 16 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--capacity", type=int, default=256)
+    args = ap.parse_args()
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.models import params as Pm
+    from repro.serving import greedy_generate, init_cache, make_serve_step
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    key = jax.random.PRNGKey(0)
+    params, _ = Pm.init_params(key, cfg)
+    B = args.batch
+
+    cache = init_cache(cfg, B, args.capacity, pos=0)
+    serve = jax.jit(make_serve_step(cfg))
+
+    # feed the prompt token by token (decode-path prefill)
+    shape = ((B, 1, cfg.num_codebooks) if cfg.num_codebooks > 1 else (B, 1))
+    tok = jnp.zeros(shape, jnp.int32)
+    t0 = time.time()
+    for i in range(args.prompt_len):
+        logits, cache = serve(params, cache, tok)
+        nxt = jnp.argmax(logits, axis=-1)
+        tok = (nxt[:, None] if nxt.ndim == 1 else nxt[:, None, :]).astype(jnp.int32)
+    prompt_s = time.time() - t0
+
+    t0 = time.time()
+    out = greedy_generate(cfg, params, cache, tok, args.gen)
+    out = jax.device_get(out)
+    gen_s = time.time() - t0
+    per_tok = gen_s / args.gen
+    print(f"arch={cfg.name} batch={B} prompt={args.prompt_len} "
+          f"gen={args.gen}")
+    print(f"prompt: {prompt_s:.2f}s; generate: {gen_s:.2f}s "
+          f"({per_tok*1e3:.1f} ms/token/batch, "
+          f"{B/per_tok:.1f} tok/s aggregate)")
+    print("sample tokens[0,:16]:", out[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

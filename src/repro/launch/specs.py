@@ -1,0 +1,170 @@
+"""input_specs(): weak-type-correct, shardable ShapeDtypeStruct stand-ins
+for every model input, per (architecture x input shape x mesh) — no device
+allocation, used by the dry-run and the roofline pass."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import InputShape
+from repro.launch.mesh import data_axes
+from repro.models.config import ModelConfig
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, P(*spec)))
+
+
+def _batch_spec(batch: int, mesh, exclude=()):
+    """Shard the batch dim over every data-ish axis that divides it."""
+    axes = []
+    rem = batch
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for a in data_axes(mesh):
+        if a not in exclude and rem % sizes[a] == 0:
+            axes.append(a)
+            rem //= sizes[a]
+    return tuple(axes) if axes else None
+
+
+def shape_variant(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Per-shape config adjustments.
+
+    long_500k requires sub-quadratic attention: architectures without a
+    native mechanism (pure full-attention dense/MoE/VLM/audio) run the
+    documented sliding-window VARIANT (window 8192); llama4's chunked-local
+    attention and the SSM/hybrid archs are natively sub-quadratic.
+    zamba2's shared attention also switches to the window for this shape.
+    (DESIGN.md §5; the base models are unchanged for all other shapes.)"""
+    if shape.name != "long_500k":
+        return cfg
+    if cfg.block_kind == "rwkv6" or cfg.chunked_attention:
+        return cfg
+    return cfg.replace(sliding_window=8192)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh, *,
+                n_pods: int = 0) -> dict:
+    """Returns the kwargs pytree for the step function being lowered.
+
+    n_pods > 0: training inputs get a leading pod axis (cross-pod GTL mode).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    # pod-replica mode: the leading axis takes "pod"; the per-pod batch dim
+    # may only shard over the remaining data axes
+    bspec = _batch_spec(B if not n_pods else B // n_pods, mesh,
+                        exclude=("pod",) if n_pods else ())
+    tok_dtype = jnp.int32
+
+    def tokens_struct(batch, seq):
+        if cfg.num_codebooks > 1:
+            sh, spec = (batch, seq, cfg.num_codebooks), (bspec, None, None)
+        else:
+            sh, spec = (batch, seq), (bspec, None)
+        if n_pods:
+            sh, spec = (n_pods,) + sh, ("pod",) + spec
+        return _sds(sh, tok_dtype, mesh, spec)
+
+    if shape.kind in ("train", "prefill"):
+        per_pod_b = B // n_pods if n_pods else B
+        n_text = S - (cfg.n_patches or 0)
+        batch = {
+            "tokens": tokens_struct(per_pod_b, n_text),
+            "labels": tokens_struct(per_pod_b, n_text),
+        }
+        if cfg.frontend == "vision":
+            sh = (per_pod_b, cfg.n_patches, cfg.d_model)
+            spec = (bspec, None, None)
+            if n_pods:
+                sh, spec = (n_pods,) + sh, ("pod",) + spec
+            batch["patch_embeds"] = _sds(sh, jnp.dtype(cfg.dtype), mesh, spec)
+        return batch
+
+    # decode: one new token against a cache holding seq_len-1 tokens
+    assert not n_pods, "decode shapes lower without the pod-replica axis"
+    from repro.serving.kvcache import init_cache
+
+    cache_shapes = jax.eval_shape(
+        lambda: init_cache(cfg, B, S, pos=S - 1))
+    cache = attach_cache_shardings(cfg, cache_shapes, mesh, bspec)
+    return {
+        "tokens": tokens_struct(B, 1),
+        "cache": cache,
+    }
+
+
+def attach_cache_shardings(cfg: ModelConfig, cache_avals, mesh, bspec):
+    """Decode-state shardings: batch dim over data axes when divisible,
+    else heads/length over the model axis (long_500k's batch=1 case)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_ok = "model" in sizes
+
+    def one(path_hint, a):
+        sh = a.shape
+        spec = [None] * len(sh)
+        # find the batch dim: kv caches are (L, B, T, KV, hd); ssm states
+        # (L, B, H, N, hd) / (G, per, B, ...); shift states (L, B, D); all
+        # have B right after the stacking dims.  We detect it positionally:
+        n_stack = 2 if (cfg.block_kind == "hybrid"
+                        and len(sh) >= 3 and path_hint != "shared") else 1
+        bdim = n_stack if len(sh) > n_stack else None
+        if bdim is not None and bspec:
+            ok = True
+            rem = sh[bdim]
+            for ax in (bspec if isinstance(bspec, tuple) else (bspec,)):
+                ok &= rem % sizes[ax] == 0
+                rem //= max(1, sizes[ax])
+            if ok:
+                spec[bdim] = bspec
+                return NamedSharding(mesh, P(*spec))
+        # fall back: shard the largest remaining dim on the model axis
+        if model_ok:
+            cand = sorted(range(len(sh)), key=lambda i: -sh[i])
+            for i in cand:
+                if i != bdim and sh[i] % sizes["model"] == 0 and sh[i] >= sizes["model"]:
+                    spec[i] = "model"
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    def rec(tree, hint=""):
+        if isinstance(tree, dict):
+            return {k: rec(v, k) for k, v in tree.items()}
+        if hasattr(tree, "shape"):
+            if tree.ndim == 0:  # pos scalar
+                return jax.ShapeDtypeStruct(tree.shape, tree.dtype,
+                                            sharding=NamedSharding(mesh, P()))
+            return jax.ShapeDtypeStruct(tree.shape, tree.dtype,
+                                        sharding=one(hint, tree))
+        return tree
+
+    return rec(cache_avals)
+
+
+def abstract_sharded_params(cfg: ModelConfig, mesh, *, n_pods: int = 0,
+                            rules=None):
+    """Abstract (no-allocation) parameter pytree with NamedShardings."""
+    from repro.models import params as Pm
+
+    box = {}
+
+    def build(k):
+        p, ax = Pm.init_params(k, cfg)
+        box["axes"] = ax  # static metadata captured during abstract trace
+        return p
+
+    avals = jax.eval_shape(build, jax.random.PRNGKey(0))
+    axes = box["axes"]
+    if n_pods:
+        avals = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct((n_pods,) + a.shape, a.dtype),
+            avals)
+        shardings = Pm.param_shardings(avals, axes, mesh, rules=rules,
+                                       extra_leading=("pod",))
+    else:
+        shardings = Pm.param_shardings(avals, axes, mesh, rules=rules)
+    structs = jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        avals, shardings)
+    return structs, axes

@@ -1,0 +1,96 @@
+"""Mixture-of-Experts FFN: top-k token-choice routing with capacity-based
+dropping, implemented as grouped dispatch/combine einsums.
+
+Why dispatch-einsum (and not sort/scatter): the dispatch tensor formulation
+is fully static-shaped, differentiable, and lowers cleanly under GSPMD on any
+mesh (scatter/gather routing tends to force replication of the token tensor
+when experts are sharded).  Its FLOP/memory overhead is bounded by the token
+*group* size: dispatch cost / expert-FFN cost = group_size * capacity_factor
+/ (6 * d_ff * topk) — e.g. ~1% for llama4-scout (d_ff 8192, group 512) and
+~14% for qwen3-moe's fine-grained experts (d_ff 768, group 256).  Group size
+is a config knob (`moe_group_size`) and a §Perf lever.
+
+Expert weights carry an `experts` leading axis, sharded over the `model`
+mesh axis (expert parallelism); the dispatch einsum then induces the
+all-to-all-like collective pattern across expert shards.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def router_topk(logits, k: int):
+    """logits: (..., E) -> (gates (..., k), idx (..., k)).  Softmax over the
+    selected experts (llama4 uses sigmoid on top-1; qwen3 softmax-normalises
+    the top-k — we use top-k softmax renormalisation for both, noting the
+    llama4 deviation is a scalar reparameterisation of the same gate)."""
+    top_logits, idx = jax.lax.top_k(logits, k)
+    gates = jax.nn.softmax(top_logits, axis=-1)
+    return gates, idx
+
+
+def load_balance_loss(probs, idx, n_experts: int):
+    """Switch-style auxiliary load-balance loss.
+
+    probs: (T, E) full softmax router probabilities; idx: (T, k) selections.
+    """
+    T = probs.shape[0]
+    sel = jax.nn.one_hot(idx, n_experts).sum(axis=1)  # (T, E)
+    frac_tokens = sel.mean(axis=0)                    # fraction routed to e
+    frac_probs = probs.mean(axis=0)
+    return n_experts * jnp.sum(frac_tokens * frac_probs)
+
+
+def moe_ffn(p, x, cfg: ModelConfig):
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar).
+
+    p: {"router": (D, E), "w_gate": (E, D, F), "w_up": (E, D, F),
+        "w_down": (E, F, D)}
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.n_experts_per_token
+    T = B * S
+    G = max(1, min(cfg.moe_group_size, T))
+    while T % G:
+        G -= 1  # group size must divide the token count
+    n_groups = T // G
+    cap = int(max(1, round(G * K * cfg.moe_capacity_factor / E)))
+
+    xt = x.reshape(n_groups, G, D)
+    router_logits = (xt.astype(jnp.float32)
+                     @ p["router"].astype(jnp.float32))  # (n, G, E)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gates, idx = router_topk(router_logits, K)           # (n, G, K)
+
+    aux = load_balance_loss(probs.reshape(T, E), idx.reshape(T, K), E)
+
+    # Position of each (token, choice) within its expert's capacity buffer,
+    # choice-priority ordering (all 1st choices ranked before 2nd choices).
+    # Built one choice at a time so the transient is (n, G, E, C), never the
+    # K-expanded (n, G, K, E, C).
+    cdt = jnp.bfloat16 if x.dtype == jnp.bfloat16 else jnp.float32
+    dispatch = jnp.zeros((n_groups, G, E, cap), cdt)
+    combine = jnp.zeros((n_groups, G, E, cap), cdt)
+    counts = jnp.zeros((n_groups, 1, E), jnp.float32)
+    for j in range(K):
+        oh = jax.nn.one_hot(idx[..., j], E, dtype=jnp.float32)  # (n, G, E)
+        pos = jnp.cumsum(oh, axis=1) - oh + counts
+        keep = (pos < cap) & (oh > 0)
+        pos_oh = (jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=cdt)
+                  * keep[..., None].astype(cdt))                # (n, G, E, C)
+        dispatch = dispatch + pos_oh
+        combine = combine + pos_oh * gates[..., j, None, None].astype(cdt)
+        counts = counts + oh.sum(axis=1, keepdims=True)
+
+    xin = jnp.einsum("ngec,ngd->necd", dispatch, xt.astype(cdt))
+    xin = xin.astype(x.dtype)                             # (n, E, C, D)
+
+    gate = jax.nn.silu(jnp.einsum("necd,edf->necf", xin, p["w_gate"]))
+    up = jnp.einsum("necd,edf->necf", xin, p["w_up"])
+    out_e = jnp.einsum("necf,efd->necd", gate * up, p["w_down"])
+
+    out = jnp.einsum("ngec,necd->ngd", combine.astype(out_e.dtype), out_e)
+    return out.reshape(B, S, D).astype(x.dtype), aux * cfg.router_aux_loss

@@ -1,0 +1,309 @@
+"""Parameter initialization + logical-axis sharding rules.
+
+Every parameter tensor carries a tuple of *logical axis names* parallel to
+its shape.  `resolve_specs` maps logical names to mesh axes (MaxText-style
+logical->physical rules) with a divisibility fallback: a dim is sharded on
+its mesh axis only if evenly divisible, otherwise replicated.  This is what
+lets e.g. llama4's 40 heads (not divisible by a 16-way model axis) fall back
+gracefully while its 8192 d_ff shards.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+# logical axis -> preferred mesh axis (the tensor-parallel axis is "model")
+DEFAULT_RULES = {
+    "vocab": "model",
+    "mlp": "model",
+    "heads": "model",
+    "kv": "model",
+    "experts": "model",
+    "inner": "model",   # mamba d_inner / rwkv head dim blocks
+    "embed": None,      # keep activations' contracting dim replicated
+    "layers": None,
+    "groups": None,
+    None: None,
+}
+
+
+def logical(*names):
+    return tuple(names)
+
+
+def resolve_specs(logical_tree, shape_tree, mesh, rules=None,
+                  extra_leading=()):
+    """Map a pytree of logical-name tuples to NamedShardings.
+
+    extra_leading: mesh axes prepended for stacked leading dims (e.g.
+    ("pod",) for per-pod parameter replicas).
+    """
+    rules = {**DEFAULT_RULES, **(rules or {})}
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(names, shape):
+        spec = list(extra_leading)
+        for name, dim in zip(names[len(extra_leading):],
+                             shape[len(extra_leading):]):
+            mesh_axis = rules.get(name)
+            if mesh_axis is not None and mesh_axis in axis_sizes \
+                    and dim % axis_sizes[mesh_axis] == 0 \
+                    and mesh_axis not in spec:
+                spec.append(mesh_axis)
+            else:
+                spec.append(None)
+        return jax.sharding.NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, logical_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ------------------------------------------------------------ initializers
+
+
+def _normal(key, shape, dtype, scale):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+class ParamBuilder:
+    """Collects (array, logical-axes) pairs under nested dict paths."""
+
+    def __init__(self, key, dtype):
+        self.key = key
+        self.dtype = dtype
+        self.params = {}
+        self.axes = {}
+
+    def _next(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def add(self, path, shape, axes, scale=None, init=None):
+        d = self.params
+        a = self.axes
+        parts = path.split(".")
+        for s in parts[:-1]:
+            d = d.setdefault(s, {})
+            a = a.setdefault(s, {})
+        if init is not None:
+            arr = init.astype(self.dtype) if hasattr(init, "astype") else init
+        else:
+            scale = 0.02 if scale is None else scale
+            arr = _normal(self._next(), shape, self.dtype, scale)
+        d[parts[-1]] = arr
+        a[parts[-1]] = axes
+        return arr
+
+
+def _attn_params(b: ParamBuilder, cfg: ModelConfig, prefix: str):
+    D, hd = cfg.d_model, cfg.head_dim
+    qd, kvd = cfg.q_dim, cfg.kv_dim
+    scale = 1.0 / math.sqrt(D)
+    b.add(f"{prefix}.wq", (D, qd), logical("embed", "heads"), scale)
+    b.add(f"{prefix}.wk", (D, kvd), logical("embed", "kv"), scale)
+    b.add(f"{prefix}.wv", (D, kvd), logical("embed", "kv"), scale)
+    b.add(f"{prefix}.wo", (qd, D), logical("heads", "embed"),
+          scale / math.sqrt(2 * cfg.n_layers))
+    if cfg.qkv_bias:
+        b.add(f"{prefix}.bq", (qd,), logical("heads"), 0.0,
+              init=jnp.zeros((qd,), b.dtype))
+        b.add(f"{prefix}.bk", (kvd,), logical("kv"), 0.0,
+              init=jnp.zeros((kvd,), b.dtype))
+        b.add(f"{prefix}.bv", (kvd,), logical("kv"), 0.0,
+              init=jnp.zeros((kvd,), b.dtype))
+    if cfg.qk_norm:
+        b.add(f"{prefix}.q_norm", (hd,), logical(None), 0.0,
+              init=jnp.ones((hd,), b.dtype))
+        b.add(f"{prefix}.k_norm", (hd,), logical(None), 0.0,
+              init=jnp.ones((hd,), b.dtype))
+
+
+def _mlp_params(b: ParamBuilder, cfg: ModelConfig, prefix: str):
+    D, F = cfg.d_model, cfg.d_ff
+    scale = 1.0 / math.sqrt(D)
+    b.add(f"{prefix}.w_gate", (D, F), logical("embed", "mlp"), scale)
+    b.add(f"{prefix}.w_up", (D, F), logical("embed", "mlp"), scale)
+    b.add(f"{prefix}.w_down", (F, D), logical("mlp", "embed"),
+          1.0 / math.sqrt(F) / math.sqrt(2 * cfg.n_layers))
+
+
+def _moe_params(b: ParamBuilder, cfg: ModelConfig, prefix: str):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    scale = 1.0 / math.sqrt(D)
+    b.add(f"{prefix}.router", (D, E), logical("embed", None), scale)
+    b.add(f"{prefix}.w_gate", (E, D, F), logical("experts", "embed", "mlp"),
+          scale)
+    b.add(f"{prefix}.w_up", (E, D, F), logical("experts", "embed", "mlp"),
+          scale)
+    b.add(f"{prefix}.w_down", (E, F, D), logical("experts", "mlp", "embed"),
+          1.0 / math.sqrt(F) / math.sqrt(2 * cfg.n_layers))
+
+
+def _norm(b: ParamBuilder, path: str, dim: int):
+    b.add(path, (dim,), logical("embed"), 0.0,
+          init=jnp.ones((dim,), b.dtype))
+
+
+def _mamba_params(b: ParamBuilder, cfg: ModelConfig, prefix: str):
+    D, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state_dim, cfg.ssm_heads
+    W = cfg.ssm_conv_width
+    scale = 1.0 / math.sqrt(D)
+    b.add(f"{prefix}.w_z", (D, di), logical("embed", "inner"), scale)
+    b.add(f"{prefix}.w_x", (D, di), logical("embed", "inner"), scale)
+    b.add(f"{prefix}.w_B", (D, N), logical("embed", None), scale)
+    b.add(f"{prefix}.w_C", (D, N), logical("embed", None), scale)
+    b.add(f"{prefix}.w_dt", (D, H), logical("embed", "inner"), scale)
+    b.add(f"{prefix}.conv_w", (W, di + 2 * N), logical(None, None),
+          1.0 / math.sqrt(W))
+    # dt bias: softplus^-1 of dt in [1e-3, 1e-1] (mamba2 reference init)
+    key = b._next()
+    dt = jnp.exp(jax.random.uniform(key, (H,), jnp.float32,
+                                    math.log(1e-3), math.log(1e-1)))
+    b.add(f"{prefix}.dt_bias", (H,), logical("inner"), 0.0,
+          init=(dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32))
+    a_init = jnp.log(jax.random.uniform(b._next(), (H,), jnp.float32, 1., 16.))
+    b.add(f"{prefix}.A_log", (H,), logical("inner"), 0.0,
+          init=a_init.astype(jnp.float32))
+    b.add(f"{prefix}.D_skip", (H,), logical("inner"), 0.0,
+          init=jnp.ones((H,), jnp.float32))
+    b.add(f"{prefix}.norm_g", (di,), logical("inner"), 0.0,
+          init=jnp.ones((di,), b.dtype))
+    b.add(f"{prefix}.out_proj", (di, D), logical("inner", "embed"),
+          1.0 / math.sqrt(di) / math.sqrt(2 * cfg.n_layers))
+
+
+def _rwkv_params(b: ParamBuilder, cfg: ModelConfig, prefix: str):
+    D, F = cfg.d_model, cfg.d_ff
+    hd = cfg.ssm_head_dim
+    H = D // hd
+    lora = 64
+    scale = 1.0 / math.sqrt(D)
+    for nm in ("r", "k", "v", "g", "w"):
+        b.add(f"{prefix}.mu_{nm}", (D,), logical("embed"), 0.0,
+              init=jnp.full((D,), 0.5, b.dtype))
+    for nm in ("r", "k", "v", "g"):
+        b.add(f"{prefix}.w_{nm}", (D, D), logical("embed", "heads"), scale)
+    b.add(f"{prefix}.w_o", (D, D), logical("heads", "embed"),
+          scale / math.sqrt(2 * cfg.n_layers))
+    b.add(f"{prefix}.w_lora_a", (D, lora), logical("embed", None), scale)
+    b.add(f"{prefix}.w_lora_b", (lora, D), logical(None, "heads"),
+          1.0 / math.sqrt(lora))
+    w0 = jnp.linspace(-6.0, -0.5, D).astype(jnp.float32)
+    b.add(f"{prefix}.w0", (D,), logical("heads"), 0.0, init=w0)
+    b.add(f"{prefix}.u", (D,), logical("heads"), 0.0,
+          init=jnp.full((D,), 0.5, jnp.float32))
+    b.add(f"{prefix}.ln_w", (D,), logical("heads"), 0.0,
+          init=jnp.ones((D,), b.dtype))
+    b.add(f"{prefix}.ln_b", (D,), logical("heads"), 0.0,
+          init=jnp.zeros((D,), b.dtype))
+    # channel-mix
+    b.add(f"{prefix}.cm.mu_k", (D,), logical("embed"), 0.0,
+          init=jnp.full((D,), 0.5, b.dtype))
+    b.add(f"{prefix}.cm.mu_r", (D,), logical("embed"), 0.0,
+          init=jnp.full((D,), 0.5, b.dtype))
+    b.add(f"{prefix}.cm.w_kk", (D, F), logical("embed", "mlp"), scale)
+    b.add(f"{prefix}.cm.w_vv", (F, D), logical("mlp", "embed"),
+          1.0 / math.sqrt(F) / math.sqrt(2 * cfg.n_layers))
+    b.add(f"{prefix}.cm.w_rr", (D, D), logical("embed", "heads"), scale)
+
+
+def _layer_params(b: ParamBuilder, cfg: ModelConfig, prefix: str):
+    D = cfg.d_model
+    if cfg.block_kind == "attention":
+        _norm(b, f"{prefix}.ln1", D)
+        _attn_params(b, cfg, f"{prefix}.attn")
+        _norm(b, f"{prefix}.ln2", D)
+        if cfg.is_moe:
+            _moe_params(b, cfg, f"{prefix}.moe")
+        else:
+            _mlp_params(b, cfg, f"{prefix}.mlp")
+    elif cfg.block_kind == "rwkv6":
+        _norm(b, f"{prefix}.ln1", D)
+        _rwkv_params(b, cfg, f"{prefix}.rwkv")
+        _norm(b, f"{prefix}.ln2", D)
+    elif cfg.block_kind in ("mamba2", "hybrid"):
+        _norm(b, f"{prefix}.ln1", D)
+        _mamba_params(b, cfg, f"{prefix}.mamba")
+    else:
+        raise ValueError(cfg.block_kind)
+
+
+def _stack_layers(trees):
+    """List of per-layer param dicts -> stacked leaves with leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(key, cfg: ModelConfig):
+    """Returns (params, logical_axes) pytrees (layer leaves stacked)."""
+    dtype = jnp.dtype(cfg.dtype)
+    b = ParamBuilder(key, dtype)
+    D, V = cfg.d_model, cfg.vocab_size
+
+    # embeddings
+    emb_scale = 0.02  # small init: RMSNorm rescales inputs, and tied
+    # embeddings reuse this matrix as the output head (logit magnitude
+    # ~ |h| * emb_scale * sqrt(D) stays O(1))
+    if cfg.num_codebooks > 1:
+        b.add("embed.tok", (cfg.num_codebooks, V, D),
+              logical(None, "vocab", "embed"), emb_scale)
+        b.add("lm_head", (cfg.num_codebooks, D, V),
+              logical(None, "embed", "vocab"), 1.0 / math.sqrt(D))
+    else:
+        b.add("embed.tok", (V, D), logical("vocab", "embed"), emb_scale)
+        if not cfg.tie_embeddings:
+            b.add("lm_head", (D, V), logical("embed", "vocab"),
+                  1.0 / math.sqrt(D))
+    _norm(b, "final_norm", D)
+
+    # layers (stacked for scan); hybrid uses (groups, per_group, ...)
+    layers = []
+    layer_axes = None
+    for i in range(cfg.n_layers):
+        lb = ParamBuilder(jax.random.fold_in(b.key, i), dtype)
+        _layer_params(lb, cfg, "L")
+        layers.append(lb.params["L"])
+        layer_axes = lb.axes["L"]
+    stacked = _stack_layers(layers)
+
+    if cfg.block_kind == "hybrid" and cfg.hybrid_attn_every:
+        G = cfg.n_layers // cfg.hybrid_attn_every
+        stacked = jax.tree.map(
+            lambda a: a.reshape((G, cfg.hybrid_attn_every) + a.shape[1:]),
+            stacked)
+        layer_axes = jax.tree.map(lambda t: ("groups", "layers") + t,
+                                  layer_axes, is_leaf=lambda x: isinstance(x, tuple))
+        # shared attention block (one copy, applied after every group)
+        sb = ParamBuilder(jax.random.fold_in(b.key, 10_000), dtype)
+        _norm(sb, "S.ln1", D)
+        _attn_params(sb, cfg, "S.attn")
+        _norm(sb, "S.ln2", D)
+        _mlp_params(sb, cfg, "S.mlp")
+        b.params["shared"] = sb.params["S"]
+        b.axes["shared"] = sb.axes["S"]
+    else:
+        layer_axes = jax.tree.map(lambda t: ("layers",) + t, layer_axes,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+
+    b.params["layers"] = stacked
+    b.axes["layers"] = layer_axes
+    return b.params, b.axes
+
+
+def param_shardings(params, axes, mesh, rules=None, extra_leading=()):
+    shapes = jax.tree.map(lambda a: a.shape, params)
+    return resolve_specs(axes, shapes, mesh, rules, extra_leading)
+
+
+def abstract_params(cfg: ModelConfig, key=None):
+    """ShapeDtypeStructs for the full parameter pytree (no allocation)."""
+    fn = lambda k: init_params(k, cfg)[0]
+    return jax.eval_shape(fn, jax.random.PRNGKey(0))
+
+
+def count_params(params) -> int:
+    return sum(int(jnp.size(a)) for a in jax.tree.leaves(params))

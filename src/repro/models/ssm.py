@@ -1,0 +1,266 @@
+"""Recurrent mixers: Mamba2 (SSD) and RWKV6 (Finch), both expressed over one
+generalized *gated linear attention* (GLA) chunked scan:
+
+    s_t = diag(exp(ld_t)) s_{t-1} + k_t v_t^T          state: (Dk, Dv) per head
+    y_t = q_t . s_t                                     (Mamba2 read)
+    y_t = q_t . s_{t-1} + (q_t . (u o k_t)) v_t         (RWKV6 read, u = bonus)
+
+Mamba2 is the special case of a per-head *scalar* decay (ld broadcast over
+Dk = state dim N, k = B, v = dt*x, q = C); RWKV6 uses a per-channel
+data-dependent decay (Dk = head dim).  Training uses a chunked formulation —
+quadratic within a chunk, state carry between chunks — which is also the
+algorithm of the Pallas kernel in repro.kernels.ssm_scan; decode is the O(1)
+single-token recurrence.
+
+Numerics: within-chunk pairwise decays are computed as
+(q_i * exp(cum_i)) . (k_j * exp(-cum_j)), with cum clamped at -30 per chunk;
+exact for moderate decays, and validated against the exact sequential scan
+in tests/test_ssm.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+_CLAMP = -30.0
+
+
+def gla_scan_exact(q, k, v, log_decay, u=None, state=None):
+    """Exact sequential reference.  q/k/ld: (B,S,H,Dk), v: (B,S,H,Dv)."""
+    B, S, H, Dk = q.shape
+    Dv = v.shape[-1]
+    if state is None:
+        state = jnp.zeros((B, H, Dk, Dv), jnp.float32)
+
+    def step(s, inp):
+        qt, kt, vt, ldt = inp  # (B,H,Dk/Dv)
+        if u is None:
+            s = s * jnp.exp(ldt)[..., None] + kt[..., None] * vt[..., None, :]
+            y = jnp.einsum("bhk,bhkv->bhv", qt, s)
+        else:
+            y = jnp.einsum("bhk,bhkv->bhv", qt, s)
+            y = y + jnp.einsum("bhk,bhk->bh", qt * u, kt)[..., None] * vt
+            s = s * jnp.exp(ldt)[..., None] + kt[..., None] * vt[..., None, :]
+        return s, y
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (q, k, v, log_decay))
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state  # (B,S,H,Dv), (B,H,Dk,Dv)
+
+
+def gla_chunked(q, k, v, log_decay, u=None, state=None, chunk: int = 16,
+                use_pallas: bool = False):
+    """Chunked GLA scan.  Returns (y (B,S,H,Dv), final_state (B,H,Dk,Dv)).
+
+    Numerically stable for *any* decay strength: within a chunk the pairwise
+    weights exp(cum_i - cum_j) (j <= i) are computed directly — the exponent
+    is always <= 0, so nothing can overflow; cross-chunk factors exp(cum_i)
+    and exp(total - cum_j) are likewise <= 0-exponent terms (underflow to 0
+    is the mathematically correct limit).  The single-level qd = q*exp(cum),
+    kd = k*exp(-cum) factorization used by some GLA implementations breaks
+    down when |cum| exceeds ~40 in fp32; see tests/test_ssm.py."""
+    if use_pallas:
+        from repro.kernels.ssm_scan import ops as ssm_ops
+
+        return ssm_ops.ssm_scan(q, k, v, log_decay, u=u, state=state,
+                                chunk=max(chunk, 64))
+    B, S, H, Dk = q.shape
+    Dv = v.shape[-1]
+    C = min(chunk, S)
+    while S % C:
+        C -= 1
+    n = S // C
+    f32 = jnp.float32
+
+    def to_chunks(a):
+        return a.astype(f32).reshape(B, n, C, H, -1).transpose(1, 0, 2, 3, 4)
+
+    qc, kc, vc, ldc = map(to_chunks, (q, k, v, log_decay))
+    if state is None:
+        state = jnp.zeros((B, H, Dk, Dv), f32)
+
+    causal = jnp.tril(jnp.ones((C, C), bool), 0 if u is None else -1)
+
+    def body(s, inp):
+        qi, ki, vi, ldi = inp  # (B,C,H,*)
+        cum = jnp.cumsum(ldi, axis=1)                    # inclusive
+        # bonus (RWKV) reads s_{t-1}: query-side decay excludes step t
+        cum_q = cum - ldi if u is not None else cum
+        # intra-chunk: direct pairwise decay, exponent <= 0 always
+        diff = cum_q[:, :, None] - cum[:, None, :]       # (B,C,C,H,Dk)
+        diff = jnp.where(causal[None, :, :, None, None], diff, -jnp.inf)
+        A = jnp.einsum("bihk,bjhk,bijhk->bhij", qi, ki, jnp.exp(diff))
+        y = jnp.einsum("bhij,bjhv->bihv", A, vi)
+        # inter-chunk: read the carried state (exp(cum_q) <= 1)
+        y = y + jnp.einsum("bihk,bhkv->bihv", qi * jnp.exp(cum_q), s)
+        if u is not None:
+            y = y + jnp.einsum("bihk,bihk->bih", qi * u, ki)[..., None] * vi
+        total = cum[:, -1]                               # (B,H,Dk)
+        k_carry = ki * jnp.exp(total[:, None] - cum)     # exponent <= 0
+        s = (s * jnp.exp(total)[..., None]
+             + jnp.einsum("bihk,bihv->bhkv", k_carry, vi))
+        return s, y
+
+    state, ys = jax.lax.scan(body, state, (qc, kc, vc, ldc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, Dv)
+    return y.astype(v.dtype), state
+
+
+def gla_decode_step(state, q, k, v, log_decay, u=None):
+    """One-token recurrence.  q/k/ld: (B,H,Dk), v: (B,H,Dv);
+    state: (B,H,Dk,Dv).  Returns (y (B,H,Dv), new_state)."""
+    f32 = jnp.float32
+    q, k, v, ld = (a.astype(f32) for a in (q, k, v, log_decay))
+    if u is None:
+        state = (state * jnp.exp(ld)[..., None]
+                 + k[..., None] * v[..., None, :])
+        y = jnp.einsum("bhk,bhkv->bhv", q, state)
+    else:
+        y = jnp.einsum("bhk,bhkv->bhv", q, state)
+        y = y + jnp.einsum("bhk,bhk->bh", q * u, k)[..., None] * v
+        state = (state * jnp.exp(ld)[..., None]
+                 + k[..., None] * v[..., None, :])
+    return y.astype(v.dtype), state
+
+
+# ------------------------------------------------------------------ conv
+
+
+def causal_conv1d(x, w, conv_state=None):
+    """Depthwise causal conv.  x: (B, S, D), w: (W, D).
+
+    conv_state: (B, W-1, D) trailing inputs from the previous call (decode);
+    returns (y, new_conv_state).
+    """
+    W = w.shape[0]
+    B, S, D = x.shape
+    if conv_state is None:
+        conv_state = jnp.zeros((B, W - 1, D), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)  # (B, S+W-1, D)
+    y = sum(xp[:, i:i + S] * w[i] for i in range(W))
+    return y.astype(x.dtype), xp[:, -(W - 1):]
+
+
+# ----------------------------------------------------------------- Mamba2
+
+
+def mamba2_block(p, x, cfg: ModelConfig, state=None, use_pallas=False):
+    """Mamba2 (SSD) mixer.  state: None (training) or
+    {"ssm": (B,H,N,hd), "conv": (B,W-1,d_conv)}; returns (out, new_state)."""
+    B, S, D = x.shape
+    di, N, hd = cfg.d_inner, cfg.ssm_state_dim, cfg.ssm_head_dim
+    H = cfg.ssm_heads
+    # separate projections (instead of one fused in_proj) so each output dim
+    # carries a clean logical sharding axis
+    z = x @ p["w_z"]            # (B,S,di)
+    xbc = jnp.concatenate(
+        [x @ p["w_x"], x @ p["w_B"], x @ p["w_C"]], axis=-1)
+    dt = x @ p["w_dt"]          # (B,S,H)
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = causal_conv1d(xbc, p["conv_w"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)
+    xs = xs.reshape(B, S, H, hd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    ld = (-jnp.exp(p["A_log"].astype(jnp.float32)) * dt)      # (B,S,H) <= 0
+    ld = jnp.broadcast_to(ld[..., None], (B, S, H, N))
+    k = jnp.broadcast_to(Bm[:, :, None, :], (B, S, H, N))
+    q = jnp.broadcast_to(Cm[:, :, None, :], (B, S, H, N))
+    v = xs * dt[..., None].astype(xs.dtype)
+
+    d_skip = p["D_skip"].astype(xs.dtype)[None, None, :, None]
+    if state is None:
+        y, new_ssm = gla_chunked(q, k, v, ld, use_pallas=use_pallas)
+        y = y.astype(xs.dtype) + xs * d_skip
+    else:
+        yt, new_ssm = gla_decode_step(state["ssm"], q[:, 0], k[:, 0],
+                                      v[:, 0], ld[:, 0])
+        y = yt[:, None].astype(xs.dtype) + xs * d_skip
+
+    y = y.reshape(B, S, di)
+    y = rms_norm_gated(y, z, p["norm_g"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    new_state = None if state is None else {"ssm": new_ssm, "conv": new_conv}
+    return out, new_state
+
+
+def rms_norm_gated(y, z, g, eps):
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    return ((y.astype(jnp.float32) * jax.lax.rsqrt(var + eps))
+            * g.astype(jnp.float32)).astype(y.dtype)
+
+
+# ------------------------------------------------------------------ RWKV6
+
+
+def token_shift(x, shift_state=None):
+    """xx_t = x_{t-1} (zeros / carried state at t=0).  x: (B,S,D)."""
+    if shift_state is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = shift_state[:, None] if shift_state.ndim == 2 else shift_state
+    xx = jnp.concatenate([prev, x[:, :-1]], axis=1)
+    return xx, x[:, -1]  # new shift state = last token
+
+
+def rwkv6_timemix(p, x, cfg: ModelConfig, state=None, use_pallas=False):
+    """RWKV6 time-mix with data-dependent decay (Finch, arXiv:2404.05892).
+
+    state: None or {"shift": (B,D), "wkv": (B,H,hd,hd)}.
+    """
+    B, S, D = x.shape
+    hd = cfg.ssm_head_dim
+    H = D // hd
+    xx, new_shift = token_shift(x, None if state is None else state["shift"])
+    dx = xx - x
+
+    def mixed(name):
+        return x + dx * p[f"mu_{name}"]
+
+    r = mixed("r") @ p["w_r"]
+    k = mixed("k") @ p["w_k"]
+    v = mixed("v") @ p["w_v"]
+    g = jax.nn.silu(mixed("g") @ p["w_g"])
+    # data-dependent decay (low-rank): w = exp(-exp(w0 + tanh(x A) B))
+    wx = jnp.tanh(mixed("w") @ p["w_lora_a"]) @ p["w_lora_b"]
+    ld = -jnp.exp(jnp.clip(p["w0"].astype(jnp.float32)
+                           + wx.astype(jnp.float32), -8.0, 4.0))  # (B,S,D)
+
+    rh = r.reshape(B, S, H, hd)
+    kh = k.reshape(B, S, H, hd)
+    vh = v.reshape(B, S, H, hd)
+    ldh = ld.reshape(B, S, H, hd)
+    u = p["u"].reshape(H, hd)
+
+    if state is None:
+        y, new_wkv = gla_chunked(rh, kh, vh, ldh, u=u, use_pallas=use_pallas)
+    else:
+        yt, new_wkv = gla_decode_step(state["wkv"], rh[:, 0], kh[:, 0],
+                                      vh[:, 0], ldh[:, 0], u=u)
+        y = yt[:, None]
+
+    # per-head group norm, then output gate
+    y = y.reshape(B, S, H, hd)
+    mean = y.astype(jnp.float32).mean(-1, keepdims=True)
+    var = y.astype(jnp.float32).var(-1, keepdims=True)
+    y = (y.astype(jnp.float32) - mean) * jax.lax.rsqrt(var + 64e-5)
+    y = (y.reshape(B, S, D) * p["ln_w"].astype(jnp.float32)
+         + p["ln_b"].astype(jnp.float32)).astype(x.dtype)
+    out = (y * g) @ p["w_o"]
+    new_state = None if state is None else {"shift": new_shift, "wkv": new_wkv}
+    return out, new_state
+
+
+def rwkv6_channelmix(p, x, cfg: ModelConfig, state=None):
+    """RWKV6 channel-mix (squared-ReLU MLP with token shift)."""
+    xx, new_shift = token_shift(x, state)
+    dx = xx - x
+    kx = x + dx * p["mu_k"]
+    rx = x + dx * p["mu_r"]
+    kk = jnp.square(jax.nn.relu(kx @ p["w_kk"]))
+    out = jax.nn.sigmoid(rx @ p["w_rr"]) * (kk @ p["w_vv"])
+    return out, (None if state is None else new_shift)

@@ -1,0 +1,11 @@
+from repro.serving.kvcache import init_cache, cache_bytes  # noqa: F401
+from repro.serving.serve_step import (  # noqa: F401
+    make_serve_step,
+    make_prefill_step,
+    greedy_generate,
+)
+from repro.serving.scheduler import (  # noqa: F401
+    ContinuousBatcher,
+    Request,
+    Completion,
+)

@@ -1,0 +1,84 @@
+"""Decode-state construction: KV caches (full / sliding-window ring),
+Mamba2 SSM + conv states, RWKV6 shift + wkv states; stacked over layers to
+match the scanned decode path in models/transformer.py."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def attn_cache_shape(cfg: ModelConfig, batch: int, capacity: int):
+    cap = min(capacity, cfg.sliding_window) if cfg.sliding_window else capacity
+    if cfg.chunked_attention:
+        cap = min(cap, cfg.chunked_attention)
+    return {
+        "k": (batch, cap, cfg.n_kv_heads, cfg.head_dim),
+        "v": (batch, cap, cfg.n_kv_heads, cfg.head_dim),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int, pos: int = 0,
+               dtype=None):
+    """Zero-initialised decode state for `batch` sequences.
+
+    capacity: max context length the cache must hold (ring size for windowed
+    attention; ignored by recurrent blocks, whose state is O(1)).
+    `pos` sets the current length (dry-run uses pos = seq_len - 1: a cache
+    that already holds the whole context, as in the decode_32k / long_500k
+    shapes).  KV tensors use cfg.kv_cache_dtype when set (e.g.
+    float8_e4m3fn halves decode cache bandwidth)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    kv_dtype = jnp.dtype(cfg.kv_cache_dtype) if cfg.kv_cache_dtype else dtype
+    L = cfg.n_layers
+
+    def zeros(shape):
+        return jnp.zeros(shape, dtype)
+
+    if cfg.block_kind == "attention":
+        sh = attn_cache_shape(cfg, batch, capacity)
+        layers = {k: jnp.zeros((L,) + v, kv_dtype) for k, v in sh.items()}
+    elif cfg.block_kind == "rwkv6":
+        H = cfg.d_model // cfg.ssm_head_dim
+        hd = cfg.ssm_head_dim
+        layers = {
+            "tm": {"shift": zeros((L, batch, cfg.d_model)),
+                   "wkv": jnp.zeros((L, batch, H, hd, hd), jnp.float32)},
+            "cm": zeros((L, batch, cfg.d_model)),
+        }
+    elif cfg.block_kind == "mamba2":
+        H, N, hd = cfg.ssm_heads, cfg.ssm_state_dim, cfg.ssm_head_dim
+        W = cfg.ssm_conv_width
+        conv_d = cfg.d_inner + 2 * N
+        layers = {
+            "ssm": jnp.zeros((L, batch, H, N, hd), jnp.float32),
+            "conv": zeros((L, batch, W - 1, conv_d)),
+        }
+    elif cfg.block_kind == "hybrid":
+        H, N, hd = cfg.ssm_heads, cfg.ssm_state_dim, cfg.ssm_head_dim
+        W = cfg.ssm_conv_width
+        conv_d = cfg.d_inner + 2 * N
+        G = cfg.n_layers // cfg.hybrid_attn_every
+        per = cfg.hybrid_attn_every
+        layers = {
+            "mamba": {
+                "ssm": jnp.zeros((G, per, batch, H, N, hd), jnp.float32),
+                "conv": zeros((G, per, batch, W - 1, conv_d)),
+            },
+        }
+    else:
+        raise ValueError(cfg.block_kind)
+
+    cache = {"layers": layers, "pos": jnp.asarray(pos, jnp.int32)}
+    if cfg.block_kind == "hybrid":
+        G = cfg.n_layers // cfg.hybrid_attn_every
+        sh = attn_cache_shape(cfg, batch, capacity)
+        cache["shared"] = {k: zeros((G,) + v) for k, v in sh.items()}
+    return cache
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, capacity: int) -> int:
+    cache = jax.eval_shape(lambda: init_cache(cfg, batch, capacity))
+    return sum(int(jnp.prod(jnp.asarray(l.shape)) * l.dtype.itemsize)
+               for l in jax.tree.leaves(cache))

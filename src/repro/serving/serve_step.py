@@ -1,0 +1,54 @@
+"""Serving steps: batched single-token decode against a KV cache / SSM
+state, plus prefill (full-sequence forward) and a greedy generation loop."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+def make_serve_step(cfg: ModelConfig, use_pallas: bool = False):
+    """Returns step(params, cache, tokens) -> (logits, new_cache).
+
+    tokens: (B, 1) int32 — or (B, 1, codebooks) for audio — the token decoded
+    at position cache["pos"]; logits predict position pos+1.
+    """
+
+    def step(params, cache, tokens):
+        out = T.forward(params, cfg, tokens, cache=cache,
+                        use_pallas=use_pallas)
+        return out.logits[:, 0], out.cache
+
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig, use_pallas: bool = False):
+    """Full-sequence forward (inference-prefill shape): logits only."""
+
+    def step(params, tokens, patch_embeds=None):
+        out = T.forward(params, cfg, tokens, patch_embeds=patch_embeds,
+                        use_pallas=use_pallas)
+        return out.logits
+
+    return step
+
+
+def greedy_generate(cfg: ModelConfig, params, cache, first_tokens,
+                    n_steps: int, use_pallas: bool = False):
+    """Greedy decode loop (lax.scan over steps).  first_tokens: (B, 1[,C])."""
+    serve = make_serve_step(cfg, use_pallas)
+
+    def body(carry, _):
+        cache, toks = carry
+        logits, cache = serve(params, cache, toks)
+        nxt = jnp.argmax(logits, axis=-1)  # (B,) or (B, C)
+        toks = nxt[:, None] if nxt.ndim == 1 else nxt[:, None, :]
+        return (cache, toks.astype(jnp.int32)), nxt
+
+    (_, _), toks = jax.lax.scan(body, (cache, first_tokens), None,
+                                length=n_steps)
+    return jnp.moveaxis(toks, 0, 1)  # (B, n_steps[, C])

@@ -1,0 +1,1 @@
+from repro.training import metrics  # noqa: F401

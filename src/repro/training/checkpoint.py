@@ -1,0 +1,69 @@
+"""Checkpointing: flattened-path npz save/restore for parameter and
+optimizer pytrees (host-gather based; a production deployment would swap in
+async per-shard array serialization behind the same interface)."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        # sorted: matches jax pytree flattening order for dicts
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    elif hasattr(tree, "_fields"):  # NamedTuple
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}{k}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def save_checkpoint(path: str, tree: Any, step: int | None = None):
+    flat = _flatten(tree)
+    arrays = {}
+    for k, v in flat.items():
+        a = np.asarray(jax.device_get(v))
+        if a.dtype == jnp.bfloat16:
+            arrays[f"BF16::{k}"] = a.view(np.uint16)
+        else:
+            arrays[k] = a
+    if step is not None:
+        arrays["__step__"] = np.asarray(step)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **arrays)
+    return path
+
+
+def load_checkpoint(path: str, like: Any):
+    """Restore into the structure of `like` (shapes/dtypes must match)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat_like = _flatten(like)
+    restored = {}
+    for k in flat_like:
+        if k in data:
+            restored[k] = jnp.asarray(data[k])
+        elif f"BF16::{k}" in data:
+            restored[k] = jnp.asarray(data[f"BF16::{k}"].view(jnp.bfloat16))
+        else:
+            raise KeyError(f"checkpoint missing {k}")
+    leaves_like, treedef = jax.tree.flatten(like)
+    keys = list(_flatten(like).keys())
+    assert len(keys) == len(leaves_like)
+    new_leaves = [restored[k].astype(l.dtype).reshape(l.shape)
+                  for k, l in zip(keys, leaves_like)]
+    return jax.tree.unflatten(treedef, new_leaves)
+
+
+def checkpoint_step(path: str) -> int | None:
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    return int(data["__step__"]) if "__step__" in data else None

@@ -1,0 +1,83 @@
+"""Performance indices from the paper (Section 6.1) + LM-side metrics.
+
+- precision (Eq. 3): fraction of correct predictions (as defined in the paper,
+  this is the overall accuracy);
+- recall (Eq. 4): per-class accuracy averaged over classes (macro recall);
+- F-measure (Eq. 5): harmonic mean of the two;
+- PPG (Eq. 6): prediction performance gain of step j over the step-0 local
+  model, rho = 1 - (1 - F_j) / (1 - F_0).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def precision_index(y_true, y_pred, sample_mask=None):
+    """Eq. 3: (1/m) sum I(y_i, y_hat_i)."""
+    correct = (y_true == y_pred).astype(jnp.float32)
+    if sample_mask is None:
+        return jnp.mean(correct)
+    return jnp.sum(correct * sample_mask) / jnp.maximum(jnp.sum(sample_mask), 1.0)
+
+
+def recall_index(y_true, y_pred, n_classes: int, sample_mask=None):
+    """Eq. 4: per-class correct fraction, averaged over the classes present."""
+    if sample_mask is None:
+        sample_mask = jnp.ones(y_true.shape, jnp.float32)
+    correct = (y_true == y_pred).astype(jnp.float32) * sample_mask
+
+    def per_class(c):
+        in_c = ((y_true == c).astype(jnp.float32)) * sample_mask
+        n_c = jnp.sum(in_c)
+        r_c = jnp.sum(correct * (y_true == c)) / jnp.maximum(n_c, 1.0)
+        return r_c, (n_c > 0).astype(jnp.float32)
+
+    rs, present = jax.vmap(per_class)(jnp.arange(n_classes))
+    return jnp.sum(rs * present) / jnp.maximum(jnp.sum(present), 1.0)
+
+
+def f_measure(y_true, y_pred, n_classes: int, sample_mask=None):
+    """Eq. 5: harmonic mean of precision and recall indices."""
+    p = precision_index(y_true, y_pred, sample_mask)
+    r = recall_index(y_true, y_pred, n_classes, sample_mask)
+    return 2.0 * p * r / jnp.maximum(p + r, 1e-12)
+
+
+def per_class_accuracy(y_true, y_pred, n_classes: int, sample_mask=None):
+    """Per-class correct fraction (Figs. 4/6/8/10)."""
+    if sample_mask is None:
+        sample_mask = jnp.ones(y_true.shape, jnp.float32)
+    correct = (y_true == y_pred).astype(jnp.float32) * sample_mask
+
+    def per_class(c):
+        in_c = ((y_true == c).astype(jnp.float32)) * sample_mask
+        return jnp.sum(correct * (y_true == c)) / jnp.maximum(jnp.sum(in_c), 1.0)
+
+    return jax.vmap(per_class)(jnp.arange(n_classes))
+
+
+def ppg(f_step, f_base):
+    """Eq. 6: rho = 1 - (1 - F_j)/(1 - F_0); negative => worse than local."""
+    return 1.0 - (1.0 - f_step) / jnp.maximum(1.0 - f_base, 1e-12)
+
+
+# ---------------------------------------------------------------- LM metrics
+
+
+def cross_entropy_loss(logits, labels, mask=None):
+    """Token-level CE.  logits: (..., V), labels: (...) int32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def token_accuracy(logits, labels, mask=None):
+    pred = jnp.argmax(logits, axis=-1)
+    correct = (pred == labels).astype(jnp.float32)
+    if mask is None:
+        return jnp.mean(correct)
+    return jnp.sum(correct * mask) / jnp.maximum(jnp.sum(mask), 1.0)

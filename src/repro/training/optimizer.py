@@ -1,0 +1,94 @@
+"""Optimizers (AdamW, SGD+momentum) from scratch — pytree-based, pure
+functions, optimizer state shards exactly like the parameters."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]  # (grads, opt_state, params)
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, state_dtype)
+        return AdamWState(mu=jax.tree.map(z, params),
+                          nu=jax.tree.map(z, params),
+                          count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        count = state.count + 1
+        t = count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * g32 * g32
+            mh = m / (1 - b1 ** t)
+            vh = v / (1 - b2 ** t)
+            step = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, AdamWState(mu=mu, nu=nu, count=count)
+
+    return Optimizer(init=init, update=update)
+
+
+class SGDState(NamedTuple):
+    vel: Any
+    count: jax.Array
+
+
+def sgd(lr: float = 0.1, momentum: float = 0.9, nesterov: bool = True,
+        weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return SGDState(vel=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                         params),
+                        count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        def upd(g, v, p):
+            g32 = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            v = momentum * v + g32
+            step = momentum * v + g32 if nesterov else v
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), v
+
+        out = jax.tree.map(upd, grads, state.vel, params)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        vel = jax.tree.map(lambda o: o[1], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, SGDState(vel=vel, count=state.count + 1)
+
+    return Optimizer(init=init, update=update)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(a.astype(jnp.float32)))
+                        for a in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm

@@ -1,0 +1,159 @@
+"""Train-step builders: single-pod (baseline, global gradient all-reduce) and
+cross-pod GTL (per-pod local SGD + periodic model exchange)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import crosspod as cp
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.training import metrics as M
+from repro.training import optimizer as opt_mod
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+def batch_loss(params, cfg: ModelConfig, batch, use_pallas: bool = False):
+    """batch: {"tokens", "labels", optional "patch_embeds"}.
+
+    tokens (B, S[, codebooks]) int32; labels same shape (next-token targets,
+    already shifted by the data pipeline).  For VLM inputs the labels cover
+    the patch positions too (ignored via label == -1 mask).
+    """
+    out = T.forward(params, cfg, batch["tokens"],
+                    patch_embeds=batch.get("patch_embeds"),
+                    use_pallas=use_pallas)
+    labels = batch["labels"]
+    logits = out.logits
+    if cfg.n_patches and logits.shape[1] == labels.shape[1] + cfg.n_patches:
+        logits = logits[:, cfg.n_patches:]
+    mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    ce = M.cross_entropy_loss(logits.astype(jnp.float32), labels, mask)
+    return ce + out.aux_loss, ce
+
+
+def _grads_microbatched(params, cfg, batch, use_pallas, n_micro: int):
+    """Gradient accumulation: scan over micro-slices of the batch — the
+    §Perf lever that caps live activation memory at 1/n_micro."""
+    if n_micro <= 1:
+        return jax.value_and_grad(
+            lambda p: batch_loss(p, cfg, batch, use_pallas), has_aux=True
+        )(params)
+
+    def split(a):
+        return a.reshape((n_micro, a.shape[0] // n_micro) + a.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+
+    def body(carry, mb):
+        (loss, ce), g = jax.value_and_grad(
+            lambda p: batch_loss(p, cfg, mb, use_pallas), has_aux=True
+        )(params)
+        acc_loss, acc_ce, acc_g = carry
+        acc_g = jax.tree.map(lambda a, b: a + b.astype(a.dtype), acc_g, g)
+        return (acc_loss + loss, acc_ce + ce, acc_g), None
+
+    acc_dtype = jnp.dtype(cfg.grad_accum_dtype)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype), params)
+    (loss, ce, grads), _ = jax.lax.scan(
+        body, (jnp.float32(0), jnp.float32(0), zeros), micro)
+    inv = 1.0 / n_micro
+    grads = jax.tree.map(lambda g: g * inv, grads)
+    return (loss * inv, ce * inv), grads
+
+
+def make_train_step(cfg: ModelConfig, optimizer: opt_mod.Optimizer,
+                    clip_norm: float = 1.0, use_pallas: bool = False):
+    """Single-pod step: loss -> grad -> clip -> update.  Under pjit the
+    gradient reduction is the standard data-parallel all-reduce."""
+
+    def step(state: TrainState, batch):
+        (loss, ce), grads = _grads_microbatched(
+            state.params, cfg, batch, use_pallas, cfg.microbatches)
+        grads, gnorm = opt_mod.clip_by_global_norm(grads, clip_norm)
+        params, opt_state = optimizer.update(grads, state.opt_state,
+                                             state.params)
+        new_state = TrainState(params=params, opt_state=opt_state,
+                               step=state.step + 1)
+        return new_state, {"loss": loss, "ce": ce, "grad_norm": gnorm}
+
+    return step
+
+
+class CrossPodTrainState(NamedTuple):
+    cross: cp.CrossPodState      # pod-stacked params + sync bookkeeping
+    opt_state: Any               # pod-stacked optimizer state
+    step: jax.Array
+
+
+def make_crosspod_train_step(cfg: ModelConfig, optimizer: opt_mod.Optimizer,
+                             clip_norm: float = 1.0,
+                             use_pallas: bool = False):
+    """Per-pod local step, vmapped over the leading pod axis.
+
+    No collective touches the `pod` axis here — gradients reduce only within
+    each pod (the paper's zero-inter-location-traffic local phase).  The
+    cross-pod traffic lives entirely in `make_sync_step`.
+    """
+
+    def pod_step(params, opt_state, batch):
+        (loss, ce), grads = jax.value_and_grad(
+            lambda p: batch_loss(p, cfg, batch, use_pallas), has_aux=True
+        )(params)
+        grads, gnorm = opt_mod.clip_by_global_norm(grads, clip_norm)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, loss, gnorm
+
+    def step(state: CrossPodTrainState, batch):
+        params, opt_state, loss, gnorm = jax.vmap(pod_step)(
+            state.cross.params, state.opt_state, batch)
+        cross = state.cross._replace(params=params)
+        new_state = CrossPodTrainState(cross=cross, opt_state=opt_state,
+                                       step=state.step + 1)
+        return new_state, {"loss": loss, "grad_norm": gnorm}
+
+    return step
+
+
+def make_sync_step(cfg: ModelConfig, sync_cfg: cp.SyncConfig,
+                   use_pallas: bool = False):
+    """Cross-pod exchange/aggregation step (the paper's Steps 1-4)."""
+
+    def loss_fn(params, probe):
+        loss, _ = batch_loss(params, cfg, probe, use_pallas)
+        return loss
+
+    def step(state: CrossPodTrainState, probe_batch=None):
+        cross, info = cp.sync_step(state.cross, sync_cfg,
+                                   probe_batch=probe_batch, loss_fn=loss_fn)
+        return state._replace(cross=cross), info
+
+    return step
+
+
+def init_train_state(key, cfg: ModelConfig, optimizer: opt_mod.Optimizer):
+    from repro.models import params as Pm
+
+    params, _ = Pm.init_params(key, cfg)
+    return TrainState(params=params, opt_state=optimizer.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def init_crosspod_train_state(key, cfg: ModelConfig,
+                              optimizer: opt_mod.Optimizer, n_pods: int):
+    from repro.models import params as Pm
+
+    params, _ = Pm.init_params(key, cfg)
+    cross = cp.init_crosspod_state(params, n_pods)
+    opt_state = jax.vmap(optimizer.init)(cross.params)
+    return CrossPodTrainState(cross=cross, opt_state=opt_state,
+                              step=jnp.zeros((), jnp.int32))

@@ -1,0 +1,8 @@
+# NOTE: do NOT set --xla_force_host_platform_device_count here.  Smoke tests
+# and benches must see the real single-CPU device world; only the dry-run
+# (launch/dryrun.py, spawned as a subprocess in test_dryrun_small.py) forces
+# placeholder devices.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

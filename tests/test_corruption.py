@@ -1,0 +1,54 @@
+"""Malicious-model corruption + robustness (paper Section 7)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.corruption import corrupt_malicious1, corrupt_malicious2
+from repro.core.experiment import run_scenario
+
+
+def _models(key, L=8, k=3, d=20):
+    ks = jax.random.split(key, 2)
+    return {"W": jax.random.normal(ks[0], (L, k, d)),
+            "b": jax.random.normal(ks[1], (L, k))}
+
+
+def test_malicious1_corrupts_exact_count():
+    key = jax.random.PRNGKey(0)
+    models = _models(key)
+    corrupted, bad = corrupt_malicious1(key, models, 0.25)
+    assert int(bad.sum()) == 2  # 25% of 8
+    changed = np.any(np.asarray(corrupted["W"] != models["W"]), axis=(1, 2))
+    np.testing.assert_array_equal(changed, np.asarray(bad))
+
+
+def test_malicious2_corrupts_expected_fraction():
+    key = jax.random.PRNGKey(1)
+    models = _models(key, L=4, k=8, d=200)
+    corrupted = corrupt_malicious2(key, models, 0.5)
+    frac = float(np.mean(np.asarray(corrupted["W"] != models["W"])))
+    assert 0.45 < frac < 0.55
+
+
+@pytest.mark.slow
+def test_gtl_robust_nohtl_collapses_malicious1():
+    """Tables 1/2: at 50% fully-malicious devices GTL holds, noHTL breaks."""
+    key = jax.random.PRNGKey(7)
+    cf = lambda m: corrupt_malicious1(key, m, 0.5)[0]
+    r = run_scenario("mnist_balanced", n_samples=5000, corrupt_fn=cf,
+                     svm_steps=300)
+    assert r.f_gtl4_mu > 0.9
+    assert r.f_nohtl_mu < 0.5
+    assert r.f_gtl4_mu - r.f_nohtl_mu > 0.35
+
+
+@pytest.mark.slow
+def test_gtl_robust_malicious2():
+    """Tables 3/4: at 50% per-model parameter corruption GTL holds."""
+    key = jax.random.PRNGKey(9)
+    cf = lambda m: corrupt_malicious2(key, m, 0.5)
+    r = run_scenario("mnist_balanced", n_samples=5000, corrupt_fn=cf,
+                     svm_steps=300)
+    assert r.f_gtl4_mu > 0.8
+    assert r.f_nohtl_mu < 0.55

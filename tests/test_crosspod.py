@@ -1,0 +1,144 @@
+"""Cross-pod GTL (the paper's procedure lifted to deep training)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import crosspod as cp
+from repro.data.lm import SyntheticLM
+from repro.training import optimizer as O
+from repro.training import train_step as TS
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("qwen3_0_6b")
+    opt = O.adamw(lr=3e-3)
+    n_pods = 4
+    state = TS.init_crosspod_train_state(jax.random.PRNGKey(0), cfg, opt,
+                                         n_pods)
+    step = jax.jit(TS.make_crosspod_train_step(cfg, opt))
+    data = SyntheticLM(cfg.vocab_size, n_pods=n_pods, pod_skew=0.3)
+    for i in range(4):
+        state, m = step(state, data.pod_batches(i, 2, 64))
+    return cfg, opt, n_pods, state, data
+
+
+def test_local_steps_diverge_pods(setup):
+    cfg, opt, n_pods, state, data = setup
+    W = jax.tree.leaves(state.cross.params)[0]
+    assert not bool(jnp.allclose(W[0], W[1]))
+
+
+def test_consensus_sync_equalizes(setup):
+    cfg, opt, n_pods, state, data = setup
+    sync = jax.jit(TS.make_sync_step(cfg, cp.SyncConfig(mode="consensus")))
+    new, _ = sync(state)
+    for leaf in jax.tree.leaves(new.cross.params):
+        for p in range(1, n_pods):
+            assert bool(jnp.allclose(leaf[0], leaf[p]))
+
+
+def test_gtl_sync_excludes_corrupted_pod(setup):
+    """Paper Section 7 lifted: a noise-model pod must never be selected."""
+    cfg, opt, n_pods, state, data = setup
+    bad = jax.tree.map(
+        lambda a: a.at[3].set(
+            jax.random.normal(jax.random.PRNGKey(9), a[3].shape, a.dtype)),
+        state.cross.params)
+    st = state._replace(cross=state.cross._replace(params=bad))
+    sync = jax.jit(TS.make_sync_step(
+        cfg, cp.SyncConfig(mode="gtl", kappa_src=3)))
+    new, info = sync(st, data.pod_batches(99, 2, 64))
+    masks = np.asarray(info["masks"])
+    assert masks.shape == (n_pods, n_pods)
+    assert (masks[:, 3] == 0).all(), masks
+    assert (masks.sum(axis=1) == 3).all()
+
+
+def test_gtl_sync_improves_loss_on_skewed_pods(setup):
+    """Aggregating across non-IID pods should not hurt the average probe
+    loss much, and the selected-set mean should beat the worst pod."""
+    cfg, opt, n_pods, state, data = setup
+    from repro.training.train_step import batch_loss
+
+    probe = data.pod_batches(123, 2, 64)
+    loss_fn = lambda p, b: batch_loss(p, cfg, b)[0]
+    per_pod = jax.vmap(loss_fn)(state.cross.params, probe)
+    sync = jax.jit(TS.make_sync_step(cfg, cp.SyncConfig(mode="gtl")))
+    new, _ = sync(state, probe)
+    after = jax.vmap(loss_fn)(new.cross.params, probe)
+    assert float(after.mean()) < float(per_pod.max()) + 0.05
+
+
+def test_topk_sparsify_properties():
+    key = jax.random.PRNGKey(1)
+    delta = {"a": jax.random.normal(key, (64, 32)),
+             "b": jax.random.normal(jax.random.fold_in(key, 1), (100,))}
+    sparse, resid = cp.topk_sparsify(delta, 0.1)
+    for k in delta:
+        s, r, d = sparse[k], resid[k], delta[k]
+        # reconstruction
+        np.testing.assert_allclose(np.asarray(s + r), np.asarray(d),
+                                   rtol=1e-6)
+        # sparsity ~ 10%
+        nnz = int(jnp.sum(s != 0))
+        assert nnz <= int(d.size * 0.1) + 1
+        # kept entries are the largest-magnitude ones
+        if nnz:
+            kept_min = float(jnp.min(jnp.abs(s[s != 0])))
+            dropped_max = float(jnp.max(jnp.abs(jnp.where(s == 0, d, 0))))
+            assert kept_min >= dropped_max - 1e-6
+
+
+def test_sparse_sync_error_feedback_accumulates(setup):
+    cfg, opt, n_pods, state, data = setup
+    sync = jax.jit(TS.make_sync_step(
+        cfg, cp.SyncConfig(mode="consensus", sparse_frac=0.05)))
+    new, _ = sync(state)
+    # residual nonzero (most of the delta was withheld)
+    ef_norm = sum(float(jnp.sum(jnp.abs(l)))
+                  for l in jax.tree.leaves(new.cross.ef))
+    assert ef_norm > 0
+    # pods agreed on the (sparse) exchanged model
+    W = jax.tree.leaves(new.cross.params)[0]
+    assert bool(jnp.allclose(W[0], W[1]))
+
+
+def test_overhead_accounting():
+    params = {"w": jnp.zeros((1000,))}
+    oh = cp.crosspod_overhead_bytes(params, 4, cp.SyncConfig(sparse_frac=0.01))
+    assert oh["params"] == 1000
+    assert oh["dense_bytes"] == 4 * 3 * 1000 * 2
+    assert oh["exchanged_bytes"] == 4 * 3 * 10 * 6
+    assert oh["consensus_bytes"] == 2 * 3 * 1000 * 2
+    assert oh["gain_vs_dense"] > 0.95
+
+
+def test_beta_weighted_gtl_sync(setup):
+    """beta_temp > 0: Eq. 1's beta coefficients — better pods get more
+    weight; the combination must still exclude the corrupted pod and give a
+    probe loss no worse than the uniform mean over selected sources."""
+    cfg, opt, n_pods, state, data = setup
+    from repro.training.train_step import batch_loss
+
+    bad = jax.tree.map(
+        lambda a: a.at[3].set(
+            jax.random.normal(jax.random.PRNGKey(11), a[3].shape, a.dtype)),
+        state.cross.params)
+    st = state._replace(cross=state.cross._replace(params=bad))
+    probe = data.pod_batches(321, 2, 64)
+    loss_fn = lambda p, b: batch_loss(p, cfg, b)[0]
+
+    uni = jax.jit(TS.make_sync_step(cfg, cp.SyncConfig(mode="gtl",
+                                                       kappa_src=3)))
+    beta = jax.jit(TS.make_sync_step(cfg, cp.SyncConfig(mode="gtl",
+                                                        kappa_src=3,
+                                                        beta_temp=0.5)))
+    s_uni, info_u = uni(st, probe)
+    s_beta, info_b = beta(st, probe)
+    assert (np.asarray(info_b["masks"])[:, 3] == 0).all()
+    l_uni = float(jnp.mean(jax.vmap(loss_fn)(s_uni.cross.params, probe)))
+    l_beta = float(jnp.mean(jax.vmap(loss_fn)(s_beta.cross.params, probe)))
+    assert l_beta < l_uni + 0.1

@@ -1,0 +1,74 @@
+"""Synthetic datasets + the paper's three partition regimes."""
+import jax
+import numpy as np
+import pytest
+
+from repro.data import (HAPT_LIKE, MNIST_HOG_LIKE, make_dataset,
+                        partition_class_unbalanced, partition_node_unbalanced,
+                        partition_uniform)
+from repro.data.synth import train_test_split
+
+
+def _xy(n=3000, spec=MNIST_HOG_LIKE):
+    return make_dataset(jax.random.PRNGKey(0), spec, n)
+
+
+def test_dataset_shapes_and_classes():
+    X, y = _xy()
+    assert X.shape == (3000, 324)
+    assert set(np.unique(np.asarray(y))) <= set(range(10))
+
+
+def test_hapt_class_pdf_skewed():
+    X, y = make_dataset(jax.random.PRNGKey(1), HAPT_LIKE, 8000)
+    counts = np.bincount(np.asarray(y), minlength=12)
+    # basic activities (0-5) far more frequent than transitions (6-11)
+    assert counts[:6].min() > counts[6:].max()
+
+
+def test_split_disjoint_and_sized():
+    X, y = _xy(1000)
+    (Xtr, ytr), (Xte, yte) = train_test_split(jax.random.PRNGKey(2), X, y)
+    assert len(Xte) == 300 and len(Xtr) == 700
+
+
+def test_partition_uniform_balanced_locations():
+    X, y = _xy()
+    sh = partition_uniform(np.random.default_rng(0), np.asarray(X),
+                           np.asarray(y), 10)
+    counts = sh.counts()
+    assert counts.min() >= counts.max() - 1
+    # per-location class distribution ~ global
+    Xl, yl = sh.location(0)
+    pdf = np.bincount(yl, minlength=10) / len(yl)
+    assert pdf.max() < 0.25
+
+
+def test_partition_class_unbalanced_minors_reduced():
+    X, y = _xy(6000)
+    sh = partition_class_unbalanced(np.random.default_rng(0), np.asarray(X),
+                                    np.asarray(y), 10, 10)
+    ys = sh.y[sh.mask > 0]
+    counts = np.bincount(ys.astype(int), minlength=10)
+    minors = counts[[2, 5, 6, 7, 8]]
+    majors = counts[[0, 1, 3, 4, 9]]
+    assert minors.max() < majors.min() * 0.6
+
+
+def test_partition_node_unbalanced_hot_class():
+    X, y = _xy(6000)
+    sh = partition_node_unbalanced(np.random.default_rng(0), np.asarray(X),
+                                   np.asarray(y), 30, 10)
+    for l in (0, 7, 23):
+        Xl, yl = sh.location(l)
+        hot = l % 10
+        frac = np.mean(yl == hot)
+        assert 0.6 < frac < 0.8  # paper: 70%
+
+
+def test_padding_mask_consistency():
+    X, y = _xy(999)
+    sh = partition_uniform(np.random.default_rng(1), np.asarray(X),
+                           np.asarray(y), 7)
+    assert (sh.X[sh.mask == 0] == 0).all()
+    assert sh.mask.sum() == 999

@@ -1,0 +1,82 @@
+"""Decode-path correctness: token-by-token decode with KV/SSM caches must
+reproduce the training-forward logits (the strongest end-to-end invariant of
+the serving stack)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import params as Pm
+from repro.models import transformer as T
+from repro.serving import init_cache, make_serve_step
+
+# one representative per block family + GQA/bias/qk-norm/moe coverage
+ARCHS = ["qwen3_0_6b", "qwen1_5_4b", "llama4_scout_17b_a16e", "rwkv6_7b",
+         "zamba2_2_7b", "musicgen_medium", "qwen3_moe_30b_a3b"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = get_smoke_config(arch)
+    if cfg.chunked_attention:
+        # chunk boundaries differ between ring-cache decode and training mask
+        # only if chunk < capacity; align them:
+        cfg = cfg.replace(chunked_attention=64)
+    if cfg.is_moe:
+        # capacity-based dropping is group-size dependent (train groups over
+        # B*S tokens, decode over B) — remove drops so the paths coincide
+        cfg = cfg.replace(moe_capacity_factor=8.0)
+    key = jax.random.PRNGKey(0)
+    params, _ = Pm.init_params(key, cfg)
+    B, S = 2, 16
+    shape = (B, S, cfg.num_codebooks) if cfg.num_codebooks > 1 else (B, S)
+    toks = jax.random.randint(jax.random.fold_in(key, 1), shape, 0,
+                              cfg.vocab_size)
+
+    ref = T.forward(params, cfg, toks).logits  # (B, S, ...)
+
+    serve = jax.jit(make_serve_step(cfg))
+    cache = init_cache(cfg, B, 64, pos=0, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        tok_t = toks[:, t:t + 1]
+        logits, cache = serve(params, cache, tok_t)
+        outs.append(logits)
+    got = jnp.stack(outs, axis=1)  # (B, S, ...)
+
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_sliding_window_decode_matches_windowed_forward():
+    cfg = get_smoke_config("mistral_nemo_12b").replace(sliding_window=8)
+    key = jax.random.PRNGKey(3)
+    params, _ = Pm.init_params(key, cfg)
+    B, S = 1, 24
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    ref = T.forward(params, cfg, toks).logits
+
+    serve = jax.jit(make_serve_step(cfg))
+    # ring cache capacity == window
+    cache = init_cache(cfg, B, cfg.sliding_window, pos=0, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        logits, cache = serve(params, cache, toks[:, t:t + 1])
+        outs.append(logits)
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_greedy_generate_runs():
+    from repro.serving import greedy_generate
+
+    cfg = get_smoke_config("qwen3_0_6b")
+    params, _ = Pm.init_params(jax.random.PRNGKey(0), cfg)
+    cache = init_cache(cfg, 2, 32, pos=0, dtype=jnp.float32)
+    out = greedy_generate(cfg, params, cache, jnp.zeros((2, 1), jnp.int32), 8)
+    assert out.shape == (2, 8)
+    assert bool(jnp.all((out >= 0) & (out < cfg.vocab_size)))

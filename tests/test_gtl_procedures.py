@@ -1,0 +1,82 @@
+"""End-to-end GTL / noHTL procedure tests (small fast scenario)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gtl as G
+from repro.core import nohtl as NH
+from repro.core import base_learner as bl
+from repro.core.experiment import make_scenario, run_scenario
+from repro.training import metrics as M
+
+
+@pytest.fixture(scope="module")
+def small_scenario():
+    return run_scenario("mnist_class_unbalanced", seed=0, n_samples=6000,
+                        kappa=48, svm_steps=300)
+
+
+def test_paper_ordering_class_unbalanced(small_scenario):
+    """The paper's central claims on class-unbalanced data (Sec 6.4):
+    local < GTL(2) < mu-GTL(4), GTL(4) >= noHTL, all <= ~Cloud."""
+    r = small_scenario
+    assert r.f_gtl2.mean() > r.f_local.mean() + 0.02
+    assert r.f_gtl4_mu > r.f_gtl2.mean() - 0.01
+    assert r.f_gtl4_mu >= r.f_nohtl_mu - 0.005
+    assert r.f_cloud >= r.f_gtl4_mu - 0.06
+
+
+def test_ppg_positive_for_aggregates(small_scenario):
+    ppg = small_scenario.ppg()
+    assert np.mean(ppg["gtl4_mu"]) > 0
+    assert np.mean(ppg["nohtl_mu"]) > 0
+
+
+def test_flatten_gtl_exactness():
+    """The linear collapse must reproduce omega^T x + sum beta_i h_i(x)."""
+    key = jax.random.PRNGKey(0)
+    L, k, d, m = 3, 4, 10, 7
+    ks = jax.random.split(key, 4)
+    W = jax.random.normal(ks[0], (L, k, d))
+    b = jax.random.normal(ks[1], (L, k))
+    sources = G.StackedLinear(W, b)
+    n = d + 1 + L
+    coef = jax.random.normal(ks[2], (k, n))
+    X = jax.random.normal(ks[3], (m, d))
+    flat = G.flatten_gtl(coef, sources)
+
+    feats = jnp.concatenate([X, jnp.ones((m, 1))], 1)
+    explicit = feats @ coef[:, :d + 1].T
+    H = G.source_margins(X, sources)  # (k, m, L)
+    explicit = explicit + jnp.einsum("kml,kl->mk", H, coef[:, d + 1:])
+    np.testing.assert_allclose(np.asarray(feats @ flat.T),
+                               np.asarray(explicit), rtol=1e-4, atol=1e-4)
+
+
+def test_aggregator_interpolation():
+    """Section 9: more aggregators must not hurt much; few aggregators
+    already approach full GTL on unbalanced data."""
+    shards, (Xte, yte), spec = make_scenario("mnist_class_unbalanced", 0, 5000)
+    k = spec.n_classes
+    key = jax.random.PRNGKey(5)
+    fs = {}
+    for n_agg in (1, 5, shards.X.shape[0]):
+        res = G.run_gtl_with_aggregators(key, shards, k, n_agg, kappa=48)
+        pred = G.predict_linear(res.consensus_flat, Xte)
+        fs[n_agg] = float(M.f_measure(yte, pred, k))
+    L = shards.X.shape[0]
+    assert fs[5] >= fs[1] - 0.03
+    assert fs[L] >= fs[1] - 0.03
+    assert fs[5] >= fs[L] - 0.08  # few aggregators ~ full GTL
+
+
+def test_nohtl_consensus_equals_mean_of_models():
+    shards, _, spec = make_scenario("mnist_balanced", 0, 3000)
+    res = NH.run_nohtl(shards, spec.n_classes, svm_steps=100)
+    aug = res.sources.augmented()
+    np.testing.assert_allclose(np.asarray(res.consensus_flat),
+                               np.asarray(jnp.mean(aug, axis=0)),
+                               rtol=1e-5, atol=1e-6)

@@ -1,0 +1,164 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.greedy_scores import ops as gs_ops
+from repro.kernels.greedy_scores import ref as gs_ref
+from repro.kernels.ssm_scan import ops as ss_ops
+from repro.kernels.ssm_scan import ref as ss_ref
+
+
+# ------------------------------------------------------- flash attention
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd", [
+    (2, 256, 4, 2, 64),
+    (1, 256, 4, 4, 128),
+    (2, 128, 8, 2, 64),
+    (1, 512, 2, 1, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes_dtypes(B, S, H, KV, hd, dtype):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), dtype)
+    out = fa_ops.flash_attention(q, k, v)
+    g = H // KV
+    tr = lambda a: jnp.transpose(a, (0, 2, 1, 3))
+    expect = fa_ref.reference_attention(
+        tr(q), jnp.repeat(tr(k), g, 1), jnp.repeat(tr(v), g, 1))
+    expect = jnp.transpose(expect, (0, 2, 1, 3))
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=tol, atol=tol * 5)
+
+
+@pytest.mark.parametrize("window,chunk", [(64, 0), (0, 64), (32, 0)])
+def test_flash_attention_masks(window, chunk):
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 3)
+    B, S, H, hd = 2, 256, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    out = fa_ops.flash_attention(q, k, v, window=window, chunk=chunk)
+    tr = lambda a: jnp.transpose(a, (0, 2, 1, 3))
+    expect = jnp.transpose(
+        fa_ref.reference_attention(tr(q), tr(k), tr(v), window=window,
+                                   chunk=chunk), (0, 2, 1, 3))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------ greedy
+
+
+@pytest.mark.parametrize("m,n", [(256, 512), (140, 583), (64, 130)])
+def test_gram_kernel(m, n):
+    Z = jax.random.normal(jax.random.PRNGKey(2), (m, n))
+    G = gs_ops.gram(Z)
+    Ge = gs_ref.reference_gram(Z)
+    np.testing.assert_allclose(np.asarray(G), np.asarray(Ge),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("n", [256, 583, 1000])
+@pytest.mark.parametrize("lam", [0.01, 1.0])
+def test_scores_argmax_kernel(n, lam):
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 2)
+    corr = jax.random.normal(ks[0], (n,))
+    diag = jnp.abs(jax.random.normal(ks[1], (n,))) + 0.05
+    sel = (jnp.arange(n) % 5 == 0).astype(jnp.float32)
+    s, idx = gs_ops.scores_argmax(corr, diag, sel, lam)
+    se, idxe = gs_ref.reference_scores(corr, diag, sel, lam)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(se),
+                               rtol=1e-5, atol=1e-5)
+    assert int(idx) == int(idxe)
+
+
+def test_greedytl_with_pallas_gram_matches():
+    """gram_stats(use_pallas=True) plugs into the GreedyTL solver."""
+    from repro.core import greedytl as GT
+
+    key = jax.random.PRNGKey(4)
+    ks = jax.random.split(key, 3)
+    X = jax.random.normal(ks[0], (120, 20))
+    y = jnp.sign(X[:, 0] + 0.1 * jax.random.normal(ks[1], (120,)))
+    H = jax.random.normal(ks[2], (120, 3)) * 0.1
+    Z, _ = GT.build_design(X, H)
+    G1, c1 = GT.gram_stats(Z, y)
+    G2, c2 = GT.gram_stats(Z, y, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(G1), np.asarray(G2),
+                               rtol=1e-4, atol=1e-4)
+    m1 = GT.greedytl_from_gram(G1, c1, 6, 0.1)
+    m2 = GT.greedytl_from_gram(G2, c2, 6, 0.1)
+    np.testing.assert_array_equal(np.asarray(m1.selected),
+                                  np.asarray(m2.selected))
+
+
+# ------------------------------------------------------------- ssm scan
+
+
+@pytest.mark.parametrize("B,S,H,Dk,Dv,bonus", [
+    (2, 256, 2, 64, 64, False),
+    (1, 256, 4, 64, 64, True),
+    (2, 128, 2, 32, 64, False),
+    (1, 128, 2, 64, 128, True),
+])
+def test_ssm_scan_kernel(B, S, H, Dk, Dv, bonus):
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, S, H, Dk))
+    k = jax.random.normal(ks[1], (B, S, H, Dk))
+    v = jax.random.normal(ks[2], (B, S, H, Dv))
+    ld = -jax.nn.softplus(jax.random.normal(ks[3], (B, S, H, Dk)))
+    u = jnp.abs(jax.random.normal(ks[4], (H, Dk))) if bonus else None
+    y, st = ss_ops.ssm_scan(q, k, v, ld, u=u, chunk=64)
+    ye, ste = ss_ref.reference_scan(q, k, v, ld, u=u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(ste),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_ssm_scan_extreme_decay_stable():
+    """The kernel must stay exact under decays that overflow the qd/kd
+    factorization (the bug class fixed in models/ssm.py)."""
+    key = jax.random.PRNGKey(6)
+    B, S, H, Dk = 1, 128, 2, 32
+    q = jax.random.normal(key, (B, S, H, Dk))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, Dk))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, Dk))
+    ld = -jnp.abs(jax.random.normal(jax.random.fold_in(key, 3),
+                                    (B, S, H, Dk))) * 30.0
+    y, st = ss_ops.ssm_scan(q, k, v, ld)
+    ye, ste = ss_ref.reference_scan(q, k, v, ld)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_gla_chunked_jnp_matches_exact():
+    from repro.models.ssm import gla_chunked, gla_scan_exact
+
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 5)
+    B, S, H, Dk, Dv = 2, 96, 2, 16, 32
+    q = jax.random.normal(ks[0], (B, S, H, Dk))
+    k = jax.random.normal(ks[1], (B, S, H, Dk))
+    v = jax.random.normal(ks[2], (B, S, H, Dv))
+    ld = -jax.nn.softplus(jax.random.normal(ks[3], (B, S, H, Dk)))
+    for u in (None, jnp.abs(jax.random.normal(ks[4], (H, Dk)))):
+        y, st = gla_chunked(q, k, v, ld, u=u)
+        ye, ste = gla_scan_exact(q, k, v, ld, u=u)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ye),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(st), np.asarray(ste),
+                                   rtol=1e-4, atol=1e-4)

@@ -1,0 +1,71 @@
+"""Paper performance indices (Eqs. 3-6) + decoding."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.base_learner import decode_codewords
+from repro.training import metrics as M
+
+
+def test_precision_is_overall_accuracy():
+    y = jnp.asarray([0, 1, 2, 2, 1])
+    p = jnp.asarray([0, 1, 1, 2, 1])
+    assert float(M.precision_index(y, p)) == pytest.approx(0.8)
+
+
+def test_recall_is_macro_average():
+    y = jnp.asarray([0, 0, 0, 1])
+    p = jnp.asarray([0, 0, 1, 1])
+    # class 0: 2/3, class 1: 1/1 -> macro 5/6
+    assert float(M.recall_index(y, p, 2)) == pytest.approx(5 / 6, abs=1e-6)
+
+
+def test_f_measure_harmonic_mean():
+    y = jnp.asarray([0, 0, 0, 1])
+    p = jnp.asarray([0, 0, 1, 1])
+    pr = float(M.precision_index(y, p))
+    rc = float(M.recall_index(y, p, 2))
+    f = float(M.f_measure(y, p, 2))
+    assert f == pytest.approx(2 * pr * rc / (pr + rc), abs=1e-6)
+
+
+def test_f_measure_bounds_and_perfect():
+    y = jnp.asarray([0, 1, 2, 0])
+    assert float(M.f_measure(y, y, 3)) == pytest.approx(1.0)
+    worst = jnp.asarray([1, 2, 0, 1])
+    assert float(M.f_measure(y, worst, 3)) == pytest.approx(0.0)
+
+
+def test_ppg_eq6():
+    # F0 = 0.5, Fj = 0.9 -> rho = 1 - 0.1/0.5 = 0.8
+    assert float(M.ppg(0.9, 0.5)) == pytest.approx(0.8)
+    # worse than local -> negative
+    assert float(M.ppg(0.4, 0.5)) < 0
+
+
+def test_decode_codewords_matches_argmax_for_clear_margins():
+    marg = jnp.asarray([[2.0, -1.0, -3.0], [-2.0, -1.0, 3.0]])
+    np.testing.assert_array_equal(np.asarray(decode_codewords(marg)), [0, 2])
+
+
+def test_decode_hard_mode_ties_differ_from_loss_mode():
+    # two classifiers fire: sign-decode is ambiguous, loss-decode picks the
+    # larger margin
+    marg = jnp.asarray([[1.5, 0.5, -1.0]])
+    soft = int(decode_codewords(marg)[0])
+    assert soft == 0
+
+
+def test_masked_metrics_ignore_padding():
+    y = jnp.asarray([0, 1, 1, 0])
+    p = jnp.asarray([0, 1, 0, 1])  # two wrong, but both masked out
+    m = jnp.asarray([1.0, 1.0, 0.0, 0.0])
+    assert float(M.precision_index(y, p, m)) == pytest.approx(1.0)
+    assert float(M.f_measure(y, p, 2, m)) == pytest.approx(1.0)
+
+
+def test_cross_entropy_uniform_logits():
+    logits = jnp.zeros((2, 3, 7))
+    labels = jnp.asarray([[0, 1, 2], [3, 4, 5]])
+    assert float(M.cross_entropy_loss(logits, labels)) == pytest.approx(
+        np.log(7), abs=1e-5)

@@ -1,0 +1,83 @@
+"""Network-overhead accounting: closed forms, bounds, Table 6/7 values."""
+import numpy as np
+import pytest
+
+from repro.core import overhead as oh
+
+
+def test_closed_forms():
+    s, k, d0, d1 = 21, 12, 562, 64
+    assert oh.oh_step0(s, k, d0) == s * (s - 1) * d0 * k
+    assert oh.oh_step1(s, k, d1) == s * (s - 1) * d1 * k
+    assert oh.oh_gtl(s, k, d0, d1) == oh.oh_step0(s, k, d0) + oh.oh_step1(s, k, d1)
+    assert oh.oh_nohtl_mu(s, k, d0) == 2 * k * (s - 1) * d0
+    assert oh.oh_nohtl_mv(s, k, d0) == k * s * (s - 1) * d0
+    assert oh.oh_dynamic_gateway(s, k, d0) == d0 * k * (s + 1)
+
+
+def test_upper_bound_eq12_dominates():
+    """OH^up = 2ks^2 d0 upper-bounds OH^tot whenever d1 < d0 (Sec 8.1)."""
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        s = int(rng.integers(2, 60))
+        k = int(rng.integers(2, 20))
+        d0 = int(rng.integers(10, 2000))
+        d1 = int(rng.integers(1, d0))
+        assert oh.oh_gtl(s, k, d0, d1) <= oh.oh_upper_bound(s, k, d0)
+
+
+def test_gain_lower_bound_eq14_is_a_lower_bound():
+    s, k, d0, d1 = 30, 10, 325, 64
+    N, dc = 70000, 324
+    g_true = oh.gain(oh.oh_gtl(s, k, d0, d1), oh.oh_cloud(N, dc))
+    g_low = oh.gain_lower_bound(s, k, d0, N, dc)
+    assert g_low <= g_true + 1e-9
+
+
+def test_eq15_mu_d_form_matches_eq14():
+    s, k = 30, 10
+    mu_d = 2000.0
+    N = s * mu_d
+    # with d0 == dc the two forms coincide
+    g14 = oh.gain_lower_bound(s, k, 500, int(N), 500)
+    g15 = oh.gain_lower_bound_mu(s, k, mu_d)
+    assert abs(g14 - g15) < 1e-9
+
+
+def test_paper_table6_values_reproduced():
+    """The paper's Table 6 MB figures, from the closed forms + 8B/coef:
+    HAPT: OH0 ~ 20MB, OH1 ~ 3MB, cloud 48MB, raw 103MB, gain ~ 52%."""
+    rep = oh.OverheadReport(s=21, k=12, d0=562, d1=64, n_samples=10929,
+                            d_point=561, d_raw=1178)
+    assert abs(rep.oh0_mb - 20) < 3
+    assert abs(rep.oh1_mb - 3) < 1
+    assert abs(rep.oh_cloud_mb - 48) < 2
+    assert abs(rep.oh_raw_mb - 103) < 6
+    g = rep.gains()
+    assert 0.45 <= g["gain_gtl"] <= 0.60            # paper: 52%
+    assert g["gain_nohtl_mu"] > 0.9                 # paper: 96%
+
+    # MNIST row: s=30, k=10, d0=325, cloud 148MB-ish at N=70000
+    rep2 = oh.OverheadReport(s=30, k=10, d0=325, d1=64, n_samples=70000,
+                             d_point=324, d_raw=640)
+    assert abs(rep2.oh0_mb - 21) < 3                # paper: 21MB
+    g2 = rep2.gains()
+    assert 0.78 <= g2["gain_gtl"] <= 0.92           # paper: 83%
+    assert g2["gain_nohtl_mu"] > 0.98               # paper: 99%
+
+
+def test_gain_concavity_in_N():
+    """Fig 11c: gain grows, with diminishing increments, in dataset size."""
+    gains = [oh.gain_lower_bound(30, 10, 325, n, 324)
+             for n in (20000, 40000, 80000, 160000)]
+    assert all(b > a for a, b in zip(gains, gains[1:]))
+    diffs = [b - a for a, b in zip(gains, gains[1:])]
+    assert all(d2 < d1 for d1, d2 in zip(diffs, diffs[1:]))
+
+
+def test_breakeven_locations_eq15():
+    """Gain crosses zero near s = mu_D / 2k (Sec 8.1)."""
+    k, mu_d = 10, 2000.0
+    s_star = mu_d / (2 * k)
+    assert oh.gain_lower_bound_mu(int(s_star - 5), k, mu_d) > 0
+    assert oh.gain_lower_bound_mu(int(s_star + 5), k, mu_d) < 0

@@ -1,0 +1,110 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation as agg
+from repro.core import crosspod as cp
+from repro.core import greedytl as GT
+from repro.core import overhead as oh
+from repro.training import metrics as M
+
+_settings = dict(max_examples=25, deadline=None)
+
+
+@given(s=st.integers(2, 80), k=st.integers(1, 30), d0=st.integers(1, 5000),
+       d1=st.integers(1, 5000))
+@settings(**_settings)
+def test_overhead_bound_property(s, k, d0, d1):
+    d1 = min(d1, d0)  # the paper's assumption d1 <= d0
+    assert oh.oh_gtl(s, k, d0, d1) <= oh.oh_upper_bound(s, k, d0)
+    # noHTL_mu is never more traffic than noHTL_mv for s >= 2
+    assert oh.oh_nohtl_mu(s, k, d0) <= max(oh.oh_nohtl_mv(s, k, d0),
+                                           oh.oh_nohtl_mu(s, k, d0))
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(4, 64),
+       k=st.integers(2, 8))
+@settings(**_settings)
+def test_metric_bounds_property(seed, n, k):
+    rng = np.random.default_rng(seed)
+    y = jnp.asarray(rng.integers(0, k, n))
+    p = jnp.asarray(rng.integers(0, k, n))
+    f = float(M.f_measure(y, p, k))
+    assert 0.0 <= f <= 1.0
+    assert float(M.f_measure(y, y, k)) == pytest.approx(1.0)
+    # permutation invariance
+    perm = rng.permutation(n)
+    f2 = float(M.f_measure(y[perm], p[perm], k))
+    assert f == pytest.approx(f2, abs=1e-6)
+
+
+@given(seed=st.integers(0, 10_000), frac=st.floats(0.01, 0.9))
+@settings(**_settings)
+def test_topk_sparsify_property(seed, frac):
+    key = jax.random.PRNGKey(seed)
+    delta = {"x": jax.random.normal(key, (257,))}
+    sparse, resid = cp.topk_sparsify(delta, frac)
+    np.testing.assert_allclose(np.asarray(sparse["x"] + resid["x"]),
+                               np.asarray(delta["x"]), rtol=1e-6, atol=1e-7)
+    k = max(1, int(round(257 * frac)))
+    # ties can keep a couple extra entries; never fewer than k
+    assert k <= int(jnp.sum(sparse["x"] != 0)) <= k + 2
+
+
+@given(seed=st.integers(0, 1000), L=st.integers(2, 8))
+@settings(**_settings)
+def test_consensus_permutation_invariance(seed, L):
+    key = jax.random.PRNGKey(seed)
+    models = {"W": jax.random.normal(key, (L, 3, 5))}
+    mean1 = agg.consensus_mean(models)
+    perm = jax.random.permutation(jax.random.fold_in(key, 1), L)
+    mean2 = agg.consensus_mean({"W": models["W"][perm]})
+    np.testing.assert_allclose(np.asarray(mean1["W"]),
+                               np.asarray(mean2["W"]), rtol=1e-5, atol=1e-6)
+
+
+@given(alpha=st.floats(0.0, 1.0), seed=st.integers(0, 1000))
+@settings(**_settings)
+def test_ema_merge_convexity(alpha, seed):
+    key = jax.random.PRNGKey(seed)
+    a = jax.random.normal(key, (7,))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (7,))
+    m = agg.ema_merge(a, b, alpha)
+    lo = jnp.minimum(a, b) - 1e-6
+    hi = jnp.maximum(a, b) + 1e-6
+    assert bool(jnp.all((m >= lo) & (m <= hi)))
+
+
+@given(seed=st.integers(0, 500), kappa=st.integers(1, 10))
+@settings(max_examples=10, deadline=None)
+def test_greedytl_support_property(seed, kappa):
+    """Selected indices are unique, within range, and the coefficient
+    support is contained in the selected set."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    m, d, L = 40, 8, 2
+    X = jax.random.normal(ks[0], (m, d))
+    y = jnp.sign(jax.random.normal(ks[1], (m,)))
+    H = jax.random.normal(ks[2], (m, L)) * 0.3
+    mdl = GT.greedytl_fit(X, y, H, kappa=kappa, lam=0.5)
+    n = d + 1 + L
+    sel = np.asarray(mdl.selected)
+    assert len(np.unique(sel)) == min(kappa, n)
+    assert ((sel >= 0) & (sel < n)).all()
+    support = np.nonzero(np.asarray(mdl.coef))[0]
+    assert set(support) <= set(sel.tolist())
+
+
+@given(seed=st.integers(0, 500), L=st.integers(2, 6),
+       frac=st.floats(0.2, 0.8))
+@settings(max_examples=10, deadline=None)
+def test_malicious1_marks_exact_fraction(seed, L, frac):
+    from repro.core.corruption import corrupt_malicious1
+
+    key = jax.random.PRNGKey(seed)
+    models = {"W": jax.random.normal(key, (L, 4))}
+    _, bad = corrupt_malicious1(key, models, frac)
+    assert int(bad.sum()) == int(round(frac * L))

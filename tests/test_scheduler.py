@@ -1,0 +1,68 @@
+"""Continuous-batching scheduler: correctness + slot reuse."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import params as Pm
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("qwen3_0_6b")
+    params, _ = Pm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_all_requests_complete(setup):
+    cfg, params = setup
+    eng = ContinuousBatcher(cfg, params, n_slots=2, capacity=64)
+    reqs = [Request(rid=i, prompt=[1 + i, 2 + i, 3], max_new=4 + i % 3)
+            for i in range(5)]
+    eng.submit(reqs)
+    done, steps = eng.run()
+    assert len(done) == 5
+    by_rid = {c.rid: c for c in done}
+    for r in reqs:
+        assert len(by_rid[r.rid].tokens) == r.max_new
+    # more requests than slots => slots were reused
+    assert steps < sum(len(r.prompt) + r.max_new for r in reqs)
+
+
+def test_matches_unbatched_decode(setup):
+    """A scheduled sequence must produce exactly the tokens that a plain
+    one-sequence greedy decode produces."""
+    from repro.serving import greedy_generate, init_cache, make_serve_step
+
+    cfg, params = setup
+    prompt = [5, 9, 2, 7]
+    max_new = 6
+
+    # reference: feed prompt through decode, then greedy-generate
+    serve = jax.jit(make_serve_step(cfg))
+    cache = init_cache(cfg, 1, 64, pos=0, dtype=jnp.float32)
+    for t in prompt[:-1]:
+        _, cache = serve(params, cache, jnp.asarray([[t]], jnp.int32))
+    ref = np.asarray(greedy_generate(
+        cfg, params, cache, jnp.asarray([[prompt[-1]]], jnp.int32),
+        max_new))[0]
+
+    eng = ContinuousBatcher(cfg, params, n_slots=3, capacity=64)
+    # surround the probe with other traffic to exercise slot independence
+    eng.submit([Request(rid=0, prompt=[1, 2], max_new=3),
+                Request(rid=1, prompt=prompt, max_new=max_new),
+                Request(rid=2, prompt=[8, 8, 8], max_new=5)])
+    done, _ = eng.run()
+    got = [c for c in done if c.rid == 1][0].tokens
+    np.testing.assert_array_equal(np.asarray(got), ref)
+
+
+def test_utilization_reported(setup):
+    cfg, params = setup
+    eng = ContinuousBatcher(cfg, params, n_slots=2, capacity=64)
+    eng.submit([Request(rid=i, prompt=[1, 2], max_new=3) for i in range(4)])
+    done, steps = eng.run()
+    u = eng.utilization(steps)
+    assert 0.1 < u <= 1.0

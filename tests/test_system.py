@@ -1,0 +1,78 @@
+"""End-to-end behaviour: the paper's headline claims on a reduced scenario,
+plus the framework-side GTL training loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.experiment import run_scenario
+
+
+@pytest.fixture(scope="module")
+def balanced():
+    return run_scenario("mnist_balanced", seed=1, n_samples=5000,
+                        kappa=48, svm_steps=300)
+
+
+def test_distributed_matches_cloud_balanced(balanced):
+    """Headline claim: distributed learning ~ Cloud accuracy (Sec 6.3)."""
+    r = balanced
+    best_dist = max(r.f_gtl4_mu, r.f_nohtl_mu)
+    assert best_dist >= r.f_cloud - 0.03
+
+
+def test_nohtl_sufficient_when_balanced(balanced):
+    """On balanced data noHTL is already ~ GTL (paper: transfer may even
+    overfit slightly)."""
+    r = balanced
+    assert r.f_nohtl_mu >= r.f_gtl4_mu - 0.03
+
+
+def test_overhead_gain_positive(balanced):
+    # reduced-size scenario (n=5000): model traffic is constant while data
+    # traffic scales with N (Fig. 11c), so GTL's gain can be negative at
+    # tiny N — assert noHTL here, and GTL's gain at the paper's N=70000
+    # with the SAME measured d0/d1
+    g = balanced.overhead.gains()
+    assert g["gain_nohtl_mu"] > 0.8
+    rep = balanced.overhead
+    rep70 = type(rep)(s=rep.s, k=rep.k, d0=rep.d0, d1=rep.d1,
+                      n_samples=70_000, d_point=rep.d_point)
+    assert rep70.gains()["gain_gtl"] > 0.75  # paper: 83%
+
+
+def test_node_unbalance_rebalanced():
+    """Sec 6.5: with node unbalance, distributed learning re-balances class
+    representation — aggregates gain hugely over local models."""
+    r = run_scenario("mnist_node_unbalanced", seed=2, n_samples=5000,
+                     kappa=48, svm_steps=300)
+    assert r.f_gtl4_mu > r.f_local.mean() + 0.2
+    assert r.f_nohtl_mu > r.f_local.mean() + 0.2
+    ppg = r.ppg()
+    assert np.mean(ppg["gtl4_mu"]) > 0.4
+
+
+def test_crosspod_training_end_to_end():
+    """Framework side: local-SGD + GTL sync trains and syncs converge."""
+    from repro.configs import get_smoke_config
+    from repro.core import crosspod as cp
+    from repro.data.lm import SyntheticLM
+    from repro.training import optimizer as O
+    from repro.training import train_step as TS
+
+    cfg = get_smoke_config("qwen3_0_6b")
+    opt = O.adamw(lr=3e-3)
+    state = TS.init_crosspod_train_state(jax.random.PRNGKey(0), cfg, opt, 2)
+    step = jax.jit(TS.make_crosspod_train_step(cfg, opt))
+    sync = jax.jit(TS.make_sync_step(cfg, cp.SyncConfig(mode="consensus")))
+    data = SyntheticLM(cfg.vocab_size, n_pods=2, pod_skew=0.2, noise=0.05)
+    first = last = None
+    for i in range(10):
+        state, m = step(state, data.pod_batches(i, 2, 64))
+        loss = float(jnp.mean(m["loss"]))
+        first = first if first is not None else loss
+        last = loss
+        if (i + 1) % 5 == 0:
+            state, _ = sync(state)
+    assert last < first
+    assert int(state.cross.syncs) == 2

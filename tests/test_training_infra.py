@@ -1,0 +1,95 @@
+"""Optimizer, checkpointing, aggregation, dynamic scenario."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation as agg
+from repro.training import checkpoint as ckpt
+from repro.training import optimizer as O
+
+
+def _quadratic_losses(optimizer, steps=60):
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros((3,))}
+    state = optimizer.init(params)
+    losses = []
+    for _ in range(steps):
+        grads = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        params, state = optimizer.update(grads, state, params)
+        losses.append(float(jnp.sum((params["w"] - target) ** 2)))
+    return losses
+
+
+def test_adamw_converges():
+    losses = _quadratic_losses(O.adamw(lr=0.1, weight_decay=0.0))
+    assert losses[-1] < 0.05 * losses[0]
+
+
+def test_sgd_converges():
+    losses = _quadratic_losses(O.sgd(lr=0.05))
+    assert losses[-1] < 0.05 * losses[0]
+
+
+def test_weight_decay_shrinks():
+    opt = O.adamw(lr=0.01, weight_decay=1.0)
+    params = {"w": jnp.ones((4,))}
+    state = opt.init(params)
+    zero_grads = {"w": jnp.zeros((4,))}
+    for _ in range(20):
+        params, state = opt.update(zero_grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 1.0
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = O.clip_by_global_norm(grads, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "layers": {"w": jnp.arange(6.0).reshape(2, 3),
+                   "b": jnp.ones((3,), jnp.bfloat16)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+    path = str(tmp_path / "ck.npz")
+    ckpt.save_checkpoint(path, tree, step=7)
+    restored = ckpt.load_checkpoint(path, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+    assert ckpt.checkpoint_step(path) == 7
+
+
+def test_majority_vote():
+    preds = jnp.asarray([[0, 1], [0, 2], [1, 2], [2, 2]])
+    out = agg.majority_vote(preds, 3)
+    np.testing.assert_array_equal(np.asarray(out), [0, 2])
+
+
+def test_dynamic_scenario_converges():
+    """Section 10: arrivals converge toward the static baseline."""
+    from repro.core.dynamic import run_dynamic_gtl, run_dynamic_nohtl
+    from repro.core.experiment import make_scenario
+    from repro.core.gtl import predict_linear
+    from repro.training import metrics as M
+
+    shards, (Xte, yte), spec = make_scenario("mnist_balanced", 0, 4000)
+    k = spec.n_classes
+
+    def eval_fn(model):
+        return float(M.f_measure(yte, predict_linear(model, Xte), k))
+
+    _, evals = run_dynamic_gtl(jax.random.PRNGKey(0), shards, k,
+                               arrivals_per_phase=4, alpha=0.5,
+                               kappa=32, eval_fn=eval_fn)
+    assert evals[-1] > evals[0] - 0.02
+    assert evals[-1] > 0.8
+    _, evals_nh = run_dynamic_nohtl(shards, k, arrivals_per_phase=4,
+                                    alpha=0.5, eval_fn=eval_fn)
+    assert evals_nh[-1] > 0.8

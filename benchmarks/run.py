@@ -11,7 +11,7 @@ import time
 import traceback
 
 SUITES = ("prediction", "malicious", "overhead", "aggregators", "dynamic",
-          "kernels", "crosspod", "roofline")
+          "kernels", "crosspod", "roofline", "serving")
 
 
 def main() -> None:

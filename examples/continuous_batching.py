@@ -2,7 +2,12 @@
 lengths and generation budgets flows through a fixed slot pool; finished
 slots are refilled immediately so the decode batch stays full.
 
-    PYTHONPATH=src python examples/continuous_batching.py --slots 3
+The fused engine drives the whole pool with ONE jitted dispatch per engine
+tick (stacked slot cache, per-slot positions, in-dispatch slot reset) and
+writes prompts with a chunked prefill fast path; pass --compare to also run
+the seed per-slot loop (one dispatch per active slot per tick).
+
+    PYTHONPATH=src python examples/continuous_batching.py --slots 3 --compare
 """
 import argparse
 import os
@@ -15,37 +20,59 @@ import jax
 import numpy as np
 
 
+def drive(eng, reqs, tag):
+    eng.submit(reqs)
+    t0 = time.time()
+    done, steps = eng.run()
+    dt = time.time() - t0
+    toks = sum(len(c.tokens) for c in done)
+    print(f"[{tag}] {len(done)} requests over {eng.n_slots} slots in "
+          f"{steps} engine ticks ({dt:.1f}s CPU, {toks / dt:.1f} tok/s), "
+          f"slot utilization {eng.utilization(steps):.0%}")
+    print(f"[{tag}] decode dispatches/tick: "
+          f"{eng.decode_dispatches / max(1, steps):.2f} "
+          f"(+{eng.prefill_dispatches} chunked-prefill dispatches)")
+    return done
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3_0_6b")
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--compare", action="store_true",
+                    help="also run the seed per-slot loop")
     args = ap.parse_args()
 
     from repro.configs import get_smoke_config
     from repro.models import params as Pm
-    from repro.serving import ContinuousBatcher, Request
+    from repro.serving import ContinuousBatcher, PerSlotBatcher, Request
 
     cfg = get_smoke_config(args.arch)
     params, _ = Pm.init_params(jax.random.PRNGKey(0), cfg)
-    eng = ContinuousBatcher(cfg, params, n_slots=args.slots, capacity=96)
 
-    rng = np.random.default_rng(0)
-    reqs = [Request(rid=i,
-                    prompt=rng.integers(1, cfg.vocab_size,
-                                        rng.integers(2, 10)).tolist(),
-                    max_new=int(rng.integers(3, 12)))
-            for i in range(args.requests)]
-    eng.submit(reqs)
-    t0 = time.time()
-    done, steps = eng.run()
-    dt = time.time() - t0
-    print(f"{len(done)} requests over {args.slots} slots in {steps} engine "
-          f"steps ({dt:.1f}s CPU), slot utilization "
-          f"{eng.utilization(steps):.0%}")
+    def workload():
+        rng = np.random.default_rng(0)
+        return [Request(rid=i,
+                        prompt=rng.integers(1, cfg.vocab_size,
+                                            rng.integers(2, 10)).tolist(),
+                        max_new=int(rng.integers(3, 12)))
+                for i in range(args.requests)]
+
+    eng = ContinuousBatcher(cfg, params, n_slots=args.slots, capacity=96)
+    done = drive(eng, workload(), "fused")
     for c in sorted(done, key=lambda c: c.rid)[:5]:
         print(f"  rid={c.rid} prompt_len={c.prompt_len} "
               f"-> {len(c.tokens)} tokens: {c.tokens[:6]}...")
+
+    if args.compare:
+        from repro.serving import completions_equivalent
+
+        ref = PerSlotBatcher(cfg, params, n_slots=args.slots, capacity=96)
+        ref_done = drive(ref, workload(), "per-slot")
+        same = completions_equivalent(done, ref_done)
+        print(f"completions token-for-token identical "
+              f"(up to argmax ties): {same}")
 
 
 if __name__ == "__main__":

@@ -1,8 +1,12 @@
 """Batched serving demo: KV-cache decode across architecture families.
 
-Decodes a batch of streams with three different state kinds — KV cache
+Part 1 decodes a lock-step batch with three different state kinds — KV cache
 (dense), ring-buffer window cache (sliding window), and O(1) recurrent state
-(RWKV6) — and reports per-token latency on CPU.
+(RWKV6) — plus 4-codebook audio, and reports per-token latency on CPU.
+
+Part 2 runs the fused slot-batched continuous-batching engine (one jitted
+dispatch per tick, chunked prefill, in-dispatch slot reset) over the text
+architectures with a mixed request stream.
 
     PYTHONPATH=src python examples/serve_demo.py --gen 24
 """
@@ -15,17 +19,21 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--gen", type=int, default=24)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
     args = ap.parse_args()
 
     from repro.configs import get_smoke_config
     from repro.models import params as Pm
-    from repro.serving import greedy_generate, init_cache, make_serve_step
+    from repro.serving import (ContinuousBatcher, Request, greedy_generate,
+                               init_cache)
 
     cases = [
         ("qwen3_0_6b", {}, "dense KV cache"),
@@ -33,11 +41,14 @@ def main():
         ("rwkv6_7b", {}, "O(1) recurrent state"),
         ("musicgen_medium", {}, "4-codebook audio decode"),
     ]
+    all_params = {}
+    print("== lock-step batched greedy decode ==")
     for arch, over, desc in cases:
         cfg = get_smoke_config(arch)
         if over:
             cfg = cfg.replace(**over)
         params, _ = Pm.init_params(jax.random.PRNGKey(0), cfg)
+        all_params[arch] = (cfg, params)
         B = args.batch
         cap = cfg.sliding_window or 128
         cache = init_cache(cfg, B, cap, pos=0, dtype=jnp.float32)
@@ -53,6 +64,29 @@ def main():
         print(f"{arch:20s} [{desc:24s}] batch={B} gen={args.gen} "
               f"-> {dt:6.1f} ms/token (CPU)")
         print(f"  sample: {jax.device_get(out)[0].tolist()[:8]}")
+
+    print("\n== fused continuous batching (1 dispatch/tick) ==")
+    rng = np.random.default_rng(0)
+    for arch, over, desc in cases:
+        cfg, params = all_params[arch]
+        if cfg.num_codebooks > 1:
+            continue  # the slot engine covers text archs
+        eng = ContinuousBatcher(cfg, params, n_slots=args.slots, capacity=64)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(1, cfg.vocab_size,
+                                            rng.integers(2, 10)).tolist(),
+                        max_new=int(rng.integers(4, 12)))
+                for i in range(args.requests)]
+        eng.submit(reqs)
+        t0 = time.time()
+        done, steps = eng.run()
+        dt = time.time() - t0
+        toks = sum(len(c.tokens) for c in done)
+        print(f"{arch:20s} [{desc:24s}] slots={args.slots} "
+              f"{len(done)} reqs, {toks} tokens in {steps} ticks "
+              f"({toks / dt:6.1f} tok/s, "
+              f"{eng.decode_dispatches / max(1, steps):.2f} dispatch/tick, "
+              f"+{eng.prefill_dispatches} prefill)")
 
 
 if __name__ == "__main__":

@@ -61,15 +61,18 @@ def consensus_sync(podded_params):
 
 
 def topk_sparsify(delta, frac: float):
-    """Keep the top-`frac` magnitude entries of every leaf; returns
-    (sparse_delta, residual) — residual feeds error feedback."""
+    """Keep exactly round(n * frac) top-magnitude entries of every leaf (at
+    least 1); returns (sparse_delta, residual) — residual feeds error
+    feedback.  Selection is by top-k *indices*, not a magnitude threshold:
+    a threshold keeps every entry tying it, so the exchanged-traffic
+    accounting (`crosspod_overhead_bytes`) would under-report."""
     def one(a):
         n = a.size
         k = max(1, int(round(n * frac)))
         flat = a.reshape(-1)
-        thresh = jax.lax.top_k(jnp.abs(flat.astype(jnp.float32)), k)[0][-1]
-        mask = jnp.abs(flat.astype(jnp.float32)) >= thresh
-        sparse = jnp.where(mask, flat, 0).reshape(a.shape)
+        _, idx = jax.lax.top_k(jnp.abs(flat.astype(jnp.float32)), k)
+        sparse = (jnp.zeros_like(flat).at[idx].set(flat[idx])
+                  .reshape(a.shape))
         return sparse, (a - sparse).astype(a.dtype)
 
     out = jax.tree.map(one, delta)

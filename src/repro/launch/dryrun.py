@@ -205,7 +205,10 @@ def run_combo(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
                                       rules=rules, zero1=zero1)
             with mesh:
                 compiled = jax.jit(fn).lower(*args).compile()
-            cost = compiled.cost_analysis() or {}
+            cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):  # older jax: per-device list
+                cost = cost[0] if cost else {}
+            cost = cost or {}
             coll = RL.collective_bytes(compiled.as_text())
             return compiled, cost, coll
 

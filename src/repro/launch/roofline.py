@@ -70,12 +70,13 @@ def collective_bytes(hlo_text: str) -> dict:
             continue
         if op.endswith("-done"):
             continue  # counted at -start
-        n = 0
-        for a in args.split(","):
-            a = a.strip().lstrip("%")
-            a = a.split(" ")[0]
-            if a in sizes:
-                n += sizes[a]
+        # operand lists are typed in recent HLO text ("f32[8,64]{1,0} %x");
+        # sum the operand types directly, falling back to the symbol table
+        # for untyped "%x"-style references from older dumps
+        n = _type_bytes(args)
+        if n == 0:
+            for name in re.findall(r"%?([\w.\-]+)", args):
+                n += sizes.get(name, 0)
         out[base] += n
         counts[base] += 1
     out["total"] = sum(out[k] for k in COLLECTIVES)

@@ -163,8 +163,10 @@ def attention_block(p, x, cfg: ModelConfig, *, positions=None, cache=None,
     """GQA attention with RoPE/M-RoPE, qk-norm, bias, window/chunk masking.
 
     cache: None for training (full self-attention over x), else a dict
-    {"k": (B, T, KV, hd), "v": ..., "pos": scalar int32 current length} for
-    single-token decode; returns (out, new_cache).
+    {"k": (B, T, KV, hd), "v": ..., "pos": int32 current length} for decode;
+    returns (out, new_cache).  "pos" is a scalar for a lock-step batch or a
+    (B,) vector of per-sequence positions (the slot-batched serving engine);
+    decode accepts S >= 1 tokens (chunked prefill writes a whole block).
     """
     B, S, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -212,10 +214,16 @@ def attention_block(p, x, cfg: ModelConfig, *, positions=None, cache=None,
             out = multi_head_attention(q, k, v, mask)
         new_cache = None
     else:
-        # single-token decode: S == 1; append to cache at cache["pos"].
-        pos = cache["pos"]  # scalar int32
+        # decode: append the S new tokens to the cache starting at
+        # cache["pos"] (scalar, or (B,) per-slot positions).  A multi-token
+        # block (chunked prefill) must not wrap the ring past entries its own
+        # earlier tokens still attend to — the serving engine caps block
+        # sizes so writes never evict live window entries.
+        pos = cache["pos"]
+        pos_b = jnp.broadcast_to(pos, (B,))
+        abs_pos = pos_b[:, None] + jnp.arange(S)[None, :]  # (B, S)
         if positions is None:
-            positions = jnp.broadcast_to(pos[None, None], (B, 1))
+            positions = abs_pos
         if cfg.mrope:
             pos3 = (positions if positions.ndim == 3 else
                     jnp.broadcast_to(positions[..., None],
@@ -227,26 +235,26 @@ def attention_block(p, x, cfg: ModelConfig, *, positions=None, cache=None,
         q = apply_rope(q, cos, sin)
         k = apply_rope(k, cos, sin)
         T = cache["k"].shape[1]
-        slot = pos % T  # ring-buffer write; capacity == window when windowed
+        slots = abs_pos % T  # ring-buffer writes; capacity == window when windowed
         kv_dtype = cache["k"].dtype  # may be narrower (kv_cache_dtype)
-        ck = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(kv_dtype), slot, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(kv_dtype), slot, axis=1)
-        # absolute position held by ring slot i after the write: the largest
-        # value congruent to i (mod T) that is <= pos.  For a non-ring cache
-        # (pos < T) this reduces to k_pos = i for i <= pos, invalid beyond.
+        b_idx = jnp.arange(B)[:, None]
+        ck = cache["k"].at[b_idx, slots].set(k.astype(kv_dtype))
+        cv = cache["v"].at[b_idx, slots].set(v.astype(kv_dtype))
+        # absolute position held by ring slot i after the writes: the largest
+        # value congruent to i (mod T) that is <= the last written position.
+        # For a non-ring cache (last < T) this reduces to k_pos = i for
+        # i <= last, invalid beyond.
+        last = abs_pos[:, -1]  # (B,)
         idx = jnp.arange(T)
-        k_pos = pos - ((slot - idx) % T)
+        k_pos = last[:, None] - ((last[:, None] - idx[None, :]) % T)  # (B, T)
         valid = k_pos >= 0
         q_pos = positions[..., 0] if positions.ndim == 3 else positions
-        mask = _attn_mask(q_pos, jnp.broadcast_to(k_pos[None, :], (B, T)),
-                          cfg.sliding_window, cfg.chunked_attention,
-                          chunk_on=layer_chunked)
-        mask &= valid[None, None, :]
+        mask = _attn_mask(q_pos, k_pos, cfg.sliding_window,
+                          cfg.chunked_attention, chunk_on=layer_chunked)
+        mask &= valid[:, None, :]
         out = multi_head_attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
                                    mask, dtype=q.dtype)
-        new_cache = {"k": ck, "v": cv, "pos": pos + 1}
+        new_cache = {"k": ck, "v": cv, "pos": pos + S}
 
     out = out.reshape(B, S, H * hd) @ p["wo"]
     return out, new_cache

@@ -175,10 +175,15 @@ def mamba2_block(p, x, cfg: ModelConfig, state=None, use_pallas=False):
     if state is None:
         y, new_ssm = gla_chunked(q, k, v, ld, use_pallas=use_pallas)
         y = y.astype(xs.dtype) + xs * d_skip
-    else:
+    elif S == 1:
         yt, new_ssm = gla_decode_step(state["ssm"], q[:, 0], k[:, 0],
                                       v[:, 0], ld[:, 0])
         y = yt[:, None].astype(xs.dtype) + xs * d_skip
+    else:
+        # chunked prefill: a block of prompt tokens against carried state
+        y, new_ssm = gla_chunked(q, k, v, ld, state=state["ssm"],
+                                 use_pallas=use_pallas)
+        y = y.astype(xs.dtype) + xs * d_skip
 
     y = y.reshape(B, S, di)
     y = rms_norm_gated(y, z, p["norm_g"], cfg.norm_eps)
@@ -238,10 +243,14 @@ def rwkv6_timemix(p, x, cfg: ModelConfig, state=None, use_pallas=False):
 
     if state is None:
         y, new_wkv = gla_chunked(rh, kh, vh, ldh, u=u, use_pallas=use_pallas)
-    else:
+    elif S == 1:
         yt, new_wkv = gla_decode_step(state["wkv"], rh[:, 0], kh[:, 0],
                                       vh[:, 0], ldh[:, 0], u=u)
         y = yt[:, None]
+    else:
+        # chunked prefill: a block of prompt tokens against carried state
+        y, new_wkv = gla_chunked(rh, kh, vh, ldh, u=u, state=state["wkv"],
+                                 use_pallas=use_pallas)
 
     # per-head group norm, then output gate
     y = y.reshape(B, S, H, hd)

@@ -3,8 +3,11 @@ assigned architecture family.
 
 - training forward: full-sequence, lax.scan over stacked layer params with
   optional remat (activation checkpointing);
-- decode forward: single new token against per-layer KV caches / SSM states
-  (see repro.serving for cache construction);
+- decode forward: new tokens against per-layer KV caches / SSM states (see
+  repro.serving for cache construction).  cache["pos"] may be a scalar
+  (lock-step batch) or a (B,) vector of per-sequence positions — the
+  slot-batched serving engine; S > 1 is the chunked-prefill path, which
+  writes a whole block of prompt tokens into the cache in one call;
 - hybrid (zamba2): nested scan — groups of Mamba2 layers, with one *shared*
   attention block (single param copy) applied after every group;
 - modality frontends are stubs per the assignment: VLM patch embeddings and
@@ -155,7 +158,7 @@ def _scan_or_loop(body, carry, xs, use_scan: bool):
 
 def forward(params, cfg: ModelConfig, tokens, *, patch_embeds=None,
             positions=None, cache=None, use_pallas: bool = False) -> ForwardOut:
-    """Training (cache=None, full sequence) or decode (cache set, S==1)."""
+    """Training (cache=None, full sequence) or decode (cache set, S>=1)."""
     h = embed_inputs(params, cfg, tokens, patch_embeds)
     B, S = h.shape[:2]
     if cfg.mrope and positions is None and cache is None:
@@ -163,6 +166,12 @@ def forward(params, cfg: ModelConfig, tokens, *, patch_embeds=None,
 
     decode = cache is not None
     pos_scalar = None if not decode else cache["pos"]
+    if decode and cfg.mrope:
+        # decode M-RoPE: text positions advance all three components
+        p1 = (jnp.broadcast_to(pos_scalar, (B,))[:, None]
+              + jnp.arange(S)[None, :])
+        decode_pos3 = jnp.broadcast_to(p1[..., None],
+                                       (B, S, 3)).astype(jnp.int32)
 
     def body_fn(carry, xs):
         h, aux = carry
@@ -172,8 +181,7 @@ def forward(params, cfg: ModelConfig, tokens, *, patch_embeds=None,
         elif cfg.block_kind == "attention":
             cache_l = dict(cache_l, pos=pos_scalar)
         if decode and cfg.mrope:
-            pos_l = jnp.broadcast_to(pos_scalar[None, None, None],
-                                     (B, 1, 3)).astype(jnp.int32)
+            pos_l = decode_pos3
         else:
             pos_l = positions
         h, new_cache_l, aux_l = _block(
@@ -246,7 +254,7 @@ def forward(params, cfg: ModelConfig, tokens, *, patch_embeds=None,
 
     new_cache = None
     if decode:
-        new_cache = {"layers": new_layer_caches, "pos": pos_scalar + 1}
+        new_cache = {"layers": new_layer_caches, "pos": pos_scalar + S}
         if new_shared is not None:
             new_cache["shared"] = new_shared
     return ForwardOut(logits=logits, cache=new_cache, aux_loss=aux)

@@ -1,11 +1,21 @@
-from repro.serving.kvcache import init_cache, cache_bytes  # noqa: F401
+from repro.serving.kvcache import (  # noqa: F401
+    init_cache,
+    cache_bytes,
+    reset_slots,
+    slot_slice,
+    slot_update,
+)
 from repro.serving.serve_step import (  # noqa: F401
     make_serve_step,
     make_prefill_step,
+    make_engine_step,
+    make_slot_prefill_step,
     greedy_generate,
 )
 from repro.serving.scheduler import (  # noqa: F401
     ContinuousBatcher,
+    PerSlotBatcher,
     Request,
     Completion,
+    completions_equivalent,
 )

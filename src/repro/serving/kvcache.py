@@ -19,7 +19,7 @@ def attn_cache_shape(cfg: ModelConfig, batch: int, capacity: int):
     }
 
 
-def init_cache(cfg: ModelConfig, batch: int, capacity: int, pos: int = 0,
+def init_cache(cfg: ModelConfig, batch: int, capacity: int, pos=0,
                dtype=None):
     """Zero-initialised decode state for `batch` sequences.
 
@@ -27,8 +27,10 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int, pos: int = 0,
     attention; ignored by recurrent blocks, whose state is O(1)).
     `pos` sets the current length (dry-run uses pos = seq_len - 1: a cache
     that already holds the whole context, as in the decode_32k / long_500k
-    shapes).  KV tensors use cfg.kv_cache_dtype when set (e.g.
-    float8_e4m3fn halves decode cache bandwidth)."""
+    shapes); it may be an int (lock-step batch) or a (batch,) vector of
+    per-sequence positions (the slot-batched serving engine).  KV tensors
+    use cfg.kv_cache_dtype when set (e.g. float8_e4m3fn halves decode cache
+    bandwidth)."""
     dtype = dtype or jnp.dtype(cfg.dtype)
     kv_dtype = jnp.dtype(cfg.kv_cache_dtype) if cfg.kv_cache_dtype else dtype
     L = cfg.n_layers
@@ -82,3 +84,70 @@ def cache_bytes(cfg: ModelConfig, batch: int, capacity: int) -> int:
     cache = jax.eval_shape(lambda: init_cache(cfg, batch, capacity))
     return sum(int(jnp.prod(jnp.asarray(l.shape)) * l.dtype.itemsize)
                for l in jax.tree.leaves(cache))
+
+
+# ------------------------------------------------------------- slot ops
+#
+# The slot-batched serving engine holds ONE stacked cache whose batch axis
+# is the slot pool.  These helpers address a single slot's lanes inside the
+# stacked tree (the batch axis sits at a different depth per leaf because
+# layer/group axes are stacked in front of it).
+
+
+def cache_batch_axes(cfg: ModelConfig, cache):
+    """Pytree matching `cache` whose leaves are the batch-axis index.
+
+    Mirrors the layout built by init_cache (kept adjacent on purpose) and
+    self-checks against it: jax.tree.map raises on any structure drift, and
+    the batch-dim assertion below catches a leaf whose axis position moved.
+    """
+    if cfg.block_kind == "attention":
+        layers = {"k": 1, "v": 1}
+    elif cfg.block_kind == "rwkv6":
+        layers = {"tm": {"shift": 1, "wkv": 1}, "cm": 1}
+    elif cfg.block_kind == "mamba2":
+        layers = {"ssm": 1, "conv": 1}
+    elif cfg.block_kind == "hybrid":
+        layers = {"mamba": {"ssm": 2, "conv": 2}}
+    else:
+        raise ValueError(cfg.block_kind)
+    axes = {"layers": layers, "pos": 0}
+    if "shared" in cache:
+        axes["shared"] = {"k": 1, "v": 1}
+    batch = jnp.shape(cache["pos"])
+    if batch:  # vector pos: every leaf must carry batch at its named axis
+
+        def check(ax, a):
+            assert a.shape[ax] == batch[0], (
+                f"cache leaf {a.shape} has no batch dim {batch[0]} at axis "
+                f"{ax} — cache_batch_axes is out of sync with init_cache")
+
+        jax.tree.map(check, axes, cache)
+    return axes
+
+
+def slot_slice(cfg: ModelConfig, cache, slot):
+    """Batch-1 cache holding slot `slot`'s lanes (jit-safe, traced index)."""
+    return jax.tree.map(
+        lambda ax, a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=ax),
+        cache_batch_axes(cfg, cache), cache)
+
+
+def slot_update(cfg: ModelConfig, cache, slot, sub):
+    """Write a batch-1 cache `sub` back into slot `slot` of `cache`."""
+    return jax.tree.map(
+        lambda ax, a, s: jax.lax.dynamic_update_slice_in_dim(
+            a, s.astype(a.dtype), slot, axis=ax),
+        cache_batch_axes(cfg, cache), cache, sub)
+
+
+def reset_slots(cfg: ModelConfig, cache, mask):
+    """Zero the lanes (state and position) of every slot where mask is True.
+
+    mask: (batch,) bool.  Runs inside the jitted engine step, so a slot
+    refill costs no host-side re-init or extra dispatch."""
+    def one(ax, a):
+        m = mask.reshape((1,) * ax + (-1,) + (1,) * (a.ndim - ax - 1))
+        return jnp.where(m, jnp.zeros((), a.dtype), a)
+
+    return jax.tree.map(one, cache_batch_axes(cfg, cache), cache)

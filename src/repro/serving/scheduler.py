@@ -1,28 +1,39 @@
-"""Continuous-batching serving scheduler.
+"""Continuous-batching serving scheduler, fused into a slot-batched engine.
 
 Production serving substrate: a fixed pool of `n_slots` decode lanes over
-one shared ring KV cache (or recurrent state).  Requests arrive with
-different prompt lengths and generation budgets; free slots are refilled as
-sequences finish, so the batch stays full (vLLM-style continuous batching,
-sized down to the framework's single-token decode step).
+ONE stacked KV cache / recurrent state with a slot axis.  Requests arrive
+with different prompt lengths and generation budgets; free slots are
+refilled as sequences finish, so the batch stays full (vLLM-style
+continuous batching, sized down to the framework's decode step).
 
-Engine-level semantics (host-driven; the device step stays a single jitted
-`serve_step` over the whole pool):
+Engine-level semantics (`ContinuousBatcher`, the fused engine):
 
-  - every slot holds an independent sequence with its own position counter
-    (`pos` per slot — the decode path uses per-slot positions);
-  - prompt tokens are fed through the same decode path (prefill-by-decoding;
-    the prefill-to-cache fast path is an acknowledged future lever);
-  - a finished slot's state is reset by zeroing its cache lanes.
+  - every slot holds an independent sequence with its own position counter:
+    the stacked cache carries a vector `pos` (one int32 per slot) and the
+    model decode path consumes it natively — one jitted dispatch advances
+    the WHOLE pool by one token per engine tick, independent of n_slots;
+  - a finished slot's lanes are reset by index inside the same dispatch
+    (`reset_slots` fused into the engine step — no host-side re-init_cache
+    on refill);
+  - prompt tokens take a chunked prefill fast path: blocks of prompt tokens
+    are written into the slot's cache lanes in one call each
+    (`make_slot_prefill_step`), instead of being decoded one at a time.
+    Block sizes are power-of-two bucketed (bounded set of compiled shapes)
+    and capped so a block never wraps a ring cache past entries its own
+    earlier tokens still attend to; past the ring boundary prefill falls
+    back to exact token-by-token feeding.
 
-Per-slot positions require a vector `pos`: this module wraps the model's
-scalar-pos decode step with a per-slot vmap (slot-batched params broadcast),
-which XLA fuses back into one batched program.
+`PerSlotBatcher` keeps the seed engine — one jitted batch-1 call per active
+slot per tick — as the equivalence baseline and the bench's "before" side.
+Both engines share intake, accounting and completion semantics: a sequence
+(prompt + completion) occupies at most `capacity` cache entries, empty
+prompts are rejected unless a `bos_token` is configured, and decoding is
+greedy.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Iterable
+from typing import Iterable
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +41,8 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
-from repro.serving.kvcache import init_cache
+from repro.serving.kvcache import attn_cache_shape, init_cache
+from repro.serving.serve_step import make_engine_step, make_slot_prefill_step
 
 
 @dataclasses.dataclass
@@ -45,21 +57,239 @@ class Completion:
     rid: int
     tokens: list
     prompt_len: int
+    # top1-top2 logit gap per emitted token: near-zero entries mark
+    # numerical argmax ties, where differently-compiled variants of the
+    # same math (fused vs per-slot, chunked vs per-token prefill) may
+    # legitimately emit different tokens
+    margins: list = dataclasses.field(default_factory=list)
 
 
-class ContinuousBatcher:
-    """Host-side continuous batching over a slot pool."""
+def completions_equivalent(a, b, tie_tol: float = 1e-3) -> bool:
+    """Token-for-token equality of two completion sets, tolerating argmax
+    ties: sequences may first diverge only at a step whose margin (in
+    either engine) is below `tie_tol`; past a tie the greedy trajectories
+    legitimately separate, so comparison stops for that sequence."""
+    by_a = {c.rid: c for c in a}
+    by_b = {c.rid: c for c in b}
+    if set(by_a) != set(by_b):
+        return False
+    for rid, ca in by_a.items():
+        cb = by_b[rid]
+        if ca.prompt_len != cb.prompt_len:
+            return False
+        for i, (ta, tb) in enumerate(zip(ca.tokens, cb.tokens)):
+            if ta != tb:
+                ma = ca.margins[i] if i < len(ca.margins) else float("inf")
+                mb = cb.margins[i] if i < len(cb.margins) else float("inf")
+                if min(ma, mb) > tie_tol:
+                    return False
+                break  # diverged at a tie — trajectories separate here
+        else:
+            if len(ca.tokens) != len(cb.tokens):
+                return False
+    return True
+
+
+class _BatcherBase:
+    """Shared intake / accounting / loop for both engines."""
 
     def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
-                 capacity: int = 256, greedy: bool = True):
-        assert cfg.num_codebooks == 1, "scheduler demo covers text archs"
+                 capacity: int = 256, greedy: bool = True,
+                 bos_token: int | None = None):
+        assert cfg.num_codebooks == 1, "scheduler covers text archs"
+        assert greedy, "only greedy decoding is implemented"
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.capacity = capacity
+        self.bos_token = bos_token
+        self.slot_req: list = [None] * n_slots     # active Request per slot
+        self.slot_state: list = [None] * n_slots   # {"emitted", "fed"}
+        self.queue: list = []
+        self.done: list = []
+        self.active_slot_steps = 0
+        self.decode_dispatches = 0    # jitted decode calls
+        self.prefill_dispatches = 0   # jitted prefill-block calls
+
+    # ------------------------------------------------------------- intake
+
+    def submit(self, reqs: Iterable[Request]):
+        accepted = []
+        for req in reqs:
+            if not req.prompt:
+                if self.bos_token is None:
+                    raise ValueError(
+                        f"request {req.rid}: empty prompt — configure "
+                        "bos_token to decode from BOS, or send >= 1 token "
+                        "(the engine never fabricates a token)")
+                req = dataclasses.replace(req, prompt=[self.bos_token])
+            if len(req.prompt) >= self.capacity:
+                raise ValueError(
+                    f"request {req.rid}: prompt of {len(req.prompt)} tokens "
+                    f"leaves no room to generate within capacity "
+                    f"{self.capacity}")
+            if req.max_new < 1:
+                raise ValueError(f"request {req.rid}: max_new must be >= 1")
+            accepted.append(req)
+        # atomic: a batch with an invalid request enqueues nothing
+        self.queue.extend(accepted)
+
+    def _budget(self, req: Request) -> int:
+        """Tokens this request may emit: the whole sequence (prompt +
+        completion) must fit in `capacity` cache entries."""
+        return min(req.max_new, self.capacity - len(req.prompt))
+
+    def _finish_if_done(self, s: int):
+        req, st = self.slot_req[s], self.slot_state[s]
+        if len(st["emitted"]) >= self._budget(req):
+            self.done.append(Completion(
+                rid=req.rid, tokens=list(st["emitted"]),
+                prompt_len=len(req.prompt),
+                margins=list(st["margins"])))
+            self.slot_req[s] = None
+            self.slot_state[s] = None
+
+    # --------------------------------------------------------------- loop
+
+    def run(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.queue or any(r is not None for r in self.slot_req)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.done, steps
+
+    # ------------------------------------------------------------ metrics
+
+    def utilization(self, steps: int) -> float:
+        """Fraction of slot-steps that carried an active sequence."""
+        return self.active_slot_steps / max(1, steps * self.n_slots)
+
+
+class ContinuousBatcher(_BatcherBase):
+    """Fused slot-batched continuous batching: one jitted dispatch per
+    engine tick drives the whole slot pool (see module docstring)."""
+
+    def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
+                 capacity: int = 256, greedy: bool = True,
+                 bos_token: int | None = None, prefill_chunk: int = 16,
+                 prefill_mode: str = "chunked", use_pallas: bool = False):
+        super().__init__(cfg, params, n_slots, capacity, greedy, bos_token)
+        assert prefill_mode in ("chunked", "decode"), prefill_mode
+        self.prefill_mode = prefill_mode
+        self.prefill_chunk = max(1, prefill_chunk)
+        self.cache = init_cache(cfg, n_slots, capacity,
+                                pos=np.zeros((n_slots,), np.int32),
+                                dtype=jnp.float32)
+        # donate the pool cache: the host drops its reference at each
+        # reassignment, so XLA may update the (large) KV/SSM pool in place
+        # instead of copying it every tick
+        self._decode = jax.jit(make_engine_step(cfg, use_pallas),
+                               donate_argnums=1)
+        self._prefill = jax.jit(make_slot_prefill_step(cfg, use_pallas),
+                                donate_argnums=1)
+        self._reset_mask = np.zeros((n_slots,), bool)
+        # ring size of the attention cache (multi-token prefill blocks must
+        # not wrap it); None for pure-recurrent archs
+        self._ring_cap = None
+        if cfg.block_kind in ("attention", "hybrid"):
+            self._ring_cap = attn_cache_shape(cfg, 1, capacity)["k"][1]
+
+    # ------------------------------------------------------------- intake
+
+    def _fill_slots(self):
+        for s in range(self.n_slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slot_req[s] = req
+                self.slot_state[s] = {"emitted": [], "fed": 0,
+                                      "margins": []}
+                if self.prefill_mode == "chunked":
+                    self._prefill_slot(s, req)
+                else:
+                    # prompt will be fed through decode ticks; zero the
+                    # slot's lanes inside the next fused dispatch
+                    self._reset_mask[s] = True
+
+    def _chunk_size(self, pos: int, remaining: int) -> int:
+        """Prefill block size: <= prefill_chunk, power-of-two bucketed (so
+        the compiled-shape set stays O(log chunk)), and never wrapping a
+        ring cache — past the ring boundary blocks degrade to 1 token,
+        which is the exact seed-equivalent ring write."""
+        size = min(self.prefill_chunk, remaining)
+        if self._ring_cap is not None and pos + size > self._ring_cap:
+            size = self._ring_cap - pos if pos < self._ring_cap else 1
+        p = 1
+        while p * 2 <= size:
+            p *= 2
+        return p
+
+    def _prefill_slot(self, s: int, req: Request):
+        """Write the whole prompt into slot s's lanes in blocks; the last
+        block's logits give the first generated token."""
+        st = self.slot_state[s]
+        prompt = np.asarray(req.prompt, np.int32)
+        n, off, reset = len(prompt), 0, True
+        tok = margin = None
+        while off < n:
+            size = self._chunk_size(off, n - off)
+            tok, margin, self.cache = self._prefill(
+                self.params, self.cache, s,
+                jnp.asarray(prompt[None, off:off + size]), reset)
+            self.prefill_dispatches += 1
+            reset = False
+            off += size
+        st["fed"] = n
+        st["emitted"].append(int(tok))
+        st["margins"].append(float(margin))
+        self._finish_if_done(s)
+
+    # --------------------------------------------------------------- step
+
+    def step(self):
+        """One engine tick: a SINGLE fused dispatch advances every active
+        slot by one token (prompt feed in decode prefill mode, or
+        generated)."""
+        self._fill_slots()
+        active = [s for s in range(self.n_slots)
+                  if self.slot_req[s] is not None]
+        if not active:
+            return False
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        for s in active:
+            req, st = self.slot_req[s], self.slot_state[s]
+            if st["fed"] < len(req.prompt):
+                toks[s, 0] = req.prompt[st["fed"]]
+            else:
+                toks[s, 0] = st["emitted"][-1]
+        nxt, margins, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(toks),
+            jnp.asarray(self._reset_mask))
+        self.decode_dispatches += 1
+        self._reset_mask[:] = False
+        nxt, margins = np.asarray(nxt), np.asarray(margins)
+        self.active_slot_steps += len(active)
+        for s in active:
+            req, st = self.slot_req[s], self.slot_state[s]
+            st["fed"] += 1
+            if st["fed"] >= len(req.prompt):
+                st["emitted"].append(int(nxt[s]))
+                st["margins"].append(float(margins[s]))
+                self._finish_if_done(s)
+        return True
+
+
+class PerSlotBatcher(_BatcherBase):
+    """Seed engine: one jitted batch-1 decode call per active slot per tick
+    (n_slots dispatches/tick).  Kept as the equivalence baseline and the
+    bench's before-side; shares intake/accounting with the fused engine."""
+
+    def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
+                 capacity: int = 256, greedy: bool = True,
+                 bos_token: int | None = None):
+        super().__init__(cfg, params, n_slots, capacity, greedy, bos_token)
         # one single-sequence cache per slot => independent positions
-        self.caches = [init_cache(cfg, 1, capacity, pos=0,
-                                  dtype=jnp.float32)
+        self.caches = [init_cache(cfg, 1, capacity, pos=0, dtype=jnp.float32)
                        for _ in range(n_slots)]
 
         def slot_step(params, cache, tok):
@@ -67,27 +297,15 @@ class ContinuousBatcher:
             return out.logits[:, 0], out.cache
 
         self._step = jax.jit(slot_step)
-        self.slot_req: list = [None] * n_slots     # active Request per slot
-        self.slot_state: list = [None] * n_slots   # (emitted, next_tok)
-        self.queue: list = []
-        self.done: list = []
-        self.active_slot_steps = 0
-
-    # ------------------------------------------------------------- intake
-
-    def submit(self, reqs: Iterable[Request]):
-        self.queue.extend(reqs)
 
     def _fill_slots(self):
         for s in range(self.n_slots):
             if self.slot_req[s] is None and self.queue:
-                req = self.queue.pop(0)
-                self.slot_req[s] = req
+                self.slot_req[s] = self.queue.pop(0)
                 self.caches[s] = init_cache(self.cfg, 1, self.capacity,
                                             pos=0, dtype=jnp.float32)
-                self.slot_state[s] = {"emitted": [], "fed": 0}
-
-    # --------------------------------------------------------------- step
+                self.slot_state[s] = {"emitted": [], "fed": 0,
+                                      "margins": []}
 
     def step(self):
         """One engine step: each active slot consumes one token (prompt feed
@@ -103,36 +321,17 @@ class ContinuousBatcher:
             st = self.slot_state[s]
             if st["fed"] < len(req.prompt):
                 tok = int(req.prompt[st["fed"]])
-            elif st["emitted"]:
-                tok = st["emitted"][-1]
             else:
-                tok = 0
+                tok = st["emitted"][-1]
             logits, self.caches[s] = self._step(
                 self.params, self.caches[s],
                 jnp.asarray([[tok]], jnp.int32))
+            self.decode_dispatches += 1
             st["fed"] += 1
             if st["fed"] >= len(req.prompt):
-                nxt = int(jnp.argmax(logits[0]))
-                st["emitted"].append(nxt)
-                if len(st["emitted"]) >= req.max_new \
-                        or st["fed"] + len(st["emitted"]) >= self.capacity:
-                    self.done.append(Completion(
-                        rid=req.rid, tokens=list(st["emitted"]),
-                        prompt_len=len(req.prompt)))
-                    self.slot_req[s] = None
-                    self.slot_state[s] = None
+                row = np.asarray(logits[0], np.float32)
+                st["emitted"].append(int(row.argmax()))
+                top2 = np.partition(row, -2)[-2:]
+                st["margins"].append(float(top2[1] - top2[0]))
+                self._finish_if_done(s)
         return any_active
-
-    def run(self, max_steps: int = 10_000):
-        steps = 0
-        while (self.queue or any(r is not None for r in self.slot_req)) \
-                and steps < max_steps:
-            self.step()
-            steps += 1
-        return self.done, steps
-
-    # ------------------------------------------------------------ metrics
-
-    def utilization(self, steps: int) -> float:
-        """Fraction of slot-steps that carried an active sequence."""
-        return self.active_slot_steps / max(1, steps * self.n_slots)

@@ -1,5 +1,7 @@
 """Serving steps: batched single-token decode against a KV cache / SSM
-state, plus prefill (full-sequence forward) and a greedy generation loop."""
+state, prefill (full-sequence forward), a greedy generation loop, and the
+slot-batched engine steps (fused decode over a slot pool with per-slot
+positions, chunked prefill into one slot's lanes)."""
 from __future__ import annotations
 
 import functools
@@ -9,6 +11,7 @@ import jax.numpy as jnp
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.serving.kvcache import reset_slots, slot_slice, slot_update
 
 
 def make_serve_step(cfg: ModelConfig, use_pallas: bool = False):
@@ -33,6 +36,63 @@ def make_prefill_step(cfg: ModelConfig, use_pallas: bool = False):
         out = T.forward(params, cfg, tokens, patch_embeds=patch_embeds,
                         use_pallas=use_pallas)
         return out.logits
+
+    return step
+
+
+def make_engine_step(cfg: ModelConfig, use_pallas: bool = False):
+    """Fused slot-batched decode: ONE device program advances every slot of
+    the pool by one token.
+
+    step(params, cache, tokens, reset_mask) -> (next_tok, margin, cache)
+
+    cache: a stacked pool cache (batch == n_slots) with a (n_slots,) vector
+    "pos" — every slot decodes at its own position.  tokens: (n_slots, 1)
+    int32, the token each slot consumes this tick (prompt feed or last
+    generated; don't-care for idle slots).  reset_mask: (n_slots,) bool —
+    slots being refilled this tick have their lanes zeroed *inside* the same
+    dispatch, so refill costs no extra device call.  next_tok: (n_slots,)
+    greedy argmax per slot; margin: (n_slots,) top1-top2 logit gap (a
+    near-zero margin marks a numerical tie where compiled variants of the
+    same math may legitimately pick different tokens)."""
+
+    def step(params, cache, tokens, reset_mask):
+        cache = reset_slots(cfg, cache, reset_mask)
+        out = T.forward(params, cfg, tokens, cache=cache,
+                        use_pallas=use_pallas)
+        next_tok, margin = _argmax_with_margin(out.logits[:, -1])
+        return next_tok, margin, out.cache
+
+    return step
+
+
+def _argmax_with_margin(logits):
+    """(B, V) -> (argmax (B,), top1-top2 margin (B,) in fp32)."""
+    top2 = jax.lax.top_k(logits.astype(jnp.float32), 2)[0]
+    return jnp.argmax(logits, axis=-1), top2[:, 0] - top2[:, 1]
+
+
+def make_slot_prefill_step(cfg: ModelConfig, use_pallas: bool = False):
+    """Chunked prefill into one slot of a stacked pool cache.
+
+    step(params, cache, slot, tokens, reset) -> (next_tok, margin, cache)
+
+    tokens: (1, S) int32 — a block of prompt tokens written into slot
+    `slot`'s cache lanes in ONE device call (instead of S decode steps).
+    reset: traced bool — zero the slot's lanes first (set on the first block
+    of a request).  next_tok: scalar greedy argmax of the block's last
+    position — the first generated token when the block ends the prompt;
+    margin: its scalar top1-top2 logit gap."""
+
+    def step(params, cache, slot, tokens, reset):
+        sub = slot_slice(cfg, cache, slot)
+        sub = jax.tree.map(
+            lambda a: jnp.where(reset, jnp.zeros((), a.dtype), a), sub)
+        out = T.forward(params, cfg, tokens, cache=sub,
+                        use_pallas=use_pallas)
+        cache = slot_update(cfg, cache, slot, out.cache)
+        tok, margin = _argmax_with_margin(out.logits[:, -1])
+        return tok[0], margin[0], cache
 
     return step
 

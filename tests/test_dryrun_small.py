@@ -42,9 +42,11 @@ _SCRIPT = textwrap.dedent("""
             hlo = compiled.as_text()
             coll = RL.collective_bytes(hlo)
             key = f"{arch}:{'multi' if multi else 'single'}"
+            ca = compiled.cost_analysis()  # dict, or list of per-device dicts
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0] if ca else {}
             out[key] = {"ok": True, "coll_total": coll["total"],
-                        "flops": (compiled.cost_analysis() or {}).get(
-                            "flops", 0)}
+                        "flops": (ca or {}).get("flops", 0)}
         # decode on the single mesh
         mesh = jax.make_mesh((2, 4), ("data", "model"))
         shape = InputShape("d", 64, 8, "decode")

@@ -6,7 +6,8 @@ import pytest
 
 from repro.configs import get_smoke_config
 from repro.models import params as Pm
-from repro.serving.scheduler import ContinuousBatcher, Request
+from repro.serving.scheduler import (ContinuousBatcher, PerSlotBatcher,
+                                     Request)
 
 
 @pytest.fixture(scope="module")
@@ -55,8 +56,17 @@ def test_matches_unbatched_decode(setup):
                 Request(rid=1, prompt=prompt, max_new=max_new),
                 Request(rid=2, prompt=[8, 8, 8], max_new=5)])
     done, _ = eng.run()
-    got = [c for c in done if c.rid == 1][0].tokens
-    np.testing.assert_array_equal(np.asarray(got), ref)
+    c = [c for c in done if c.rid == 1][0]
+    # identical tokens; the engine and the plain loop are differently
+    # compiled programs, so a divergence is tolerated only at a numerical
+    # argmax tie (near-zero top1-top2 margin), after which greedy
+    # trajectories legitimately separate
+    for i, (g, r) in enumerate(zip(c.tokens, ref.tolist())):
+        if g != r:
+            assert c.margins[i] < 1e-3, (i, c.tokens, ref, c.margins)
+            break
+    else:
+        assert len(c.tokens) == len(ref)
 
 
 def test_utilization_reported(setup):
@@ -66,3 +76,43 @@ def test_utilization_reported(setup):
     done, steps = eng.run()
     u = eng.utilization(steps)
     assert 0.1 < u <= 1.0
+
+
+def test_empty_prompt_rejected_or_bos_handled(setup):
+    """Regression: the seed fed a fabricated token 0 for empty prompts —
+    the engine must refuse instead, or decode from an explicit BOS."""
+    cfg, params = setup
+    eng = ContinuousBatcher(cfg, params, n_slots=2, capacity=64)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit([Request(rid=0, prompt=[], max_new=3)])
+    assert not eng.queue
+
+    bos = ContinuousBatcher(cfg, params, n_slots=2, capacity=64, bos_token=5)
+    bos.submit([Request(rid=0, prompt=[], max_new=3),
+                Request(rid=1, prompt=[5], max_new=3)])
+    done, _ = bos.run()
+    by_rid = {c.rid: c for c in done}
+    # empty prompt == explicit [bos]: same conditioning, same completion
+    assert by_rid[0].tokens == by_rid[1].tokens
+    assert by_rid[0].prompt_len == 1
+
+
+def test_capacity_fills_slot_exactly(setup):
+    """Regression: the seed double-counted generated tokens (each emitted
+    token is re-fed, so `fed` already includes them) and cut sequences at
+    ~half capacity.  A request with a large budget must fill the slot to
+    exactly `capacity` total tokens (prompt + completion)."""
+    cfg, params = setup
+    capacity = 24
+    prompt = [3, 1, 4, 1, 5]
+    for eng_cls in (ContinuousBatcher, PerSlotBatcher):
+        eng = eng_cls(cfg, params, n_slots=1, capacity=capacity)
+        eng.submit([Request(rid=0, prompt=list(prompt), max_new=10_000)])
+        done, _ = eng.run()
+        (c,) = done
+        assert c.prompt_len + len(c.tokens) == capacity
+
+    # an over-long prompt leaves no room to generate and is rejected
+    eng = ContinuousBatcher(cfg, params, n_slots=1, capacity=8)
+    with pytest.raises(ValueError, match="capacity"):
+        eng.submit([Request(rid=1, prompt=list(range(1, 9)), max_new=4)])

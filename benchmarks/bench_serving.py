@@ -1,10 +1,13 @@
 """Serving-engine bench: fused slot-batched decode vs the seed per-slot
-loop at n_slots in {1, 4, 8, 16}.
+loop at n_slots in {1, 4, 8, 16}, and the paged KV pool vs the dense cache
+layout on a skewed prompt-length mix.
 
 Reports decode tokens/sec, jitted device dispatches per engine tick (the
 fused engine issues exactly ONE decode dispatch per tick, independent of
-n_slots; the seed loop issues one per active slot), and the fused/seed
-speedup.
+n_slots; the seed loop issues one per active slot), the fused/seed
+speedup, and decode-state bytes (the paged pool holds only the pages the
+mix actually touches; the dense layout pays worst-case capacity on every
+slot).
 
     PYTHONPATH=src python -m benchmarks.run --only serving
     PYTHONPATH=src python benchmarks/bench_serving.py
@@ -28,24 +31,46 @@ def _workload(vocab, n_requests, seed=0, max_new=(8, 16)):
             for i in range(n_requests)]
 
 
+def _skewed_workload(vocab, n_requests, seed=0, long_every=4,
+                     long_len=100, max_new=(4, 10)):
+    """Mostly-short prompts with a rare long one: the mix the paged pool
+    is provisioned for (dense must size every slot for the long case)."""
+    from repro.serving.scheduler import Request
+
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        plen = long_len if i % long_every == 0 else int(rng.integers(2, 10))
+        reqs.append(Request(rid=i,
+                            prompt=rng.integers(1, vocab, plen).tolist(),
+                            max_new=int(rng.integers(*max_new))))
+    return reqs
+
+
 def _drive(eng, reqs):
-    """Run a workload to completion; returns (decode tokens, wall seconds,
-    decode ticks, decode dispatches)."""
-    d0, t0 = eng.decode_dispatches, len(eng.done)
+    """Run a workload to completion; returns (completions, decode tokens,
+    wall seconds, decode ticks, decode dispatches)."""
+    d0 = eng.decode_dispatches
     eng.submit(reqs)
     start = time.time()
     done, steps = eng.run()
     wall = time.time() - start
-    toks = sum(len(c.tokens) for c in done[t0:])
-    return toks, wall, steps, eng.decode_dispatches - d0
+    toks = sum(len(c.tokens) for c in done)
+    return done, toks, wall, steps, eng.decode_dispatches - d0
+
+
+def _clone(reqs):
+    from repro.serving.scheduler import Request
+
+    return [Request(r.rid, list(r.prompt), r.max_new) for r in reqs]
 
 
 def run(quick: bool = False):
     from repro.configs import get_smoke_config
     from repro.models import params as Pm
-    from repro.serving.scheduler import ContinuousBatcher, PerSlotBatcher
-
-    from repro.serving.scheduler import Request, completions_equivalent
+    from repro.serving.kvcache import paged_attn_layout
+    from repro.serving.scheduler import (ContinuousBatcher, PerSlotBatcher,
+                                         Request, completions_equivalent)
 
     cfg = get_smoke_config("qwen3_0_6b")
     params, _ = Pm.init_params(jax.random.PRNGKey(0), cfg)
@@ -61,16 +86,13 @@ def run(quick: bool = False):
         warm = (_workload(cfg.vocab_size, max(2, n_slots), seed=99)
                 + [Request(rid=-1, prompt=list(range(1, 16)), max_new=2)])
         for eng in (fused, seed):
-            _drive(eng, [Request(r.rid, list(r.prompt), r.max_new)
-                         for r in warm])
+            _drive(eng, _clone(warm))
 
-        n_done = len(fused.done)
-        f_tok, f_s, f_ticks, f_disp = _drive(
+        f_done, f_tok, f_s, f_ticks, f_disp = _drive(
             fused, _workload(cfg.vocab_size, n_requests))
-        s_tok, s_s, s_ticks, s_disp = _drive(
+        s_done, s_tok, s_s, s_ticks, s_disp = _drive(
             seed, _workload(cfg.vocab_size, n_requests))
-        equiv = completions_equivalent(fused.done[n_done:],
-                                       seed.done[n_done:])
+        equiv = completions_equivalent(f_done, s_done)
 
         f_tps, s_tps = f_tok / f_s, s_tok / s_s
         rows.append((
@@ -82,6 +104,36 @@ def run(quick: bool = False):
             f";fused_disp_per_tick={f_disp / max(1, f_ticks):.2f}"
             f";perslot_disp_per_tick={s_disp / max(1, s_ticks):.2f}"
             f";fused_prefill_disp={fused.prefill_dispatches}"))
+
+    # ---- paged pool vs dense layout on a skewed prompt-length mix.
+    # capacity provisions the rare long request; the paged pool is sized
+    # to what the mix concurrently touches (~1/4 of full provisioning).
+    n_slots, capacity = (4, 128) if quick else (8, 128)
+    pages_per_slot, _ = paged_attn_layout(cfg, capacity)
+    n_pages = 1 + n_slots * pages_per_slot // 4
+    n_skew = 8 if quick else 16
+    dense = ContinuousBatcher(cfg, params, n_slots=n_slots,
+                              capacity=capacity)
+    paged = ContinuousBatcher(cfg, params, n_slots=n_slots,
+                              capacity=capacity, cache_layout="paged",
+                              n_pages=n_pages)
+    warm = _skewed_workload(cfg.vocab_size, max(4, n_slots), seed=99)
+    for eng in (dense, paged):
+        _drive(eng, _clone(warm))
+    mix = _skewed_workload(cfg.vocab_size, n_skew)
+    d_done, d_tok, d_s, d_ticks, _ = _drive(dense, _clone(mix))
+    p_done, p_tok, p_s, p_ticks, _ = _drive(paged, _clone(mix))
+    equiv = completions_equivalent(p_done, d_done)
+    d_bytes, p_bytes = dense.cache_nbytes(), paged.cache_nbytes()
+    rows.append((
+        "serving_paged_vs_dense_skewed",
+        p_s / max(1, p_tok) * 1e6,
+        f"slots={n_slots};tok={p_tok};equiv={equiv}"
+        f";paged_tok_s={p_tok / p_s:.1f};dense_tok_s={d_tok / d_s:.1f}"
+        f";paged_cache_bytes={p_bytes};dense_cache_bytes={d_bytes}"
+        f";bytes_ratio={p_bytes / d_bytes:.3f}"
+        f";pages={n_pages};page_size={paged.page_size}"
+        f";peak_pages_in_use={paged.allocator.peak_in_use}"))
     return rows
 
 

@@ -5,9 +5,13 @@ slots are refilled immediately so the decode batch stays full.
 The fused engine drives the whole pool with ONE jitted dispatch per engine
 tick (stacked slot cache, per-slot positions, in-dispatch slot reset) and
 writes prompts with a chunked prefill fast path; pass --compare to also run
-the seed per-slot loop (one dispatch per active slot per tick).
+the seed per-slot loop (one dispatch per active slot per tick), and --paged
+to serve the same stream through the paged KV pool (shared page pool +
+per-slot block tables, refcounted prompt-prefix sharing) and report its
+cache-byte savings over the dense layout.
 
-    PYTHONPATH=src python examples/continuous_batching.py --slots 3 --compare
+    PYTHONPATH=src python examples/continuous_batching.py --slots 3 \
+        --compare --paged
 """
 import argparse
 import os
@@ -42,6 +46,8 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--compare", action="store_true",
                     help="also run the seed per-slot loop")
+    ap.add_argument("--paged", action="store_true",
+                    help="also run the paged KV-pool layout")
     args = ap.parse_args()
 
     from repro.configs import get_smoke_config
@@ -73,6 +79,26 @@ def main():
         same = completions_equivalent(done, ref_done)
         print(f"completions token-for-token identical "
               f"(up to argmax ties): {same}")
+
+    if args.paged:
+        from repro.serving import completions_equivalent
+        from repro.serving.kvcache import paged_attn_layout
+
+        if cfg.is_recurrent:
+            print(f"--paged: {args.arch} keeps O(1) recurrent state — "
+                  "nothing to page (layout falls back to dense)")
+        else:
+            pps, _ = paged_attn_layout(cfg, 96)
+            paged = ContinuousBatcher(cfg, params, n_slots=args.slots,
+                                      capacity=96, cache_layout="paged",
+                                      n_pages=1 + args.slots * pps // 2)
+            p_done = drive(paged, workload(), "paged")
+            same = completions_equivalent(done, p_done)
+            print(f"paged == dense (up to argmax ties): {same}; cache bytes "
+                  f"{paged.cache_nbytes()} vs {eng.cache_nbytes()} dense "
+                  f"({paged.cache_nbytes() / eng.cache_nbytes():.2f}x), "
+                  f"peak pages in use {paged.allocator.peak_in_use}"
+                  f"/{paged.n_pages - 1}")
 
 
 if __name__ == "__main__":

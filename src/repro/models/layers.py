@@ -162,9 +162,15 @@ def attention_block(p, x, cfg: ModelConfig, *, positions=None, cache=None,
                     layer_chunked: bool = False, use_pallas: bool = False):
     """GQA attention with RoPE/M-RoPE, qk-norm, bias, window/chunk masking.
 
-    cache: None for training (full self-attention over x), else a dict
-    {"k": (B, T, KV, hd), "v": ..., "pos": int32 current length} for decode;
-    returns (out, new_cache).  "pos" is a scalar for a lock-step batch or a
+    cache: None for training (full self-attention over x), else a decode
+    cache dict, in one of two layouts:
+      - dense: {"k": (B, T, KV, hd), "v": ..., "pos": int32 current length}
+        — each lane owns a T-entry ring;
+      - paged: {"k": (n_pages, page_size, KV, hd), "v": ... (shared pools),
+        "block_table": (B, P) int32 page ids, "pos": ...} — lanes address a
+        shared page pool through their block table; the logical ring is
+        P * page_size entries.
+    Returns (out, new_cache).  "pos" is a scalar for a lock-step batch or a
     (B,) vector of per-sequence positions (the slot-batched serving engine);
     decode accepts S >= 1 tokens (chunked prefill writes a whole block).
     """
@@ -234,12 +240,36 @@ def attention_block(p, x, cfg: ModelConfig, *, positions=None, cache=None,
             cos, sin = rope_angles(positions, hd, cfg.rope_theta)
         q = apply_rope(q, cos, sin)
         k = apply_rope(k, cos, sin)
-        T = cache["k"].shape[1]
-        slots = abs_pos % T  # ring-buffer writes; capacity == window when windowed
+        paged = "block_table" in cache
         kv_dtype = cache["k"].dtype  # may be narrower (kv_cache_dtype)
         b_idx = jnp.arange(B)[:, None]
-        ck = cache["k"].at[b_idx, slots].set(k.astype(kv_dtype))
-        cv = cache["v"].at[b_idx, slots].set(v.astype(kv_dtype))
+        if paged:
+            # paged pool: scatter the S new tokens through the block table
+            # into the shared flat pool, then gather this lane's logical
+            # ring back out for attention.  Unallocated table entries point
+            # at the null page 0; its (garbage) entries sit at ring indices
+            # past `last` and are cut by the validity mask below.
+            bt = cache["block_table"]  # (B, P) page ids
+            psz = cache["k"].shape[1]
+            T = bt.shape[1] * psz
+            slots = abs_pos % T
+            flat = (-1,) + cache["k"].shape[2:]
+            w_idx = bt[b_idx, slots // psz] * psz + slots % psz  # (B, S)
+            store_k = cache["k"].reshape(flat).at[w_idx].set(
+                k.astype(kv_dtype))
+            store_v = cache["v"].reshape(flat).at[w_idx].set(
+                v.astype(kv_dtype))
+            ring = jnp.arange(T)
+            g_idx = bt[:, ring // psz] * psz + ring % psz  # (B, T)
+            ck, cv = store_k[g_idx], store_v[g_idx]  # (B, T, KV, hd)
+            store_k = store_k.reshape(cache["k"].shape)
+            store_v = store_v.reshape(cache["v"].shape)
+        else:
+            T = cache["k"].shape[1]
+            slots = abs_pos % T  # ring writes; capacity == window when windowed
+            ck = cache["k"].at[b_idx, slots].set(k.astype(kv_dtype))
+            cv = cache["v"].at[b_idx, slots].set(v.astype(kv_dtype))
+            store_k, store_v = ck, cv
         # absolute position held by ring slot i after the writes: the largest
         # value congruent to i (mod T) that is <= the last written position.
         # For a non-ring cache (last < T) this reduces to k_pos = i for
@@ -254,7 +284,7 @@ def attention_block(p, x, cfg: ModelConfig, *, positions=None, cache=None,
         mask &= valid[:, None, :]
         out = multi_head_attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
                                    mask, dtype=q.dtype)
-        new_cache = {"k": ck, "v": cv, "pos": pos + S}
+        new_cache = {"k": store_k, "v": store_v, "pos": pos + S}
 
     out = out.reshape(B, S, H * hd) @ p["wo"]
     return out, new_cache

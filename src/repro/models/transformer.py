@@ -166,6 +166,9 @@ def forward(params, cfg: ModelConfig, tokens, *, patch_embeds=None,
 
     decode = cache is not None
     pos_scalar = None if not decode else cache["pos"]
+    # paged attention: the (B, P) block table is shared by every layer's
+    # pool; it rides the top-level cache dict and is injected per layer
+    block_table = cache.get("block_table") if decode else None
     if decode and cfg.mrope:
         # decode M-RoPE: text positions advance all three components
         p1 = (jnp.broadcast_to(pos_scalar, (B,))[:, None]
@@ -180,6 +183,8 @@ def forward(params, cfg: ModelConfig, tokens, *, patch_embeds=None,
             cache_l = None  # training: the scan xs slot is a dummy
         elif cfg.block_kind == "attention":
             cache_l = dict(cache_l, pos=pos_scalar)
+            if block_table is not None:
+                cache_l["block_table"] = block_table
         if decode and cfg.mrope:
             pos_l = decode_pos3
         else:
@@ -188,7 +193,8 @@ def forward(params, cfg: ModelConfig, tokens, *, patch_embeds=None,
             p, h, cfg, positions=pos_l, cache=cache_l,
             layer_chunked=flag, use_pallas=use_pallas)
         if decode and cfg.block_kind == "attention":
-            new_cache_l = {k: v for k, v in new_cache_l.items() if k != "pos"}
+            new_cache_l = {k: v for k, v in new_cache_l.items()
+                           if k not in ("pos", "block_table")}
         return (h, aux + aux_l), new_cache_l
 
     body = body_fn
@@ -218,11 +224,14 @@ def forward(params, cfg: ModelConfig, tokens, *, patch_embeds=None,
                               _none_like(p_group, cfg) if not decode
                               else inner_caches), cfg.scan_layers)
             sc = None if not decode else dict(c_shared, pos=pos_scalar)
+            if sc is not None and block_table is not None:
+                sc["block_table"] = block_table
             h, new_sc, aux_s = _attn_mlp_block(
                 shared, h, cfg, positions=positions, cache=sc,
                 layer_chunked=False, use_pallas=use_pallas)
             if decode:
-                new_sc = {k: v for k, v in new_sc.items() if k != "pos"}
+                new_sc = {k: v for k, v in new_sc.items()
+                          if k not in ("pos", "block_table")}
                 new_caches = {"mamba": new_inner, "shared": new_sc}
             else:
                 new_caches = new_inner

@@ -1,6 +1,10 @@
 from repro.serving.kvcache import (  # noqa: F401
+    DEFAULT_PAGE_SIZE,
     init_cache,
+    init_paged_cache,
     cache_bytes,
+    paged_attn_layout,
+    paged_cache_bytes,
     reset_slots,
     slot_slice,
     slot_update,
@@ -9,11 +13,14 @@ from repro.serving.serve_step import (  # noqa: F401
     make_serve_step,
     make_prefill_step,
     make_engine_step,
+    make_paged_engine_step,
     make_slot_prefill_step,
+    make_paged_prefill_step,
     greedy_generate,
 )
 from repro.serving.scheduler import (  # noqa: F401
     ContinuousBatcher,
+    PageAllocator,
     PerSlotBatcher,
     Request,
     Completion,

@@ -1,12 +1,30 @@
 """Decode-state construction: KV caches (full / sliding-window ring),
 Mamba2 SSM + conv states, RWKV6 shift + wkv states; stacked over layers to
-match the scanned decode path in models/transformer.py."""
+match the scanned decode path in models/transformer.py.
+
+Two attention-cache layouts:
+
+- dense (``init_cache``): one ``(batch, capacity, KV, hd)`` ring per layer —
+  every slot owns worst-case ``capacity`` entries whether it uses them or
+  not;
+- paged (``init_paged_cache``): ONE shared ``(n_pages, page_size, KV, hd)``
+  pool per layer, addressed through per-slot block tables of page ids
+  (vLLM-style).  Slots consume pages proportional to their actual sequence
+  length, and slots with a common prompt prefix can refcount the same pages
+  (see scheduler.PageAllocator).  Page 0 is reserved as the null page: idle
+  lanes and unallocated block-table entries point at it, so their scatter
+  traffic never lands on a live page.  Recurrent state (mamba2/rwkv6) is
+  O(1) and keeps the dense per-slot layout under both settings; hybrid
+  routes only its shared-attention leaves through the pool.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
+
+DEFAULT_PAGE_SIZE = 16
 
 
 def attn_cache_shape(cfg: ModelConfig, batch: int, capacity: int):
@@ -76,7 +94,10 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int, pos=0,
     if cfg.block_kind == "hybrid":
         G = cfg.n_layers // cfg.hybrid_attn_every
         sh = attn_cache_shape(cfg, batch, capacity)
-        cache["shared"] = {k: zeros((G,) + v) for k, v in sh.items()}
+        # kv_cache_dtype applies to the shared-attention KV exactly as it
+        # does for pure-attention archs (and as the paged pools do)
+        cache["shared"] = {k: jnp.zeros((G,) + v, kv_dtype)
+                           for k, v in sh.items()}
     return cache
 
 
@@ -151,3 +172,123 @@ def reset_slots(cfg: ModelConfig, cache, mask):
         return jnp.where(m, jnp.zeros((), a.dtype), a)
 
     return jax.tree.map(one, cache_batch_axes(cfg, cache), cache)
+
+
+# ------------------------------------------------------------ paged layout
+#
+# The paged cache holds attention K/V in ONE shared page pool per layer; a
+# slot's entries are located through its block table ((n_slots, P) int32
+# page ids, host-managed and passed into every dispatch rather than stored
+# on device).  "pos" is likewise host-tracked: the scheduler knows every
+# slot's fed-token count exactly, so reset / refill / prefix jump-start are
+# plain host-side integer writes instead of in-dispatch masking.  Pool
+# pages are never zeroed — a freshly (re)allocated page may hold a dead
+# sequence's entries, but the attention mask only admits ring positions
+# <= the slot's last written position, which the slot (or a live prefix
+# sharer) wrote itself.
+
+
+def paged_attn_layout(cfg: ModelConfig, capacity: int,
+                      page_size: int = DEFAULT_PAGE_SIZE):
+    """(pages_per_slot, logical_ring) of the paged layout: the dense ring
+    cap (capacity, window- and chunk-capped) rounded up to whole pages."""
+    cap = attn_cache_shape(cfg, 1, capacity)["k"][1]
+    pages = -(-cap // page_size)
+    return pages, pages * page_size
+
+
+def init_paged_cache(cfg: ModelConfig, n_slots: int, capacity: int,
+                     n_pages: int, page_size: int = DEFAULT_PAGE_SIZE,
+                     dtype=None):
+    """Paged decode state: shared attention page pools + dense recurrent
+    lanes.  No "pos" and no block table live in this tree — both are
+    host-owned and passed per dispatch (see serve_step.make_paged_*)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    kv_dtype = jnp.dtype(cfg.kv_cache_dtype) if cfg.kv_cache_dtype else dtype
+    L = cfg.n_layers
+    pool = (n_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+
+    if cfg.block_kind == "attention":
+        return {"layers": {"k": jnp.zeros((L,) + pool, kv_dtype),
+                           "v": jnp.zeros((L,) + pool, kv_dtype)}}
+    if cfg.block_kind == "hybrid":
+        H, N, hd = cfg.ssm_heads, cfg.ssm_state_dim, cfg.ssm_head_dim
+        W = cfg.ssm_conv_width
+        conv_d = cfg.d_inner + 2 * N
+        G = cfg.n_layers // cfg.hybrid_attn_every
+        per = cfg.hybrid_attn_every
+        return {
+            "layers": {"mamba": {
+                "ssm": jnp.zeros((G, per, n_slots, H, N, hd), jnp.float32),
+                "conv": jnp.zeros((G, per, n_slots, W - 1, conv_d), dtype),
+            }},
+            "shared": {"k": jnp.zeros((G,) + pool, kv_dtype),
+                       "v": jnp.zeros((G,) + pool, kv_dtype)},
+        }
+    raise ValueError(
+        f"{cfg.block_kind}: recurrent decode state is O(1) — nothing to "
+        "page; use the dense layout")
+
+
+def paged_cache_bytes(cfg: ModelConfig, n_slots: int, capacity: int,
+                      n_pages: int,
+                      page_size: int = DEFAULT_PAGE_SIZE) -> int:
+    """Device bytes of the paged layout, block table + pos vector included."""
+    cache = jax.eval_shape(
+        lambda: init_paged_cache(cfg, n_slots, capacity, n_pages, page_size))
+    pool = sum(int(jnp.prod(jnp.asarray(l.shape)) * l.dtype.itemsize)
+               for l in jax.tree.leaves(cache))
+    pages_per_slot, _ = paged_attn_layout(cfg, capacity, page_size)
+    return pool + n_slots * pages_per_slot * 4 + n_slots * 4
+
+
+def paged_cache_axes(cfg: ModelConfig):
+    """Slot-axis pytree for a paged cache: per-slot (dense) leaves carry
+    their slot-axis index, shared pool leaves carry -1."""
+    if cfg.block_kind == "attention":
+        return {"layers": {"k": -1, "v": -1}}
+    if cfg.block_kind == "hybrid":
+        return {"layers": {"mamba": {"ssm": 2, "conv": 2}},
+                "shared": {"k": -1, "v": -1}}
+    raise ValueError(cfg.block_kind)
+
+
+def paged_slot_slice(cfg: ModelConfig, cache, slot):
+    """Batch-1 view of slot `slot`: dense leaves sliced, pools passed whole
+    (the block table, not the slice, scopes a slot's pool accesses)."""
+    return jax.tree.map(
+        lambda ax, a: a if ax < 0 else
+        jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=ax),
+        paged_cache_axes(cfg), cache)
+
+
+def paged_slot_update(cfg: ModelConfig, cache, slot, sub):
+    """Write a batch-1 `sub` back: dense leaves into slot `slot`'s lanes;
+    pool leaves replace the pool wholesale (sub's pool IS the updated one)."""
+    return jax.tree.map(
+        lambda ax, a, s: s.astype(a.dtype) if ax < 0 else
+        jax.lax.dynamic_update_slice_in_dim(a, s.astype(a.dtype), slot,
+                                            axis=ax),
+        paged_cache_axes(cfg), cache, sub)
+
+
+def reset_paged_slots(cfg: ModelConfig, cache, mask):
+    """Zero the per-slot dense lanes (hybrid recurrent state) of every slot
+    where mask is True; pool pages are reclaimed by the allocator instead
+    and their stale contents masked by position validity."""
+    def one(ax, a):
+        if ax < 0:
+            return a
+        m = mask.reshape((1,) * ax + (-1,) + (1,) * (a.ndim - ax - 1))
+        return jnp.where(m, jnp.zeros((), a.dtype), a)
+
+    return jax.tree.map(one, paged_cache_axes(cfg), cache)
+
+
+def reset_paged_sub(cfg: ModelConfig, sub, reset):
+    """Zero a batch-1 paged sub-cache's dense lanes where `reset` (traced
+    bool) — the first prefill block of a refilled slot."""
+    return jax.tree.map(
+        lambda ax, a: a if ax < 0 else
+        jnp.where(reset, jnp.zeros((), a.dtype), a),
+        paged_cache_axes(cfg), sub)

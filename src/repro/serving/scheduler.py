@@ -23,6 +23,32 @@ Engine-level semantics (`ContinuousBatcher`, the fused engine):
     earlier tokens still attend to; past the ring boundary prefill falls
     back to exact token-by-token feeding.
 
+Cache layouts (`cache_layout=` on the fused engine):
+
+  - "dense" (default): one (n_slots, capacity, KV, hd) ring per layer —
+    every slot owns worst-case `capacity` entries for its whole lifetime;
+  - "paged": ONE shared (n_pages, page_size, KV, hd) pool per layer plus
+    per-slot block tables of page ids (vLLM-style).  A `PageAllocator`
+    owns the pool host-side: admission reserves ceil((prompt + budget) /
+    page_size) pages up front, so a request is admitted only when its
+    whole sequence fits — the queue stalls (FIFO) on pool exhaustion and
+    admission resumes as finishing slots release their pages (reclaim is
+    fused with slot release: one host-side refcount sweep, no device
+    work).  Requests sharing a common prompt prefix refcount the same
+    pages: full prompt pages are registered under a rolling prefix key,
+    and a later identical prefix acquires those pages instead of copying
+    them (with chunked prefill on pure-attention archs the sharer also
+    SKIPS prefilling the shared tokens and jump-starts at the prefix
+    boundary).  The block-table shape is (n_slots, pages_per_slot) with
+    pages_per_slot = ceil(ring_cap / page_size); page 0 is the reserved
+    null page idle lanes point at.  Positions are host-tracked under this
+    layout, and pool pages are never zeroed — stale entries are masked by
+    position validity.  Recurrent archs (mamba2 / rwkv6) keep O(1) dense
+    state (the layout flag is a no-op); hybrid routes only its shared
+    attention leaves through the pool.  Prefix sharing turns itself off
+    when the logical ring can wrap (sliding-window / chunked attention
+    with capacity > window): a wrapped ring overwrites prefix entries.
+
 `PerSlotBatcher` keeps the seed engine — one jitted batch-1 call per active
 slot per tick — as the equivalence baseline and the bench's "before" side.
 Both engines share intake, accounting and completion semantics: a sequence
@@ -41,8 +67,13 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
-from repro.serving.kvcache import attn_cache_shape, init_cache
-from repro.serving.serve_step import make_engine_step, make_slot_prefill_step
+from repro.serving.kvcache import (DEFAULT_PAGE_SIZE, attn_cache_shape,
+                                   init_cache, init_paged_cache,
+                                   paged_attn_layout)
+from repro.serving.serve_step import (make_engine_step,
+                                      make_paged_engine_step,
+                                      make_paged_prefill_step,
+                                      make_slot_prefill_step)
 
 
 @dataclasses.dataclass
@@ -90,6 +121,71 @@ def completions_equivalent(a, b, tie_tol: float = 1e-3) -> bool:
     return True
 
 
+class PageAllocator:
+    """Host-side manager of the shared KV page pool.
+
+    Pages are refcounted so prompt-prefix pages can be shared between
+    requests: full prompt pages are registered under a rolling prefix key
+    (a chain of per-page token tuples), and a later request whose prompt
+    starts with the same pages `acquire`s them instead of allocating
+    copies.  A page returns to the free list when its refcount reaches
+    zero — a prefix page therefore survives any one sharer finishing as
+    long as another still holds it.  Page 0 is the reserved null page
+    (idle lanes and unallocated block-table entries point at it) and is
+    permanently pinned."""
+
+    def __init__(self, n_pages: int, page_size: int):
+        assert n_pages >= 2, "need at least the null page plus one"
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self._free = list(range(n_pages - 1, 0, -1))  # pop() -> 1, 2, ...
+        self.refcount = np.zeros((n_pages,), np.int32)
+        self.refcount[0] = 1  # null page: never allocated, never freed
+        self._prefix: dict = {}    # chain key -> live page id
+        self._page_key: dict = {}  # page id -> chain key (for dereg)
+        self.peak_in_use = 0
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        """Allocated pages (null page excluded)."""
+        return self.n_pages - 1 - len(self._free)
+
+    def alloc(self) -> int:
+        pid = self._free.pop()
+        self.refcount[pid] = 1
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return pid
+
+    def acquire(self, pid: int):
+        """Take another reference on a live (shared-prefix) page."""
+        assert self.refcount[pid] > 0, f"page {pid} is not live"
+        self.refcount[pid] += 1
+
+    def release(self, pid: int):
+        if pid == 0:
+            return
+        self.refcount[pid] -= 1
+        assert self.refcount[pid] >= 0, f"page {pid} over-released"
+        if self.refcount[pid] == 0:
+            key = self._page_key.pop(pid, None)
+            if key is not None and self._prefix.get(key) == pid:
+                del self._prefix[key]
+            self._free.append(pid)
+
+    def lookup_prefix(self, key):
+        return self._prefix.get(key)
+
+    def register_prefix(self, key, pid: int):
+        """Publish a full prompt page for sharing (first writer wins)."""
+        if key not in self._prefix:
+            self._prefix[key] = pid
+            self._page_key[pid] = key
+
+
 class _BatcherBase:
     """Shared intake / accounting / loop for both engines."""
 
@@ -107,7 +203,8 @@ class _BatcherBase:
         self.slot_state: list = [None] * n_slots   # {"emitted", "fed"}
         self.queue: list = []
         self.done: list = []
-        self.active_slot_steps = 0
+        self.active_slot_steps = 0    # slot-steps that carried a sequence
+        self.total_slot_steps = 0     # slot-step capacity offered so far
         self.decode_dispatches = 0    # jitted decode calls
         self.prefill_dispatches = 0   # jitted prefill-block calls
 
@@ -146,24 +243,41 @@ class _BatcherBase:
                 rid=req.rid, tokens=list(st["emitted"]),
                 prompt_len=len(req.prompt),
                 margins=list(st["margins"])))
+            self._release_slot(s)
             self.slot_req[s] = None
             self.slot_state[s] = None
+
+    def _release_slot(self, s: int):
+        """Hook: layout-specific reclaim when slot s's sequence finishes."""
 
     # --------------------------------------------------------------- loop
 
     def run(self, max_steps: int = 10_000):
+        """Drive the engine until queue and slots drain (or max_steps).
+
+        Returns (completions finished during THIS call, steps) — a second
+        run() on the same batcher reports only its own completions.
+        `self.done` keeps the cumulative archive across calls."""
+        start = len(self.done)
         steps = 0
         while (self.queue or any(r is not None for r in self.slot_req)) \
                 and steps < max_steps:
             self.step()
             steps += 1
-        return self.done, steps
+        return self.done[start:], steps
 
     # ------------------------------------------------------------ metrics
 
-    def utilization(self, steps: int) -> float:
-        """Fraction of slot-steps that carried an active sequence."""
-        return self.active_slot_steps / max(1, steps * self.n_slots)
+    def utilization(self, steps: int | None = None) -> float:
+        """Fraction of offered slot-step capacity that carried a sequence.
+
+        Every prompt token counts one active slot-step whether it was fed
+        through a decode tick or written by a chunked-prefill block (a
+        size-S batch-1 block books S slot-steps of work and S slot-steps
+        of offered capacity), so chunked and decode prefill modes report
+        consistent figures on the same workload.  `steps` is accepted for
+        backward compatibility and ignored."""
+        return self.active_slot_steps / max(1, self.total_slot_steps)
 
 
 class ContinuousBatcher(_BatcherBase):
@@ -173,36 +287,86 @@ class ContinuousBatcher(_BatcherBase):
     def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
                  capacity: int = 256, greedy: bool = True,
                  bos_token: int | None = None, prefill_chunk: int = 16,
-                 prefill_mode: str = "chunked", use_pallas: bool = False):
+                 prefill_mode: str = "chunked", use_pallas: bool = False,
+                 cache_layout: str = "dense",
+                 page_size: int = DEFAULT_PAGE_SIZE,
+                 n_pages: int | None = None, share_prefix: bool = True):
         super().__init__(cfg, params, n_slots, capacity, greedy, bos_token)
         assert prefill_mode in ("chunked", "decode"), prefill_mode
+        assert cache_layout in ("dense", "paged"), cache_layout
+        if cfg.is_recurrent:
+            cache_layout = "dense"  # O(1) decode state: nothing to page
+        self.cache_layout = cache_layout
         self.prefill_mode = prefill_mode
         self.prefill_chunk = max(1, prefill_chunk)
-        self.cache = init_cache(cfg, n_slots, capacity,
-                                pos=np.zeros((n_slots,), np.int32),
-                                dtype=jnp.float32)
-        # donate the pool cache: the host drops its reference at each
-        # reassignment, so XLA may update the (large) KV/SSM pool in place
-        # instead of copying it every tick
-        self._decode = jax.jit(make_engine_step(cfg, use_pallas),
-                               donate_argnums=1)
-        self._prefill = jax.jit(make_slot_prefill_step(cfg, use_pallas),
-                                donate_argnums=1)
         self._reset_mask = np.zeros((n_slots,), bool)
         # ring size of the attention cache (multi-token prefill blocks must
         # not wrap it); None for pure-recurrent archs
         self._ring_cap = None
         if cfg.block_kind in ("attention", "hybrid"):
             self._ring_cap = attn_cache_shape(cfg, 1, capacity)["k"][1]
+        # donate the pool cache: the host drops its reference at each
+        # reassignment, so XLA may update the (large) KV/SSM pool in place
+        # instead of copying it every tick
+        if cache_layout == "dense":
+            self.cache = init_cache(cfg, n_slots, capacity,
+                                    pos=np.zeros((n_slots,), np.int32),
+                                    dtype=jnp.float32)
+            self._decode = jax.jit(make_engine_step(cfg, use_pallas),
+                                   donate_argnums=1)
+            self._prefill = jax.jit(make_slot_prefill_step(cfg, use_pallas),
+                                    donate_argnums=1)
+        else:
+            self.page_size = page_size
+            self.pages_per_slot, logical = paged_attn_layout(
+                cfg, capacity, page_size)
+            if n_pages is None:  # full provisioning (dense-equivalent)
+                n_pages = 1 + n_slots * self.pages_per_slot
+            self.n_pages = n_pages
+            self.allocator = PageAllocator(n_pages, page_size)
+            self.block_table = np.zeros((n_slots, self.pages_per_slot),
+                                        np.int32)
+            self.slot_pos = np.zeros((n_slots,), np.int32)
+            self.slot_pages: list = [[] for _ in range(n_slots)]
+            self.cache = init_paged_cache(cfg, n_slots, capacity, n_pages,
+                                          page_size, dtype=jnp.float32)
+            self._decode = jax.jit(make_paged_engine_step(cfg, use_pallas),
+                                   donate_argnums=1)
+            self._prefill = jax.jit(make_paged_prefill_step(cfg, use_pallas),
+                                    donate_argnums=1)
+            # sharing is sound only while the logical ring never wraps (a
+            # wrapped ring overwrites the shared prefix entries)
+            self._share = share_prefix and logical >= capacity
+            # skipping the shared tokens outright needs (a) chunked prefill
+            # (the pages are fully written at the sharee's admission) and
+            # (b) no recurrent state to rebuild (pure attention)
+            self._share_skip = (self._share and prefill_mode == "chunked"
+                                and cfg.block_kind == "attention")
+            # prefill block chunking bound for the paged logical ring
+            self._ring_cap = logical
+
+    def cache_nbytes(self) -> int:
+        """Live device bytes of this engine's decode state."""
+        n = sum(l.nbytes for l in jax.tree.leaves(self.cache))
+        if self.cache_layout == "paged":
+            n += self.block_table.nbytes + self.slot_pos.nbytes
+        return n
 
     # ------------------------------------------------------------- intake
 
     def _fill_slots(self):
         for s in range(self.n_slots):
             if self.slot_req[s] is None and self.queue:
-                req = self.queue.pop(0)
+                fed0 = 0
+                if self.cache_layout == "paged":
+                    admitted = self._admit_paged(s)
+                    if admitted is None:
+                        break  # pool exhausted: FIFO stall until reclaim
+                    req, fed0 = admitted
+                else:
+                    req = self.queue.pop(0)
                 self.slot_req[s] = req
-                self.slot_state[s] = {"emitted": [], "fed": 0,
+                self.slot_state[s] = {"emitted": [], "fed": fed0,
                                       "margins": []}
                 if self.prefill_mode == "chunked":
                     self._prefill_slot(s, req)
@@ -210,6 +374,71 @@ class ContinuousBatcher(_BatcherBase):
                     # prompt will be fed through decode ticks; zero the
                     # slot's lanes inside the next fused dispatch
                     self._reset_mask[s] = True
+
+    # ------------------------------------------------- paged-pool admission
+
+    def _prefix_chain(self, prompt, n_pages: int):
+        """Rolling prefix keys of the first n_pages full prompt pages."""
+        ps, chain, keys = self.page_size, (), []
+        for k in range(n_pages):
+            chain = (chain, tuple(prompt[k * ps:(k + 1) * ps]))
+            keys.append(chain)
+        return keys
+
+    def _admit_paged(self, s: int):
+        """Try to admit the queue head into slot s: reserve every page its
+        whole sequence (prompt + budget) can touch, sharing refcounted
+        prefix pages where the index has them.  Returns (request,
+        first-unshared-token) or None when the pool can't hold it yet."""
+        req = self.queue[0]
+        ps = self.page_size
+        total = min(len(req.prompt) + self._budget(req), self._ring_cap)
+        need = -(-total // ps)
+        if need > self.n_pages - 1:
+            raise ValueError(
+                f"request {req.rid}: needs {need} pages but the pool holds "
+                f"{self.n_pages - 1} — raise n_pages or lower capacity")
+        shared: list = []
+        full_pages = len(req.prompt) // ps
+        keys = self._prefix_chain(req.prompt, full_pages) if self._share \
+            else []
+        # skip mode must leave >= 1 prompt token to feed (its logits seed
+        # the first generated token)
+        limit = min(full_pages, (len(req.prompt) - 1) // ps) \
+            if self._share_skip else full_pages
+        for key in keys[:limit]:
+            pid = self.allocator.lookup_prefix(key)
+            if pid is None:
+                break
+            shared.append(pid)
+        if self.allocator.n_free < need - len(shared):
+            return None
+        self.queue.pop(0)
+        for pid in shared:
+            self.allocator.acquire(pid)
+        pages = shared + [self.allocator.alloc()
+                          for _ in range(need - len(shared))]
+        self.block_table[s, :] = 0
+        self.block_table[s, :len(pages)] = pages
+        self.slot_pages[s] = pages
+        # publish this request's own full prompt pages for later sharers
+        if self._share:
+            for k in range(len(shared), full_pages):
+                self.allocator.register_prefix(keys[k], pages[k])
+        fed0 = len(shared) * ps if self._share_skip else 0
+        self.slot_pos[s] = fed0
+        return req, fed0
+
+    def _release_slot(self, s: int):
+        if self.cache_layout != "paged":
+            return
+        # reclaim is fused with slot release: one refcount sweep frees
+        # every non-shared page; the block-table row falls back to the
+        # null page so the idle lane's scatter lands nowhere live
+        for pid in self.slot_pages[s]:
+            self.allocator.release(pid)
+        self.slot_pages[s] = []
+        self.block_table[s, :] = 0
 
     def _chunk_size(self, pos: int, remaining: int) -> int:
         """Prefill block size: <= prefill_chunk, power-of-two bucketed (so
@@ -225,20 +454,33 @@ class ContinuousBatcher(_BatcherBase):
         return p
 
     def _prefill_slot(self, s: int, req: Request):
-        """Write the whole prompt into slot s's lanes in blocks; the last
-        block's logits give the first generated token."""
+        """Write the prompt into slot s in blocks; the last block's logits
+        give the first generated token.  Starts at st["fed"] — nonzero when
+        a refcount-shared prefix was skipped (paged layout)."""
         st = self.slot_state[s]
         prompt = np.asarray(req.prompt, np.int32)
-        n, off, reset = len(prompt), 0, True
+        n, off, reset = len(prompt), st["fed"], True
         tok = margin = None
         while off < n:
             size = self._chunk_size(off, n - off)
-            tok, margin, self.cache = self._prefill(
-                self.params, self.cache, s,
-                jnp.asarray(prompt[None, off:off + size]), reset)
+            block = jnp.asarray(prompt[None, off:off + size])
+            if self.cache_layout == "paged":
+                tok, margin, self.cache = self._prefill(
+                    self.params, self.cache, s, block, np.int32(off),
+                    jnp.asarray(self.block_table[s:s + 1]), reset)
+            else:
+                tok, margin, self.cache = self._prefill(
+                    self.params, self.cache, s, block, reset)
             self.prefill_dispatches += 1
             reset = False
             off += size
+        # a size-S block books S slot-steps of work and S slot-steps of
+        # offered capacity (a batch-1 prefill dispatch offers nothing to
+        # the other lanes), so utilization agrees with decode-mode prefill
+        self.active_slot_steps += n - st["fed"]
+        self.total_slot_steps += n - st["fed"]
+        if self.cache_layout == "paged":
+            self.slot_pos[s] = n
         st["fed"] = n
         st["emitted"].append(int(tok))
         st["margins"].append(float(margin))
@@ -262,13 +504,23 @@ class ContinuousBatcher(_BatcherBase):
                 toks[s, 0] = req.prompt[st["fed"]]
             else:
                 toks[s, 0] = st["emitted"][-1]
-        nxt, margins, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(toks),
-            jnp.asarray(self._reset_mask))
+        if self.cache_layout == "paged":
+            nxt, margins, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(self.slot_pos), jnp.asarray(self.block_table),
+                jnp.asarray(self._reset_mask))
+            self.slot_pos[active] += 1
+        else:
+            active_mask = np.zeros((self.n_slots,), bool)
+            active_mask[active] = True
+            nxt, margins, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(self._reset_mask), jnp.asarray(active_mask))
         self.decode_dispatches += 1
         self._reset_mask[:] = False
         nxt, margins = np.asarray(nxt), np.asarray(margins)
         self.active_slot_steps += len(active)
+        self.total_slot_steps += self.n_slots
         for s in active:
             req, st = self.slot_req[s], self.slot_state[s]
             st["fed"] += 1
@@ -307,6 +559,10 @@ class PerSlotBatcher(_BatcherBase):
                 self.slot_state[s] = {"emitted": [], "fed": 0,
                                       "margins": []}
 
+    def cache_nbytes(self) -> int:
+        """Live device bytes of this engine's decode state."""
+        return sum(l.nbytes for c in self.caches for l in jax.tree.leaves(c))
+
     def step(self):
         """One engine step: each active slot consumes one token (prompt feed
         or generated) and produces at most one new token."""
@@ -334,4 +590,6 @@ class PerSlotBatcher(_BatcherBase):
                 top2 = np.partition(row, -2)[-2:]
                 st["margins"].append(float(top2[1] - top2[0]))
                 self._finish_if_done(s)
+        if any_active:
+            self.total_slot_steps += self.n_slots
         return any_active

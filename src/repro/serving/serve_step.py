@@ -11,7 +11,9 @@ import jax.numpy as jnp
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
-from repro.serving.kvcache import reset_slots, slot_slice, slot_update
+from repro.serving.kvcache import (paged_slot_slice, paged_slot_update,
+                                   reset_paged_slots, reset_paged_sub,
+                                   reset_slots, slot_slice, slot_update)
 
 
 def make_serve_step(cfg: ModelConfig, use_pallas: bool = False):
@@ -44,24 +46,61 @@ def make_engine_step(cfg: ModelConfig, use_pallas: bool = False):
     """Fused slot-batched decode: ONE device program advances every slot of
     the pool by one token.
 
-    step(params, cache, tokens, reset_mask) -> (next_tok, margin, cache)
+    step(params, cache, tokens, reset_mask, active_mask)
+        -> (next_tok, margin, cache)
 
     cache: a stacked pool cache (batch == n_slots) with a (n_slots,) vector
     "pos" — every slot decodes at its own position.  tokens: (n_slots, 1)
     int32, the token each slot consumes this tick (prompt feed or last
     generated; don't-care for idle slots).  reset_mask: (n_slots,) bool —
     slots being refilled this tick have their lanes zeroed *inside* the same
-    dispatch, so refill costs no extra device call.  next_tok: (n_slots,)
-    greedy argmax per slot; margin: (n_slots,) top1-top2 logit gap (a
-    near-zero margin marks a numerical tie where compiled variants of the
-    same math may legitimately pick different tokens)."""
+    dispatch, so refill costs no extra device call.  active_mask: (n_slots,)
+    bool — "pos" advances only for lanes carrying a sequence; an idle lane's
+    position stays pinned (its dead-lane compute still runs but keeps
+    writing the same ring entry of its own lanes, which the refill reset
+    zeroes).  next_tok: (n_slots,) greedy argmax per slot; margin: (n_slots,)
+    top1-top2 logit gap (a near-zero margin marks a numerical tie where
+    compiled variants of the same math may legitimately pick different
+    tokens)."""
 
-    def step(params, cache, tokens, reset_mask):
+    def step(params, cache, tokens, reset_mask, active_mask):
         cache = reset_slots(cfg, cache, reset_mask)
+        pos0 = cache["pos"]
         out = T.forward(params, cfg, tokens, cache=cache,
                         use_pallas=use_pallas)
         next_tok, margin = _argmax_with_margin(out.logits[:, -1])
-        return next_tok, margin, out.cache
+        new_cache = dict(out.cache,
+                         pos=jnp.where(active_mask, out.cache["pos"], pos0))
+        return next_tok, margin, new_cache
+
+    return step
+
+
+def make_paged_engine_step(cfg: ModelConfig, use_pallas: bool = False):
+    """Fused slot-batched decode against the shared page pool.
+
+    step(params, cache, tokens, pos, block_table, reset_mask)
+        -> (next_tok, margin, cache)
+
+    cache: a paged pool cache (kvcache.init_paged_cache) — attention K/V in
+    shared (n_pages, page_size, KV, hd) pools, hybrid recurrent state in
+    dense per-slot lanes.  pos: (n_slots,) int32, HOST-tracked (the
+    scheduler knows each slot's fed count, so refill and prefix jump-start
+    are host integer writes — idle lanes stay pinned by construction).
+    block_table: (n_slots, P) int32 page ids; idle lanes point at the null
+    page 0, so their dead-lane scatter never touches a live page.
+    reset_mask: (n_slots,) bool — zeroes refilled slots' dense recurrent
+    lanes; pool pages are never zeroed (stale entries are masked by
+    position validity)."""
+
+    def step(params, cache, tokens, pos, block_table, reset_mask):
+        cache = reset_paged_slots(cfg, cache, reset_mask)
+        full = dict(cache, pos=pos, block_table=block_table)
+        out = T.forward(params, cfg, tokens, cache=full,
+                        use_pallas=use_pallas)
+        next_tok, margin = _argmax_with_margin(out.logits[:, -1])
+        new_cache = {k: v for k, v in out.cache.items() if k != "pos"}
+        return next_tok, margin, new_cache
 
     return step
 
@@ -91,6 +130,33 @@ def make_slot_prefill_step(cfg: ModelConfig, use_pallas: bool = False):
         out = T.forward(params, cfg, tokens, cache=sub,
                         use_pallas=use_pallas)
         cache = slot_update(cfg, cache, slot, out.cache)
+        tok, margin = _argmax_with_margin(out.logits[:, -1])
+        return tok[0], margin[0], cache
+
+    return step
+
+
+def make_paged_prefill_step(cfg: ModelConfig, use_pallas: bool = False):
+    """Chunked prefill of one slot against the shared page pool.
+
+    step(params, cache, slot, tokens, pos0, bt_row, reset)
+        -> (next_tok, margin, cache)
+
+    tokens: (1, S) int32 prompt block, written at positions pos0..pos0+S-1
+    through `bt_row` ((1, P) block-table row) into the pool.  pos0 > 0 on
+    the first block resumes behind a refcount-shared prompt prefix whose
+    pages an earlier request already wrote.  reset: traced bool — zero the
+    slot's dense recurrent lanes (hybrid) on a request's first block; pool
+    pages need no zeroing."""
+
+    def step(params, cache, slot, tokens, pos0, bt_row, reset):
+        sub = paged_slot_slice(cfg, cache, slot)
+        sub = reset_paged_sub(cfg, sub, reset)
+        full = dict(sub, pos=pos0, block_table=bt_row)
+        out = T.forward(params, cfg, tokens, cache=full,
+                        use_pallas=use_pallas)
+        new = {k: v for k, v in out.cache.items() if k != "pos"}
+        cache = paged_slot_update(cfg, cache, slot, new)
         tok, margin = _argmax_with_margin(out.logits[:, -1])
         return tok[0], margin[0], cache
 

@@ -1,0 +1,219 @@
+"""Paged KV pool: PageAllocator admission / exhaustion / refcounted prefix
+sharing, and cache-byte accounting of the paged layout."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import params as Pm
+from repro.serving.kvcache import (DEFAULT_PAGE_SIZE, cache_bytes,
+                                   paged_attn_layout, paged_cache_bytes)
+from repro.serving.scheduler import (ContinuousBatcher, PageAllocator,
+                                     Request, completions_equivalent)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("qwen3_0_6b")
+    params, _ = Pm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# ------------------------------------------------------------- allocator
+
+
+def test_allocator_alloc_release_roundtrip():
+    al = PageAllocator(n_pages=5, page_size=16)
+    assert al.n_free == 4  # page 0 reserved as null
+    pages = [al.alloc() for _ in range(4)]
+    assert 0 not in pages and al.n_free == 0
+    for p in pages:
+        al.release(p)
+    assert al.n_free == 4 and al.in_use == 0
+    al.release(0)  # null page release is a no-op
+    assert al.n_free == 4
+
+
+def test_allocator_refcounted_prefix_pages():
+    al = PageAllocator(n_pages=6, page_size=4)
+    key = ((), (1, 2, 3, 4))
+    pid = al.alloc()
+    al.register_prefix(key, pid)
+    assert al.lookup_prefix(key) == pid
+    al.acquire(pid)          # a second sharer
+    al.release(pid)          # first sharer finishes
+    # the page survives and stays shareable while one sharer holds it
+    assert al.refcount[pid] == 1 and al.lookup_prefix(key) == pid
+    al.release(pid)          # last sharer finishes
+    assert al.lookup_prefix(key) is None and pid in al._free
+
+
+def test_pool_exhaustion_stalls_then_resumes(setup):
+    """With a pool that fits one request at a time the queue must stall
+    (not crash) and admission must resume as finished slots reclaim."""
+    cfg, params = setup
+    eng = ContinuousBatcher(cfg, params, n_slots=2, capacity=32,
+                            cache_layout="paged", n_pages=3,
+                            share_prefix=False)  # 2 usable pages
+    # prompt 3 + budget 20 = 23 tokens -> 2 pages: one request at a time
+    reqs = [Request(rid=i, prompt=[1 + i, 2, 3], max_new=20)
+            for i in range(3)]
+    eng.submit(reqs)
+    stalled = False
+    steps = 0
+    while eng.queue or any(r is not None for r in eng.slot_req):
+        eng.step()
+        steps += 1
+        # only one slot can hold pages at a time => the other stays empty
+        assert sum(r is not None for r in eng.slot_req) <= 1
+        stalled = stalled or bool(eng.queue)
+        assert steps < 500
+    assert stalled
+    assert sorted(c.rid for c in eng.done) == [0, 1, 2]
+    assert eng.allocator.in_use == 0  # everything reclaimed
+
+
+def test_oversized_request_rejected_not_deadlocked(setup):
+    cfg, params = setup
+    eng = ContinuousBatcher(cfg, params, n_slots=1, capacity=64,
+                            cache_layout="paged", n_pages=2)
+    eng.submit([Request(rid=0, prompt=list(range(1, 40)), max_new=30)])
+    with pytest.raises(ValueError, match="pages"):
+        eng.run()
+
+
+# -------------------------------------------------------- prefix sharing
+
+
+def _shared_prompt_reqs(n=3, plen=36, max_new=4):
+    sysp = list(range(1, plen + 1))
+    return [Request(rid=i, prompt=sysp + [50 + i], max_new=max_new)
+            for i in range(n)]
+
+
+def test_prefix_sharing_saves_pages_and_matches_dense(setup):
+    cfg, params = setup
+    shared = ContinuousBatcher(cfg, params, n_slots=3, capacity=64,
+                               cache_layout="paged")
+    unshared = ContinuousBatcher(cfg, params, n_slots=3, capacity=64,
+                                 cache_layout="paged", share_prefix=False)
+    dense = ContinuousBatcher(cfg, params, n_slots=3, capacity=64)
+    outs = {}
+    for tag, eng in [("shared", shared), ("unshared", unshared),
+                     ("dense", dense)]:
+        eng.submit(_shared_prompt_reqs())
+        outs[tag] = eng.run()[0]
+    assert completions_equivalent(outs["shared"], outs["dense"]), \
+        [(c.tokens, c.margins) for c in outs["shared"]]
+    assert completions_equivalent(outs["unshared"], outs["dense"])
+    # the 36-token common prefix spans 2 full pages refcounted once
+    assert shared.allocator.peak_in_use < unshared.allocator.peak_in_use
+    # skipping the shared tokens also skips their prefill work
+    assert shared.active_slot_steps < unshared.active_slot_steps
+    for eng in (shared, unshared):
+        assert eng.allocator.in_use == 0
+
+
+def test_prefix_pages_survive_one_sharer_finishing(setup):
+    """A prefix page shared by two live requests must survive the first
+    sharer finishing, and the survivor must decode correctly past it."""
+    cfg, params = setup
+    sysp = list(range(1, 33))  # 2 full pages at page_size=16
+    eng = ContinuousBatcher(cfg, params, n_slots=2, capacity=64,
+                            cache_layout="paged")
+    short = Request(rid=0, prompt=sysp + [40], max_new=4)
+    long = Request(rid=1, prompt=sysp + [41], max_new=10)
+    eng.submit([short, long])
+    eng.step()  # both prefilled; prefix pages now refcounted by both
+    prefix_pages = [p for p in eng.slot_pages[0] if p in eng.slot_pages[1]]
+    assert len(prefix_pages) == 2
+    for p in prefix_pages:
+        assert eng.allocator.refcount[p] == 2
+    saw_survivor = False
+    while any(r is not None for r in eng.slot_req) or eng.queue:
+        eng.step()
+        if eng.slot_req[0] is None and eng.slot_req[1] is not None:
+            # short finished, long still running: shared pages live on
+            saw_survivor = True
+            for p in prefix_pages:
+                assert eng.allocator.refcount[p] == 1
+    assert saw_survivor
+    done = {c.rid: c for c in eng.done}
+    assert len(done[1].tokens) == 10
+    assert eng.allocator.in_use == 0
+
+    fresh = ContinuousBatcher(cfg, params, n_slots=2, capacity=64)
+    fresh.submit([Request(rid=1, prompt=sysp + [41], max_new=10)])
+    want = {c.rid: c for c in fresh.run()[0]}
+    assert completions_equivalent([done[1]], [want[1]])
+
+
+def test_sharing_disabled_when_ring_wraps(setup):
+    cfg, _ = setup
+    cfg = cfg.replace(sliding_window=16)
+    params, _ = Pm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ContinuousBatcher(cfg, params, n_slots=2, capacity=64,
+                            cache_layout="paged")
+    assert not eng._share  # a wrapped ring would overwrite prefix entries
+
+
+# ------------------------------------------------------- byte accounting
+
+
+def test_paged_cache_bytes_agrees_with_layout(setup):
+    cfg, params = setup
+    n_slots, capacity, n_pages, ps = 4, 64, 9, DEFAULT_PAGE_SIZE
+    eng = ContinuousBatcher(cfg, params, n_slots=n_slots, capacity=capacity,
+                            cache_layout="paged", n_pages=n_pages)
+    pages_per_slot, _ = paged_attn_layout(cfg, capacity, ps)
+    # exact layout contract: L x {k,v} pools of (n_pages, ps, KV, hd)
+    # entries plus the (n_slots, pages_per_slot) int32 table and int32 pos
+    def expect(itemsize):
+        pool = (cfg.n_layers * 2 * n_pages * ps * cfg.n_kv_heads
+                * cfg.head_dim * itemsize)
+        return pool + n_slots * pages_per_slot * 4 + n_slots * 4
+
+    # the live engine holds f32 pools (CPU tests); the quote uses cfg.dtype
+    assert eng.cache_nbytes() == expect(4)
+    assert paged_cache_bytes(cfg, n_slots, capacity, n_pages) == \
+        expect(np.dtype(np.float16).itemsize if cfg.dtype == "bfloat16"
+               else np.dtype(cfg.dtype).itemsize)
+
+
+def test_paged_beats_dense_bytes_at_skewed_capacity(setup):
+    """Provisioning for a rare long request: dense pays (n_slots, capacity)
+    everywhere; the paged pool pays only the pages the mix actually
+    needs."""
+    cfg, _ = setup
+    n_slots, capacity = 8, 256
+    pages_per_slot, _ = paged_attn_layout(cfg, capacity)
+    # pool sized for a mostly-short mix: 1/4 of full provisioning
+    n_pages = 1 + n_slots * pages_per_slot // 4
+    dense = cache_bytes(cfg, n_slots, capacity)
+    paged = paged_cache_bytes(cfg, n_slots, capacity, n_pages)
+    assert paged < 0.5 * dense
+
+
+def test_paged_engine_equivalent_on_skewed_mix(setup):
+    """The under-provisioned pool of the bytes test still serves a skewed
+    prompt mix to the same tokens as the dense engine."""
+    cfg, params = setup
+    rng = np.random.default_rng(7)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        4 if i % 4 else 40).tolist(),
+                    max_new=int(rng.integers(2, 6)))
+            for i in range(8)]
+    pages_per_slot, _ = paged_attn_layout(cfg, 64)
+    paged = ContinuousBatcher(cfg, params, n_slots=4, capacity=64,
+                              cache_layout="paged",
+                              n_pages=1 + 4 * pages_per_slot // 2)
+    dense = ContinuousBatcher(cfg, params, n_slots=4, capacity=64)
+    outs = {}
+    for tag, eng in [("paged", paged), ("dense", dense)]:
+        eng.submit([Request(r.rid, list(r.prompt), r.max_new)
+                    for r in reqs])
+        outs[tag] = eng.run()[0]
+    assert completions_equivalent(outs["paged"], outs["dense"])
+    assert paged.cache_nbytes() < dense.cache_nbytes()
+    assert DEFAULT_PAGE_SIZE == paged.page_size

@@ -69,6 +69,27 @@ def test_matches_unbatched_decode(setup):
         assert len(c.tokens) == len(ref)
 
 
+def test_run_returns_only_new_completions(setup):
+    """Regression: run() returned the cumulative self.done list, so a
+    second run() on the same batcher re-returned (and re-counted) the
+    first call's completions."""
+    cfg, params = setup
+    for eng_cls in (ContinuousBatcher, PerSlotBatcher):
+        eng = eng_cls(cfg, params, n_slots=2, capacity=64)
+        eng.submit([Request(rid=0, prompt=[1, 2], max_new=3)])
+        first, _ = eng.run()
+        assert [c.rid for c in first] == [0]
+        eng.submit([Request(rid=1, prompt=[4, 5], max_new=3),
+                    Request(rid=2, prompt=[6], max_new=2)])
+        second, _ = eng.run()
+        assert sorted(c.rid for c in second) == [1, 2]
+        # the archive still holds everything
+        assert sorted(c.rid for c in eng.done) == [0, 1, 2]
+        # and an idle run() reports nothing
+        third, steps = eng.run()
+        assert third == [] and steps == 0
+
+
 def test_utilization_reported(setup):
     cfg, params = setup
     eng = ContinuousBatcher(cfg, params, n_slots=2, capacity=64)

@@ -1,13 +1,15 @@
 """Serving-engine bench: fused slot-batched decode vs the seed per-slot
-loop at n_slots in {1, 4, 8, 16}, and the paged KV pool vs the dense cache
-layout on a skewed prompt-length mix.
+loop at n_slots in {1, 4, 8, 16}, the paged KV pool vs the dense cache
+layout on a skewed prompt-length mix, and sampled (temperature=0.8 /
+top_k=40) vs greedy decode on the same prompts and slots.
 
 Reports decode tokens/sec, jitted device dispatches per engine tick (the
-fused engine issues exactly ONE decode dispatch per tick, independent of
-n_slots; the seed loop issues one per active slot), the fused/seed
-speedup, and decode-state bytes (the paged pool holds only the pages the
-mix actually touches; the dense layout pays worst-case capacity on every
-slot).
+fused engine issues exactly ONE decode dispatch per tick — greedy OR
+sampled, on both layouts — independent of n_slots; the seed loop issues
+one per active slot), the fused/seed speedup, and decode-state bytes (the
+paged pool holds only the pages the mix actually touches; the dense
+layout pays worst-case capacity on every slot).  CI gates on every fused
+`*disp_per_tick` field staying <= 1.00 (benchmarks/check_serving.py).
 
     PYTHONPATH=src python -m benchmarks.run --only serving
     PYTHONPATH=src python benchmarks/bench_serving.py
@@ -62,7 +64,19 @@ def _drive(eng, reqs):
 def _clone(reqs):
     from repro.serving.scheduler import Request
 
-    return [Request(r.rid, list(r.prompt), r.max_new) for r in reqs]
+    return [Request(r.rid, list(r.prompt), r.max_new, r.sampling)
+            for r in reqs]
+
+
+def _sampled(reqs, temperature=0.8, top_k=40):
+    """The same workload decoded stochastically, one seed per request."""
+    from repro.serving.sampling import SamplingParams
+    from repro.serving.scheduler import Request
+
+    return [Request(r.rid, list(r.prompt), r.max_new,
+                    SamplingParams(temperature=temperature, top_k=top_k,
+                                   seed=1000 + r.rid))
+            for r in reqs]
 
 
 def run(quick: bool = False):
@@ -101,7 +115,7 @@ def run(quick: bool = False):
             f"slots={n_slots};tok={f_tok};equiv={equiv}"
             f";fused_tok_s={f_tps:.1f};perslot_tok_s={s_tps:.1f}"
             f";speedup={f_tps / s_tps:.2f}x"
-            f";fused_disp_per_tick={f_disp / max(1, f_ticks):.2f}"
+            f";fused_disp_per_tick={f_disp / max(1, f_ticks):.4f}"
             f";perslot_disp_per_tick={s_disp / max(1, s_ticks):.2f}"
             f";fused_prefill_disp={fused.prefill_dispatches}"))
 
@@ -121,8 +135,8 @@ def run(quick: bool = False):
     for eng in (dense, paged):
         _drive(eng, _clone(warm))
     mix = _skewed_workload(cfg.vocab_size, n_skew)
-    d_done, d_tok, d_s, d_ticks, _ = _drive(dense, _clone(mix))
-    p_done, p_tok, p_s, p_ticks, _ = _drive(paged, _clone(mix))
+    d_done, d_tok, d_s, d_ticks, d_disp = _drive(dense, _clone(mix))
+    p_done, p_tok, p_s, p_ticks, p_disp = _drive(paged, _clone(mix))
     equiv = completions_equivalent(p_done, d_done)
     d_bytes, p_bytes = dense.cache_nbytes(), paged.cache_nbytes()
     rows.append((
@@ -130,10 +144,45 @@ def run(quick: bool = False):
         p_s / max(1, p_tok) * 1e6,
         f"slots={n_slots};tok={p_tok};equiv={equiv}"
         f";paged_tok_s={p_tok / p_s:.1f};dense_tok_s={d_tok / d_s:.1f}"
+        f";paged_disp_per_tick={p_disp / max(1, p_ticks):.4f}"
+        f";dense_disp_per_tick={d_disp / max(1, d_ticks):.4f}"
         f";paged_cache_bytes={p_bytes};dense_cache_bytes={d_bytes}"
         f";bytes_ratio={p_bytes / d_bytes:.3f}"
         f";pages={n_pages};page_size={paged.page_size}"
         f";peak_pages_in_use={paged.allocator.peak_in_use}"))
+
+    # ---- sampled decode (temperature=0.8, top_k=40) vs greedy on the same
+    # prompts and slots: sampling rides inside the fused dispatch, so both
+    # layouts must hold 1.00 decode dispatch/tick (CI gates on this), and
+    # per-request seeds make dense and paged token-for-token reproducible.
+    n_slots = 4 if quick else 8
+    greedy_eng = ContinuousBatcher(cfg, params, n_slots=n_slots, capacity=64)
+    s_dense = ContinuousBatcher(cfg, params, n_slots=n_slots, capacity=64)
+    s_paged = ContinuousBatcher(cfg, params, n_slots=n_slots, capacity=64,
+                                cache_layout="paged")
+    base = _workload(cfg.vocab_size, n_requests)
+    warm = (_workload(cfg.vocab_size, max(2, n_slots), seed=99)
+            + [Request(rid=-1, prompt=list(range(1, 16)), max_new=2)])
+    for eng in (greedy_eng, s_dense, s_paged):
+        _drive(eng, _clone(warm))
+    g_done, g_tok, g_s, _, _ = _drive(greedy_eng, _clone(base))
+    d_done, d_tok, d_s, d_ticks, d_disp = _drive(s_dense, _sampled(base))
+    p_done, p_tok, p_s, p_ticks, p_disp = _drive(s_paged, _sampled(base))
+    # equivalence with the repo-wide tie tolerance (the engines compile
+    # different programs); exact dict equality reported alongside
+    repro = completions_equivalent(d_done, p_done)
+    exact = ({c.rid: c.tokens for c in d_done}
+             == {c.rid: c.tokens for c in p_done})
+    g_tps, s_tps = g_tok / g_s, d_tok / d_s
+    rows.append((
+        "serving_sampled_vs_greedy",
+        d_s / max(1, d_tok) * 1e6,
+        f"slots={n_slots};tok={d_tok};temp=0.8;top_k=40"
+        f";greedy_tok_s={g_tps:.1f};sampled_tok_s={s_tps:.1f}"
+        f";sampled_over_greedy={s_tps / g_tps:.2f}x"
+        f";sampled_dense_disp_per_tick={d_disp / max(1, d_ticks):.4f}"
+        f";sampled_paged_disp_per_tick={p_disp / max(1, p_ticks):.4f}"
+        f";sampled_equiv={repro};dense_paged_token_identical={exact}"))
     return rows
 
 

@@ -1,0 +1,55 @@
+"""CI gate over the serving bench artifact: the fused engines must hold
+exactly one decode dispatch per tick.
+
+Reads BENCH_serving.json (written by `benchmarks.run --only serving`) and
+fails if ANY fused `*disp_per_tick` field exceeds 1.00 — a sampling or
+cache-layout change silently un-fusing the dispatch is the regression
+this catches.  The seed per-slot baseline (`perslot_*`) is exempt: it
+pays one dispatch per active slot by design.
+
+    PYTHONPATH=src python -m benchmarks.run --quick --only serving
+    python benchmarks/check_serving.py BENCH_serving.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+MAX_DISP_PER_TICK = 1.00
+
+
+def check(path: str) -> int:
+    with open(path) as f:
+        data = json.load(f)
+    seen, bad = 0, []
+    for row in data.get("rows", []):
+        for key, val in row.get("fields", {}).items():
+            if not key.endswith("disp_per_tick"):
+                continue
+            if key.startswith("perslot"):
+                continue  # seed baseline: one dispatch per active slot
+            seen += 1
+            if not isinstance(val, (int, float)):
+                bad.append((row["name"], key,
+                            f"non-numeric value {val!r} — the bench "
+                            f"artifact format changed"))
+            elif val > MAX_DISP_PER_TICK:
+                bad.append((row["name"], key,
+                            f"{val} exceeds {MAX_DISP_PER_TICK} — the "
+                            f"fused dispatch has un-fused"))
+    if not seen:
+        print(f"check_serving: no fused disp_per_tick fields in {path} — "
+              "the bench artifact is malformed", file=sys.stderr)
+        return 1
+    if bad:
+        for name, key, why in bad:
+            print(f"check_serving: {name}: {key}: {why}", file=sys.stderr)
+        return 1
+    print(f"check_serving: {seen} fused disp_per_tick fields all "
+          f"<= {MAX_DISP_PER_TICK}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(check(sys.argv[1] if len(sys.argv) > 1
+                   else "BENCH_serving.json"))

@@ -5,13 +5,15 @@ slots are refilled immediately so the decode batch stays full.
 The fused engine drives the whole pool with ONE jitted dispatch per engine
 tick (stacked slot cache, per-slot positions, in-dispatch slot reset) and
 writes prompts with a chunked prefill fast path; pass --compare to also run
-the seed per-slot loop (one dispatch per active slot per tick), and --paged
-to serve the same stream through the paged KV pool (shared page pool +
+the seed per-slot loop (one dispatch per active slot per tick), --paged to
+serve the same stream through the paged KV pool (shared page pool +
 per-slot block tables, refcounted prompt-prefix sharing) and report its
-cache-byte savings over the dense layout.
+cache-byte savings over the dense layout, and --temperature > 0 to decode
+stochastically (per-request seeds; sampling runs inside the same single
+dispatch, and the same seeds reproduce the same tokens on every engine).
 
     PYTHONPATH=src python examples/continuous_batching.py --slots 3 \
-        --compare --paged
+        --compare --paged --temperature 0.8 --top-k 40
 """
 import argparse
 import os
@@ -32,7 +34,7 @@ def drive(eng, reqs, tag):
     toks = sum(len(c.tokens) for c in done)
     print(f"[{tag}] {len(done)} requests over {eng.n_slots} slots in "
           f"{steps} engine ticks ({dt:.1f}s CPU, {toks / dt:.1f} tok/s), "
-          f"slot utilization {eng.utilization(steps):.0%}")
+          f"slot utilization {eng.utilization():.0%}")
     print(f"[{tag}] decode dispatches/tick: "
           f"{eng.decode_dispatches / max(1, steps):.2f} "
           f"(+{eng.prefill_dispatches} chunked-prefill dispatches)")
@@ -48,23 +50,39 @@ def main():
                     help="also run the seed per-slot loop")
     ap.add_argument("--paged", action="store_true",
                     help="also run the paged KV-pool layout")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy (default); > 0 samples per request")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base sampling seed (request i uses seed + i)")
     args = ap.parse_args()
 
     from repro.configs import get_smoke_config
     from repro.models import params as Pm
-    from repro.serving import ContinuousBatcher, PerSlotBatcher, Request
+    from repro.serving import (ContinuousBatcher, PerSlotBatcher, Request,
+                               SamplingParams)
 
     cfg = get_smoke_config(args.arch)
     params, _ = Pm.init_params(jax.random.PRNGKey(0), cfg)
+    sampled = args.temperature > 0
 
     def workload():
         rng = np.random.default_rng(0)
         return [Request(rid=i,
                         prompt=rng.integers(1, cfg.vocab_size,
                                             rng.integers(2, 10)).tolist(),
-                        max_new=int(rng.integers(3, 12)))
+                        max_new=int(rng.integers(3, 12)),
+                        sampling=SamplingParams(
+                            temperature=args.temperature, top_k=args.top_k,
+                            top_p=args.top_p, seed=args.seed + i)
+                        if sampled else None)
                 for i in range(args.requests)]
 
+    if sampled:
+        print(f"decode: sampled T={args.temperature} top_k={args.top_k} "
+              f"top_p={args.top_p} (request i seeded {args.seed}+i; same "
+              f"seeds => same tokens on every engine)")
     eng = ContinuousBatcher(cfg, params, n_slots=args.slots, capacity=96)
     done = drive(eng, workload(), "fused")
     for c in sorted(done, key=lambda c: c.rid)[:5]:

@@ -1,7 +1,8 @@
-"""Serving launcher: batched prefill-free decode demo with KV/SSM state.
+"""Serving launcher: batched decode demo with KV/SSM state and optional
+stochastic sampling (temperature / top-k / top-p, seeded).
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6_7b --smoke \
-      --batch 4 --prompt-len 16 --gen 32
+      --batch 4 --prompt-len 16 --gen 32 --temperature 0.8 --top-k 40
 """
 from __future__ import annotations
 
@@ -20,16 +21,28 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--capacity", type=int, default=256)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy (default); > 0 samples")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k most likely tokens (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling threshold (1.0 = off)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="sampling seed (same seed, same tokens)")
     args = ap.parse_args()
 
     from repro.configs import get_config, get_smoke_config
     from repro.models import params as Pm
-    from repro.serving import greedy_generate, init_cache, make_serve_step
+    from repro.serving import (SamplingParams, greedy_generate, init_cache,
+                               make_serve_step)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     key = jax.random.PRNGKey(0)
     params, _ = Pm.init_params(key, cfg)
     B = args.batch
+    sampling = SamplingParams(temperature=args.temperature,
+                              top_k=args.top_k, top_p=args.top_p,
+                              seed=args.seed)
 
     cache = init_cache(cfg, B, args.capacity, pos=0)
     serve = jax.jit(make_serve_step(cfg))
@@ -45,12 +58,16 @@ def main():
     prompt_s = time.time() - t0
 
     t0 = time.time()
-    out = greedy_generate(cfg, params, cache, tok, args.gen)
+    out = greedy_generate(cfg, params, cache, tok, args.gen,
+                          sampling=sampling)
     out = jax.device_get(out)
     gen_s = time.time() - t0
     per_tok = gen_s / args.gen
+    mode = (f"sampled(T={sampling.temperature}, top_k={sampling.top_k}, "
+            f"top_p={sampling.top_p}, seed={sampling.seed})"
+            if sampling.temperature > 0 else "greedy")
     print(f"arch={cfg.name} batch={B} prompt={args.prompt_len} "
-          f"gen={args.gen}")
+          f"gen={args.gen} decode={mode}")
     print(f"prompt: {prompt_s:.2f}s; generate: {gen_s:.2f}s "
           f"({per_tok*1e3:.1f} ms/token/batch, "
           f"{B/per_tok:.1f} tok/s aggregate)")

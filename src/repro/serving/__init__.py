@@ -1,3 +1,36 @@
+"""Serving stack: a host-side POLICY layer over device-facing ENGINES.
+
+Layer split (who runs vs how it runs):
+
+- ``scheduler`` — policy.  `Request` / `SamplingParams` intake and
+  validation, FIFO admission, per-request token budgets, worst-case page
+  reservation with refcounted prompt-prefix sharing (`PageAllocator`),
+  slot assignment/release, completion records, utilization metrics.
+  Touches no device buffers.
+- ``engine`` — dispatch.  `DenseEngine` (stacked dense rings, device
+  `pos` vector, in-dispatch slot reset), `PagedEngine` (ONE shared page
+  pool per layer, host-owned block tables + positions), `PerSlotEngine`
+  (seed batch-1 baseline).  Each owns its decode state and jitted step
+  functions and advances the whole slot pool in ONE dispatch per tick.
+- ``sampling`` — the decode-policy kernel.  Per-slot temperature /
+  top-k / top-p sampling expressed as Gumbel-max over filtered scaled
+  logits, fused INSIDE the engine dispatch: per-slot base PRNG keys and
+  emit indices ride through every step as batched arrays, with the noise
+  key `fold_in`-derived per (request seed, emit index) — so sampled
+  decode costs exactly one dispatch per tick, temperature 0 recovers the
+  greedy path bit-for-bit, and same-seed runs reproduce token-for-token
+  across the dense, paged, and per-slot engines.
+- ``kvcache`` / ``serve_step`` — decode-state construction (dense +
+  paged layouts, slot ops) and the jitted step functions both engine
+  kinds compile.
+
+Sampling contract: a request's decode policy is `Request.sampling`
+(falling back to the batcher's `default_sampling`, greedy).  The chosen
+token is always `argmax(scores)` where scores are raw fp32 logits
+(greedy) or Gumbel-perturbed filtered logits (sampled); the per-token
+top1-top2 score gap is recorded as the tie margin `completions_equivalent`
+uses to compare differently-compiled engines.
+"""
 from repro.serving.kvcache import (  # noqa: F401
     DEFAULT_PAGE_SIZE,
     init_cache,
@@ -9,6 +42,14 @@ from repro.serving.kvcache import (  # noqa: F401
     slot_slice,
     slot_update,
 )
+from repro.serving.sampling import (  # noqa: F401
+    GREEDY,
+    SamplingParams,
+    SlotSampling,
+    argmax_with_margin,
+    batched_scores,
+    sampled_scores,
+)
 from repro.serving.serve_step import (  # noqa: F401
     make_serve_step,
     make_prefill_step,
@@ -17,6 +58,11 @@ from repro.serving.serve_step import (  # noqa: F401
     make_slot_prefill_step,
     make_paged_prefill_step,
     greedy_generate,
+)
+from repro.serving.engine import (  # noqa: F401
+    DenseEngine,
+    PagedEngine,
+    PerSlotEngine,
 )
 from repro.serving.scheduler import (  # noqa: F401
     ContinuousBatcher,

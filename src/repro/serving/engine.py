@@ -1,0 +1,247 @@
+"""Device-facing serving engines: the dispatch half of the serving stack.
+
+The policy layer (serving/scheduler.py) decides WHO runs — FIFO admission,
+page budgets and prefix sharing, slot assignment, completion accounting.
+An engine decides HOW: it owns the device-resident decode state (stacked
+caches or the shared page pool, per-slot positions, block tables) and the
+jitted step functions from serve_step.py, and guarantees that advancing
+the whole slot pool by one token — sampled or greedy — costs exactly ONE
+device dispatch per tick.
+
+Three engines share the same narrow surface (`mark_reset`, `admit`,
+`release`, `prefill_block`, `decode`, `cache_nbytes`, dispatch counters):
+
+- ``DenseEngine``: one (n_slots, capacity, KV, hd) ring per layer; "pos"
+  lives on device as a (n_slots,) vector inside the cache tree; slot
+  resets are fused into the decode dispatch via a reset mask.
+- ``PagedEngine``: ONE shared (n_pages, page_size, KV, hd) pool per layer
+  addressed through a host-owned (n_slots, pages_per_slot) block table;
+  positions are host-tracked, page lifetime belongs to the policy layer's
+  PageAllocator — the engine only writes table rows and scatters through
+  them.
+- ``PerSlotEngine``: the seed baseline — one jitted batch-1 call per
+  active slot per tick, kept as the equivalence reference and the bench's
+  "before" side.
+
+Per-slot sampling state (serving/sampling.SlotSampling) rides through
+every decode and prefill dispatch as batched arrays: greedy and sampled
+slots share one compiled program, so turning sampling on never un-fuses
+the dispatch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving.kvcache import (DEFAULT_PAGE_SIZE, attn_cache_shape,
+                                   init_cache, init_paged_cache,
+                                   paged_attn_layout)
+from repro.serving.sampling import (SlotSampling, argmax_with_margin,
+                                    row_scores)
+from repro.serving.serve_step import (make_engine_step,
+                                      make_paged_engine_step,
+                                      make_paged_prefill_step,
+                                      make_slot_prefill_step)
+
+
+class DenseEngine:
+    """Stacked dense-ring decode state driven by one fused dispatch/tick."""
+
+    layout = "dense"
+
+    def __init__(self, cfg: ModelConfig, params, n_slots: int,
+                 capacity: int, use_pallas: bool = False):
+        self.cfg, self.params = cfg, params
+        self.n_slots, self.capacity = n_slots, capacity
+        # ring size of the attention cache (multi-token prefill blocks must
+        # not wrap it); None for pure-recurrent archs
+        self.ring_cap = None
+        if cfg.block_kind in ("attention", "hybrid"):
+            self.ring_cap = attn_cache_shape(cfg, 1, capacity)["k"][1]
+        # donate the pool cache: the host drops its reference at each
+        # reassignment, so XLA may update the (large) KV/SSM pool in place
+        # instead of copying it every tick
+        self.cache = init_cache(cfg, n_slots, capacity,
+                                pos=np.zeros((n_slots,), np.int32),
+                                dtype=jnp.float32)
+        self._decode = jax.jit(make_engine_step(cfg, use_pallas),
+                               donate_argnums=1)
+        self._prefill = jax.jit(make_slot_prefill_step(cfg, use_pallas),
+                                donate_argnums=1)
+        self._reset_mask = np.zeros((n_slots,), bool)
+        self.decode_dispatches = 0
+        self.prefill_dispatches = 0
+
+    # --------------------------------------------------- slot lifecycle
+
+    def mark_reset(self, s: int):
+        """Zero slot s's lanes inside the next decode dispatch."""
+        self._reset_mask[s] = True
+
+    def admit(self, s: int, pages=None, pos0: int = 0):
+        """Nothing device-side: dense lanes are reclaimed by reset."""
+
+    def release(self, s: int):
+        """Nothing device-side: the refill reset reclaims the lanes."""
+
+    def set_pos(self, s: int, pos: int):
+        """No-op: dense positions live on device and advance in-dispatch."""
+
+    # ---------------------------------------------------------- compute
+
+    def prefill_block(self, s: int, block, off: int, reset: bool,
+                      row: SlotSampling):
+        """Write a (1, S) prompt block into slot s's lanes in one call;
+        returns (token, margin) sampled from the block's last position."""
+        tok, margin, self.cache = self._prefill(
+            self.params, self.cache, s, jnp.asarray(block), reset, row)
+        self.prefill_dispatches += 1
+        return int(tok), float(margin)
+
+    def decode(self, toks, active_mask, sampling: SlotSampling):
+        """One fused tick: every slot advances one token in ONE dispatch."""
+        nxt, margins, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(toks),
+            jnp.asarray(self._reset_mask), jnp.asarray(active_mask),
+            sampling)
+        self.decode_dispatches += 1
+        self._reset_mask[:] = False
+        return np.asarray(nxt), np.asarray(margins)
+
+    def cache_nbytes(self) -> int:
+        """Live device bytes of this engine's decode state."""
+        return sum(l.nbytes for l in jax.tree.leaves(self.cache))
+
+
+class PagedEngine:
+    """Shared-page-pool decode state: block tables + host-tracked pos.
+
+    Page *lifetime* (alloc / refcount / free) belongs to the policy
+    layer's PageAllocator; this engine owns the device pool and the block
+    table the dispatches scatter through."""
+
+    layout = "paged"
+
+    def __init__(self, cfg: ModelConfig, params, n_slots: int,
+                 capacity: int, page_size: int = DEFAULT_PAGE_SIZE,
+                 n_pages: int | None = None, use_pallas: bool = False):
+        self.cfg, self.params = cfg, params
+        self.n_slots, self.capacity = n_slots, capacity
+        self.page_size = page_size
+        self.pages_per_slot, logical = paged_attn_layout(
+            cfg, capacity, page_size)
+        if n_pages is None:  # full provisioning (dense-equivalent)
+            n_pages = 1 + n_slots * self.pages_per_slot
+        self.n_pages = n_pages
+        self.ring_cap = logical
+        self.block_table = np.zeros((n_slots, self.pages_per_slot), np.int32)
+        self.slot_pos = np.zeros((n_slots,), np.int32)
+        self.cache = init_paged_cache(cfg, n_slots, capacity, n_pages,
+                                      page_size, dtype=jnp.float32)
+        self._decode = jax.jit(make_paged_engine_step(cfg, use_pallas),
+                               donate_argnums=1)
+        self._prefill = jax.jit(make_paged_prefill_step(cfg, use_pallas),
+                                donate_argnums=1)
+        self._reset_mask = np.zeros((n_slots,), bool)
+        self.decode_dispatches = 0
+        self.prefill_dispatches = 0
+
+    # --------------------------------------------------- slot lifecycle
+
+    def mark_reset(self, s: int):
+        """Zero slot s's dense recurrent lanes in the next dispatch (pool
+        pages are never zeroed — stale entries masked by position
+        validity)."""
+        self._reset_mask[s] = True
+
+    def admit(self, s: int, pages=None, pos0: int = 0):
+        """Point slot s's block-table row at `pages`; pos0 > 0 jump-starts
+        behind a refcount-shared prompt prefix."""
+        self.block_table[s, :] = 0
+        if pages:
+            self.block_table[s, :len(pages)] = pages
+        self.slot_pos[s] = pos0
+
+    def release(self, s: int):
+        """Fall the row back to the null page so the idle lane's scatter
+        lands nowhere live (the allocator reclaims the pages host-side)."""
+        self.block_table[s, :] = 0
+
+    def set_pos(self, s: int, pos: int):
+        self.slot_pos[s] = pos
+
+    # ---------------------------------------------------------- compute
+
+    def prefill_block(self, s: int, block, off: int, reset: bool,
+                      row: SlotSampling):
+        tok, margin, self.cache = self._prefill(
+            self.params, self.cache, s, jnp.asarray(block), np.int32(off),
+            jnp.asarray(self.block_table[s:s + 1]), reset, row)
+        self.prefill_dispatches += 1
+        return int(tok), float(margin)
+
+    def decode(self, toks, active_mask, sampling: SlotSampling):
+        nxt, margins, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(toks),
+            jnp.asarray(self.slot_pos), jnp.asarray(self.block_table),
+            jnp.asarray(self._reset_mask), sampling)
+        self.decode_dispatches += 1
+        self._reset_mask[:] = False
+        self.slot_pos[active_mask] += 1  # idle lanes stay pinned
+        return np.asarray(nxt), np.asarray(margins)
+
+    def cache_nbytes(self) -> int:
+        """Live device bytes, host block table + pos vector included."""
+        n = sum(l.nbytes for l in jax.tree.leaves(self.cache))
+        return n + self.block_table.nbytes + self.slot_pos.nbytes
+
+
+class PerSlotEngine:
+    """Seed baseline: one jitted batch-1 call per active slot per tick.
+
+    Sampling is fused into the same batch-1 program (logits + Gumbel-max
+    in one call), so the baseline still pays exactly one dispatch per
+    active slot-step."""
+
+    layout = "per_slot"
+
+    def __init__(self, cfg: ModelConfig, params, n_slots: int,
+                 capacity: int, use_pallas: bool = False):
+        self.cfg, self.params = cfg, params
+        self.n_slots, self.capacity = n_slots, capacity
+        # one single-sequence cache per slot => independent positions
+        self.caches = [init_cache(cfg, 1, capacity, pos=0,
+                                  dtype=jnp.float32)
+                       for _ in range(n_slots)]
+
+        def slot_step(params, cache, tok, row):
+            out = T.forward(params, cfg, tok, cache=cache,
+                            use_pallas=use_pallas)
+            scores = row_scores(out.logits[0, -1], row)
+            tok_, margin = argmax_with_margin(scores[None])
+            return tok_[0], margin[0], out.cache
+
+        self._step = jax.jit(slot_step)
+        self.decode_dispatches = 0
+        self.prefill_dispatches = 0
+
+    def reset_slot(self, s: int):
+        """Re-initialise slot s's private cache for a fresh request."""
+        self.caches[s] = init_cache(self.cfg, 1, self.capacity, pos=0,
+                                    dtype=jnp.float32)
+
+    def step(self, s: int, tok: int, row: SlotSampling):
+        """Advance one slot by one token (its own batch-1 dispatch)."""
+        t, m, self.caches[s] = self._step(
+            self.params, self.caches[s], jnp.asarray([[tok]], jnp.int32),
+            row)
+        self.decode_dispatches += 1
+        return int(t), float(m)
+
+    def cache_nbytes(self) -> int:
+        """Live device bytes of this engine's decode state."""
+        return sum(l.nbytes for c in self.caches
+                   for l in jax.tree.leaves(c))

@@ -1,0 +1,204 @@
+"""Fused per-slot stochastic sampling for the serving engines.
+
+Sampling is expressed as Gumbel-max over filtered, temperature-scaled
+logits: the sampled token is the argmax of
+
+    scores = scaled_filtered_logits + gumbel_noise
+
+which lets every engine reuse the greedy machinery — the token is
+``argmax(scores)`` and the top1-top2 gap of the SAME scores is the tie
+margin that ``completions_equivalent`` already understands (a near-zero
+margin marks a perturbed-score tie where differently-compiled variants of
+the same math may legitimately pick different tokens).  At
+``temperature <= 0`` the scores ARE the raw fp32 logits, so the greedy
+path is recovered bit-for-bit and a whole-batch ``lax.cond`` skips the
+sampling compute entirely when no slot samples.
+
+Randomness is keyed per request, not per slot or engine: a request's
+``SamplingParams.seed`` derives a base PRNG key (host-side, once, at
+admission) and the key for its i-th emitted token is
+``jax.random.fold_in(base, i)`` INSIDE the fused dispatch.  Token i of a
+request therefore sees identical noise whichever slot it lands in and
+whichever engine (dense / paged / per-slot) decodes it — same-seed runs
+are reproducible token-for-token across all three, and sampled decode
+still costs exactly one dispatch per engine tick.
+
+Filtering order matches the de-facto standard (HF/vLLM): temperature
+scale, then top-k, then top-p (nucleus) on the scaled distribution.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decode policy.
+
+    temperature: 0 (default) is greedy argmax; > 0 samples from the
+    scaled distribution.  top_k: keep only the k highest-probability
+    tokens (0 = off).  top_p: keep the smallest set of tokens whose
+    cumulative probability reaches top_p (1.0 = off).  seed: derives the
+    request's PRNG key — same seed, same tokens, on every engine."""
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0: {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (0 = off): {self.top_k}")
+        if not 0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1]: {self.top_p}")
+
+
+GREEDY = SamplingParams()
+
+_KEY0 = None
+
+
+def request_key(seed: int) -> np.ndarray:
+    """Host-side base key for a request (uint32 key data, np array)."""
+    return np.asarray(jax.random.PRNGKey(seed), np.uint32)
+
+
+def key_zeros() -> np.ndarray:
+    """A zeroed key of the backend's key width (don't-care / greedy)."""
+    global _KEY0
+    if _KEY0 is None:
+        _KEY0 = np.zeros_like(request_key(0))
+    return _KEY0
+
+
+class SlotSampling(NamedTuple):
+    """Per-slot sampling state, batched over the slot pool and passed into
+    the fused dispatch (leaves are plain arrays; field order matches the
+    positional arguments of ``sampled_scores``).  ``step`` is the request's
+    emit index — the fold_in counter, NOT the engine tick."""
+
+    key: np.ndarray          # (n_slots, key_width) uint32 base keys
+    step: np.ndarray         # (n_slots,) int32 per-request emit index
+    temperature: np.ndarray  # (n_slots,) float32; <= 0 means greedy
+    top_k: np.ndarray        # (n_slots,) int32; 0 means off
+    top_p: np.ndarray        # (n_slots,) float32; 1.0 means off
+
+
+def _scaled(logits, temperature):
+    t = jnp.where(temperature > 0, temperature, jnp.float32(1.0))
+    return logits.astype(jnp.float32) / t
+
+
+def _gumbel(key, step, V):
+    return jax.random.gumbel(jax.random.fold_in(key, step), (V,),
+                             jnp.float32)
+
+
+def _filter_keep(scaled, top_k, top_p):
+    """Boolean keep mask over (V,) scaled logits: top-k first, then the
+    nucleus cut over the RENORMALIZED top-k survivors (HF/vLLM order) —
+    the smallest prefix of the surviving distribution reaching top_p (the
+    token that crosses the threshold is kept).  Masks are rank-based, not
+    value-threshold-based: exactly k (resp. n_keep) tokens survive even
+    when the cutoff logit is tied (stable argsort breaks ties toward the
+    lower index, matching argmax)."""
+    V = scaled.shape[-1]
+    order = jnp.argsort(-scaled)  # descending, stable
+    ranks = jnp.zeros((V,), jnp.int32).at[order].set(
+        jnp.arange(V, dtype=jnp.int32))
+    k = jnp.where(top_k > 0, jnp.minimum(top_k, V), V)
+    srt = scaled[order]
+    probs = jax.nn.softmax(jnp.where(jnp.arange(V) < k, srt, -jnp.inf))
+    n_keep = jnp.maximum(1, jnp.sum((jnp.cumsum(probs) - probs) < top_p))
+    n_p = jnp.where(top_p < 1.0, n_keep, V)
+    return (ranks < k) & (ranks < n_p)
+
+
+def sampled_scores(logits, key, step, temperature, top_k, top_p):
+    """(V,) logits + scalar params -> (V,) fp32 scores whose argmax is the
+    sampled token (Gumbel-max); temperature <= 0 returns the raw fp32
+    logits, so argmax recovers greedy bit-for-bit."""
+    logits = logits.astype(jnp.float32)
+    scaled = _scaled(logits, temperature)
+    keep = _filter_keep(scaled, top_k, top_p)
+    perturbed = jnp.where(keep, scaled + _gumbel(key, step,
+                                                 logits.shape[-1]),
+                          -jnp.inf)
+    return jnp.where(temperature > 0, perturbed, logits)
+
+
+def _temperature_scores(logits, key, step, temperature, top_k, top_p):
+    """sampled_scores specialised to no filtering (top_k=0, top_p=1.0):
+    bitwise-identical output on that subdomain, without the O(V log V)
+    sort / softmax / cumsum of the filter path."""
+    logits = logits.astype(jnp.float32)
+    perturbed = _scaled(logits, temperature) + _gumbel(key, step,
+                                                       logits.shape[-1])
+    return jnp.where(temperature > 0, perturbed, logits)
+
+
+def _filtered(top_k, top_p):
+    return (top_k > 0) | (top_p < 1.0)
+
+
+def batched_scores(logits, sampling: SlotSampling):
+    """(B, V) logits + batched SlotSampling -> (B, V) scores.  Whole-batch
+    conds keep the common cases cheap: every-slot-greedy pays only the
+    argmax it always paid, and pure-temperature sampling skips the
+    top-k/top-p filter's full-vocab sort."""
+    greedy = logits.astype(jnp.float32)
+
+    def sample(_):
+        return jax.lax.cond(
+            jnp.any(_filtered(sampling.top_k, sampling.top_p)),
+            lambda __: jax.vmap(sampled_scores)(logits, *sampling),
+            lambda __: jax.vmap(_temperature_scores)(logits, *sampling),
+            None)
+
+    return jax.lax.cond(jnp.any(sampling.temperature > 0), sample,
+                        lambda _: greedy, None)
+
+
+def row_scores(logits, row: SlotSampling):
+    """(V,) logits + scalar-leaf SlotSampling row -> (V,) scores (the
+    chunked-prefill steps sample one slot's first generated token)."""
+
+    def sample(_):
+        return jax.lax.cond(
+            _filtered(row.top_k, row.top_p),
+            lambda __: sampled_scores(logits, *row),
+            lambda __: _temperature_scores(logits, *row), None)
+
+    return jax.lax.cond(row.temperature > 0, sample,
+                        lambda _: logits.astype(jnp.float32), None)
+
+
+def argmax_with_margin(scores):
+    """(B, V) -> (argmax (B,), top1-top2 margin (B,) in fp32)."""
+    top2 = jax.lax.top_k(scores.astype(jnp.float32), 2)[0]
+    return jnp.argmax(scores, axis=-1), top2[:, 0] - top2[:, 1]
+
+
+def lockstep_scores(logits, base_key, step, sp: SamplingParams):
+    """Scores for one step of a lock-step decode loop: logits (..., V),
+    one static SamplingParams for the whole batch.  Every leading-axis row
+    (batch element, audio codebook) gets independent noise via a per-row
+    fold_in, then the per-token fold_in on `step` inside sampled_scores."""
+    V = logits.shape[-1]
+    flat = logits.reshape((-1, V))
+    R = flat.shape[0]
+    keys = jax.vmap(lambda r: jax.random.fold_in(base_key, r))(jnp.arange(R))
+    ss = SlotSampling(
+        key=keys,
+        step=jnp.full((R,), step, jnp.int32),
+        temperature=jnp.full((R,), sp.temperature, jnp.float32),
+        top_k=jnp.full((R,), sp.top_k, jnp.int32),
+        top_p=jnp.full((R,), sp.top_p, jnp.float32))
+    return batched_scores(flat, ss).reshape(logits.shape)

@@ -1,27 +1,39 @@
-"""Continuous-batching serving scheduler, fused into a slot-batched engine.
+"""Host-side serving POLICY layer: admission, budgets, pages, accounting.
 
-Production serving substrate: a fixed pool of `n_slots` decode lanes over
-ONE stacked KV cache / recurrent state with a slot axis.  Requests arrive
-with different prompt lengths and generation budgets; free slots are
-refilled as sequences finish, so the batch stays full (vLLM-style
-continuous batching, sized down to the framework's decode step).
+The serving stack is split in two:
+
+- this module decides WHO runs: `Request` intake and validation, FIFO
+  admission, per-request token budgets, worst-case page reservation and
+  refcounted prompt-prefix sharing (`PageAllocator`), slot assignment and
+  release, completion records and utilization metrics.  Nothing here
+  touches a device buffer.
+- serving/engine.py decides HOW: each engine owns the device-resident
+  decode state (stacked dense rings, the shared page pool + block tables,
+  or the seed per-slot caches) and the jitted step functions, and
+  guarantees one fused dispatch advances the whole slot pool by one token
+  per tick.
+
+Decoding policy is per request: `Request.sampling` (a
+sampling.SamplingParams) selects greedy argmax (temperature 0, the
+default) or temperature / top-k / top-p stochastic decode.  Sampling runs
+INSIDE the fused dispatch — the policy layer only ships per-slot arrays
+(base PRNG key, emit index, temperature, top_k, top_p) with each tick, so
+sampled decode costs exactly one dispatch per tick and a request's tokens
+are reproducible from its seed on every engine (dense, paged, per-slot).
 
 Engine-level semantics (`ContinuousBatcher`, the fused engine):
 
   - every slot holds an independent sequence with its own position counter:
-    the stacked cache carries a vector `pos` (one int32 per slot) and the
-    model decode path consumes it natively — one jitted dispatch advances
-    the WHOLE pool by one token per engine tick, independent of n_slots;
+    one jitted dispatch advances the WHOLE pool by one token per engine
+    tick, independent of n_slots;
   - a finished slot's lanes are reset by index inside the same dispatch
-    (`reset_slots` fused into the engine step — no host-side re-init_cache
-    on refill);
+    (no host-side re-init_cache on refill);
   - prompt tokens take a chunked prefill fast path: blocks of prompt tokens
-    are written into the slot's cache lanes in one call each
-    (`make_slot_prefill_step`), instead of being decoded one at a time.
-    Block sizes are power-of-two bucketed (bounded set of compiled shapes)
-    and capped so a block never wraps a ring cache past entries its own
-    earlier tokens still attend to; past the ring boundary prefill falls
-    back to exact token-by-token feeding.
+    are written into the slot's cache lanes in one call each, instead of
+    being decoded one at a time.  Block sizes are power-of-two bucketed
+    (bounded set of compiled shapes) and capped so a block never wraps a
+    ring cache past entries its own earlier tokens still attend to; past
+    the ring boundary prefill falls back to exact token-by-token feeding.
 
 Cache layouts (`cache_layout=` on the fused engine):
 
@@ -29,51 +41,39 @@ Cache layouts (`cache_layout=` on the fused engine):
     every slot owns worst-case `capacity` entries for its whole lifetime;
   - "paged": ONE shared (n_pages, page_size, KV, hd) pool per layer plus
     per-slot block tables of page ids (vLLM-style).  A `PageAllocator`
-    owns the pool host-side: admission reserves ceil((prompt + budget) /
-    page_size) pages up front, so a request is admitted only when its
-    whole sequence fits — the queue stalls (FIFO) on pool exhaustion and
-    admission resumes as finishing slots release their pages (reclaim is
-    fused with slot release: one host-side refcount sweep, no device
-    work).  Requests sharing a common prompt prefix refcount the same
-    pages: full prompt pages are registered under a rolling prefix key,
-    and a later identical prefix acquires those pages instead of copying
-    them (with chunked prefill on pure-attention archs the sharer also
-    SKIPS prefilling the shared tokens and jump-starts at the prefix
-    boundary).  The block-table shape is (n_slots, pages_per_slot) with
-    pages_per_slot = ceil(ring_cap / page_size); page 0 is the reserved
-    null page idle lanes point at.  Positions are host-tracked under this
-    layout, and pool pages are never zeroed — stale entries are masked by
-    position validity.  Recurrent archs (mamba2 / rwkv6) keep O(1) dense
-    state (the layout flag is a no-op); hybrid routes only its shared
-    attention leaves through the pool.  Prefix sharing turns itself off
-    when the logical ring can wrap (sliding-window / chunked attention
-    with capacity > window): a wrapped ring overwrites prefix entries.
+    owns page lifetime host-side: admission reserves ceil((prompt +
+    budget) / page_size) pages up front, so a request is admitted only
+    when its whole sequence fits — the queue stalls (FIFO) on pool
+    exhaustion and admission resumes as finishing slots release their
+    pages; a request whose worst case can NEVER fit the pool is rejected
+    at submit() instead of stalling the queue head forever.  Requests
+    sharing a common prompt prefix refcount the same pages (with chunked
+    prefill on pure-attention archs the sharer also SKIPS prefilling the
+    shared tokens).  Prefix sharing turns itself off when the logical
+    ring can wrap (a wrapped ring overwrites prefix entries).  Recurrent
+    archs (mamba2 / rwkv6) keep O(1) dense state; hybrid pages only its
+    shared attention leaves.
 
-`PerSlotBatcher` keeps the seed engine — one jitted batch-1 call per active
-slot per tick — as the equivalence baseline and the bench's "before" side.
-Both engines share intake, accounting and completion semantics: a sequence
-(prompt + completion) occupies at most `capacity` cache entries, empty
-prompts are rejected unless a `bos_token` is configured, and decoding is
-greedy.
+`PerSlotBatcher` drives the seed engine — one jitted batch-1 call per
+active slot per tick — as the equivalence baseline and the bench's
+"before" side.  Both batchers share intake, accounting and completion
+semantics: a sequence (prompt + completion) occupies at most `capacity`
+cache entries, and empty prompts are rejected unless a `bos_token` is
+configured.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Iterable
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.models import transformer as T
 from repro.models.config import ModelConfig
-from repro.serving.kvcache import (DEFAULT_PAGE_SIZE, attn_cache_shape,
-                                   init_cache, init_paged_cache,
-                                   paged_attn_layout)
-from repro.serving.serve_step import (make_engine_step,
-                                      make_paged_engine_step,
-                                      make_paged_prefill_step,
-                                      make_slot_prefill_step)
+from repro.serving.engine import DenseEngine, PagedEngine, PerSlotEngine
+from repro.serving.kvcache import DEFAULT_PAGE_SIZE
+from repro.serving.sampling import (GREEDY, SamplingParams, SlotSampling,
+                                    key_zeros, request_key)
 
 
 @dataclasses.dataclass
@@ -81,6 +81,9 @@ class Request:
     rid: int
     prompt: list           # token ids (ints); audio: list of tuples
     max_new: int
+    # decode policy; None falls back to the batcher's default_sampling
+    # (greedy unless configured otherwise)
+    sampling: SamplingParams | None = None
 
 
 @dataclasses.dataclass
@@ -88,17 +91,17 @@ class Completion:
     rid: int
     tokens: list
     prompt_len: int
-    # top1-top2 logit gap per emitted token: near-zero entries mark
-    # numerical argmax ties, where differently-compiled variants of the
-    # same math (fused vs per-slot, chunked vs per-token prefill) may
-    # legitimately emit different tokens
+    # top1-top2 score gap per emitted token (raw logits when greedy,
+    # Gumbel-perturbed scores when sampled): near-zero entries mark
+    # numerical ties, where differently-compiled variants of the same
+    # math may legitimately emit different tokens
     margins: list = dataclasses.field(default_factory=list)
 
 
 def completions_equivalent(a, b, tie_tol: float = 1e-3) -> bool:
     """Token-for-token equality of two completion sets, tolerating argmax
     ties: sequences may first diverge only at a step whose margin (in
-    either engine) is below `tie_tol`; past a tie the greedy trajectories
+    either engine) is below `tie_tol`; past a tie the trajectories
     legitimately separate, so comparison stops for that sequence."""
     by_a = {c.rid: c for c in a}
     by_b = {c.rid: c for c in b}
@@ -130,9 +133,11 @@ class PageAllocator:
     starts with the same pages `acquire`s them instead of allocating
     copies.  A page returns to the free list when its refcount reaches
     zero — a prefix page therefore survives any one sharer finishing as
-    long as another still holds it.  Page 0 is the reserved null page
-    (idle lanes and unallocated block-table entries point at it) and is
-    permanently pinned."""
+    long as another still holds it — and its prefix registration is
+    dropped at the same moment, so a later lookup can never hand out a
+    reclaimed page id.  Page 0 is the reserved null page (idle lanes and
+    unallocated block-table entries point at it) and is permanently
+    pinned."""
 
     def __init__(self, n_pages: int, page_size: int):
         assert n_pages >= 2, "need at least the null page plus one"
@@ -187,26 +192,42 @@ class PageAllocator:
 
 
 class _BatcherBase:
-    """Shared intake / accounting / loop for both engines."""
+    """Shared intake / accounting / loop for both batchers.  Device state
+    and dispatch live in self.engine (serving/engine.py)."""
 
-    def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
-                 capacity: int = 256, greedy: bool = True,
-                 bos_token: int | None = None):
+    # configuration is keyword-only: the seed signature carried a `greedy`
+    # positional (now subsumed by per-request SamplingParams), and silently
+    # re-binding old positional call sites would be worse than a TypeError
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
+                 capacity: int = 256, bos_token: int | None = None,
+                 default_sampling: SamplingParams | None = None):
         assert cfg.num_codebooks == 1, "scheduler covers text archs"
-        assert greedy, "only greedy decoding is implemented"
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.capacity = capacity
         self.bos_token = bos_token
+        self.default_sampling = default_sampling or GREEDY
         self.slot_req: list = [None] * n_slots     # active Request per slot
-        self.slot_state: list = [None] * n_slots   # {"emitted", "fed"}
+        self.slot_state: list = [None] * n_slots   # {"emitted", "fed", ...}
         self.queue: list = []
         self.done: list = []
         self.active_slot_steps = 0    # slot-steps that carried a sequence
         self.total_slot_steps = 0     # slot-step capacity offered so far
-        self.decode_dispatches = 0    # jitted decode calls
-        self.prefill_dispatches = 0   # jitted prefill-block calls
+
+    # ------------------------------------------------- engine delegation
+
+    @property
+    def decode_dispatches(self) -> int:
+        return self.engine.decode_dispatches
+
+    @property
+    def prefill_dispatches(self) -> int:
+        return self.engine.prefill_dispatches
+
+    def cache_nbytes(self) -> int:
+        """Live device bytes of the engine's decode state."""
+        return self.engine.cache_nbytes()
 
     # ------------------------------------------------------------- intake
 
@@ -227,14 +248,64 @@ class _BatcherBase:
                     f"{self.capacity}")
             if req.max_new < 1:
                 raise ValueError(f"request {req.rid}: max_new must be >= 1")
+            self._admission_check(req)
             accepted.append(req)
         # atomic: a batch with an invalid request enqueues nothing
         self.queue.extend(accepted)
+
+    def _admission_check(self, req: Request):
+        """Hook: layout-specific submit-time feasibility check."""
 
     def _budget(self, req: Request) -> int:
         """Tokens this request may emit: the whole sequence (prompt +
         completion) must fit in `capacity` cache entries."""
         return min(req.max_new, self.capacity - len(req.prompt))
+
+    def _new_slot_state(self, req: Request, fed0: int = 0) -> dict:
+        sp = req.sampling or self.default_sampling
+        return {"emitted": [], "fed": fed0, "margins": [], "sp": sp,
+                # base PRNG key, derived once per request from its seed;
+                # greedy requests never consume randomness
+                "key": request_key(sp.seed) if sp.temperature > 0
+                else key_zeros()}
+
+    # ----------------------------------------------------- sampling state
+
+    def _sampling_row(self, s: int) -> SlotSampling:
+        """Scalar-leaf SlotSampling for slot s (chunked-prefill dispatch).
+
+        `step` is the request's emit index — the fold_in counter that makes
+        token i of a request see the same noise on every engine."""
+        st = self.slot_state[s]
+        sp = st["sp"]
+        return SlotSampling(
+            key=st["key"], step=np.int32(len(st["emitted"])),
+            temperature=np.float32(sp.temperature),
+            top_k=np.int32(sp.top_k), top_p=np.float32(sp.top_p))
+
+    def _sampling_batch(self) -> SlotSampling:
+        """Per-slot sampling arrays for one fused decode tick (idle slots
+        ride along as greedy don't-cares)."""
+        n = self.n_slots
+        kz = key_zeros()
+        key = np.zeros((n,) + kz.shape, kz.dtype)
+        step = np.zeros((n,), np.int32)
+        temp = np.zeros((n,), np.float32)
+        top_k = np.zeros((n,), np.int32)
+        top_p = np.ones((n,), np.float32)
+        for s in range(n):
+            st = self.slot_state[s]
+            if st is None:
+                continue
+            sp = st["sp"]
+            key[s] = st["key"]
+            step[s] = len(st["emitted"])
+            temp[s] = sp.temperature
+            top_k[s] = sp.top_k
+            top_p[s] = sp.top_p
+        return SlotSampling(key, step, temp, top_k, top_p)
+
+    # ---------------------------------------------------------- lifecycle
 
     def _finish_if_done(self, s: int):
         req, st = self.slot_req[s], self.slot_state[s]
@@ -275,8 +346,12 @@ class _BatcherBase:
         through a decode tick or written by a chunked-prefill block (a
         size-S batch-1 block books S slot-steps of work and S slot-steps
         of offered capacity), so chunked and decode prefill modes report
-        consistent figures on the same workload.  `steps` is accepted for
-        backward compatibility and ignored."""
+        consistent figures on the same workload."""
+        if steps is not None:
+            warnings.warn(
+                "utilization(steps) is deprecated: the argument is ignored "
+                "— call utilization() with no arguments",
+                DeprecationWarning, stacklevel=2)
         return self.active_slot_steps / max(1, self.total_slot_steps)
 
 
@@ -284,14 +359,16 @@ class ContinuousBatcher(_BatcherBase):
     """Fused slot-batched continuous batching: one jitted dispatch per
     engine tick drives the whole slot pool (see module docstring)."""
 
-    def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
-                 capacity: int = 256, greedy: bool = True,
-                 bos_token: int | None = None, prefill_chunk: int = 16,
-                 prefill_mode: str = "chunked", use_pallas: bool = False,
-                 cache_layout: str = "dense",
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
+                 capacity: int = 256, bos_token: int | None = None,
+                 prefill_chunk: int = 16, prefill_mode: str = "chunked",
+                 use_pallas: bool = False, cache_layout: str = "dense",
                  page_size: int = DEFAULT_PAGE_SIZE,
-                 n_pages: int | None = None, share_prefix: bool = True):
-        super().__init__(cfg, params, n_slots, capacity, greedy, bos_token)
+                 n_pages: int | None = None, share_prefix: bool = True,
+                 default_sampling: SamplingParams | None = None):
+        super().__init__(cfg, params, n_slots=n_slots, capacity=capacity,
+                         bos_token=bos_token,
+                         default_sampling=default_sampling)
         assert prefill_mode in ("chunked", "decode"), prefill_mode
         assert cache_layout in ("dense", "paged"), cache_layout
         if cfg.is_recurrent:
@@ -299,41 +376,15 @@ class ContinuousBatcher(_BatcherBase):
         self.cache_layout = cache_layout
         self.prefill_mode = prefill_mode
         self.prefill_chunk = max(1, prefill_chunk)
-        self._reset_mask = np.zeros((n_slots,), bool)
-        # ring size of the attention cache (multi-token prefill blocks must
-        # not wrap it); None for pure-recurrent archs
-        self._ring_cap = None
-        if cfg.block_kind in ("attention", "hybrid"):
-            self._ring_cap = attn_cache_shape(cfg, 1, capacity)["k"][1]
-        # donate the pool cache: the host drops its reference at each
-        # reassignment, so XLA may update the (large) KV/SSM pool in place
-        # instead of copying it every tick
         if cache_layout == "dense":
-            self.cache = init_cache(cfg, n_slots, capacity,
-                                    pos=np.zeros((n_slots,), np.int32),
-                                    dtype=jnp.float32)
-            self._decode = jax.jit(make_engine_step(cfg, use_pallas),
-                                   donate_argnums=1)
-            self._prefill = jax.jit(make_slot_prefill_step(cfg, use_pallas),
-                                    donate_argnums=1)
+            self.engine = DenseEngine(cfg, params, n_slots, capacity,
+                                      use_pallas)
         else:
-            self.page_size = page_size
-            self.pages_per_slot, logical = paged_attn_layout(
-                cfg, capacity, page_size)
-            if n_pages is None:  # full provisioning (dense-equivalent)
-                n_pages = 1 + n_slots * self.pages_per_slot
-            self.n_pages = n_pages
-            self.allocator = PageAllocator(n_pages, page_size)
-            self.block_table = np.zeros((n_slots, self.pages_per_slot),
-                                        np.int32)
-            self.slot_pos = np.zeros((n_slots,), np.int32)
+            self.engine = PagedEngine(cfg, params, n_slots, capacity,
+                                      page_size, n_pages, use_pallas)
+            self.allocator = PageAllocator(self.engine.n_pages, page_size)
             self.slot_pages: list = [[] for _ in range(n_slots)]
-            self.cache = init_paged_cache(cfg, n_slots, capacity, n_pages,
-                                          page_size, dtype=jnp.float32)
-            self._decode = jax.jit(make_paged_engine_step(cfg, use_pallas),
-                                   donate_argnums=1)
-            self._prefill = jax.jit(make_paged_prefill_step(cfg, use_pallas),
-                                    donate_argnums=1)
+            logical = self.engine.ring_cap
             # sharing is sound only while the logical ring never wraps (a
             # wrapped ring overwrites the shared prefix entries)
             self._share = share_prefix and logical >= capacity
@@ -342,17 +393,53 @@ class ContinuousBatcher(_BatcherBase):
             # (b) no recurrent state to rebuild (pure attention)
             self._share_skip = (self._share and prefill_mode == "chunked"
                                 and cfg.block_kind == "attention")
-            # prefill block chunking bound for the paged logical ring
-            self._ring_cap = logical
+        # prefill block chunking bound (logical ring under paged layout)
+        self._ring_cap = self.engine.ring_cap
 
-    def cache_nbytes(self) -> int:
-        """Live device bytes of this engine's decode state."""
-        n = sum(l.nbytes for l in jax.tree.leaves(self.cache))
-        if self.cache_layout == "paged":
-            n += self.block_table.nbytes + self.slot_pos.nbytes
-        return n
+    # ------------------------------------------------ engine delegation
+
+    @property
+    def cache(self):
+        return self.engine.cache
+
+    @property
+    def block_table(self):
+        return self.engine.block_table
+
+    @property
+    def slot_pos(self):
+        return self.engine.slot_pos
+
+    @property
+    def page_size(self) -> int:
+        return self.engine.page_size
+
+    @property
+    def n_pages(self) -> int:
+        return self.engine.n_pages
+
+    @property
+    def pages_per_slot(self) -> int:
+        return self.engine.pages_per_slot
 
     # ------------------------------------------------------------- intake
+
+    def _worst_case_pages(self, req: Request) -> int:
+        total = min(len(req.prompt) + self._budget(req), self._ring_cap)
+        return -(-total // self.engine.page_size)
+
+    def _admission_check(self, req: Request):
+        """Reject at submit() a request whose worst-case page budget can
+        NEVER fit the pool — queued, it would stall the FIFO head forever
+        and run() would spin to max_steps completing nothing."""
+        if self.cache_layout != "paged":
+            return
+        need = self._worst_case_pages(req)
+        if need > self.engine.n_pages - 1:
+            raise ValueError(
+                f"request {req.rid}: needs {need} pages but the pool holds "
+                f"{self.engine.n_pages - 1} — raise n_pages or lower "
+                f"capacity")
 
     def _fill_slots(self):
         for s in range(self.n_slots):
@@ -366,20 +453,19 @@ class ContinuousBatcher(_BatcherBase):
                 else:
                     req = self.queue.pop(0)
                 self.slot_req[s] = req
-                self.slot_state[s] = {"emitted": [], "fed": fed0,
-                                      "margins": []}
+                self.slot_state[s] = self._new_slot_state(req, fed0)
                 if self.prefill_mode == "chunked":
                     self._prefill_slot(s, req)
                 else:
                     # prompt will be fed through decode ticks; zero the
                     # slot's lanes inside the next fused dispatch
-                    self._reset_mask[s] = True
+                    self.engine.mark_reset(s)
 
     # ------------------------------------------------- paged-pool admission
 
     def _prefix_chain(self, prompt, n_pages: int):
         """Rolling prefix keys of the first n_pages full prompt pages."""
-        ps, chain, keys = self.page_size, (), []
+        ps, chain, keys = self.engine.page_size, (), []
         for k in range(n_pages):
             chain = (chain, tuple(prompt[k * ps:(k + 1) * ps]))
             keys.append(chain)
@@ -391,13 +477,11 @@ class ContinuousBatcher(_BatcherBase):
         prefix pages where the index has them.  Returns (request,
         first-unshared-token) or None when the pool can't hold it yet."""
         req = self.queue[0]
-        ps = self.page_size
-        total = min(len(req.prompt) + self._budget(req), self._ring_cap)
-        need = -(-total // ps)
-        if need > self.n_pages - 1:
-            raise ValueError(
-                f"request {req.rid}: needs {need} pages but the pool holds "
-                f"{self.n_pages - 1} — raise n_pages or lower capacity")
+        ps = self.engine.page_size
+        need = self._worst_case_pages(req)
+        # infeasible requests are rejected at submit(); anything queued
+        # can always be admitted once enough pages are reclaimed
+        assert need <= self.engine.n_pages - 1, req.rid
         shared: list = []
         full_pages = len(req.prompt) // ps
         keys = self._prefix_chain(req.prompt, full_pages) if self._share \
@@ -418,15 +502,13 @@ class ContinuousBatcher(_BatcherBase):
             self.allocator.acquire(pid)
         pages = shared + [self.allocator.alloc()
                           for _ in range(need - len(shared))]
-        self.block_table[s, :] = 0
-        self.block_table[s, :len(pages)] = pages
         self.slot_pages[s] = pages
         # publish this request's own full prompt pages for later sharers
         if self._share:
             for k in range(len(shared), full_pages):
                 self.allocator.register_prefix(keys[k], pages[k])
         fed0 = len(shared) * ps if self._share_skip else 0
-        self.slot_pos[s] = fed0
+        self.engine.admit(s, pages, fed0)
         return req, fed0
 
     def _release_slot(self, s: int):
@@ -438,7 +520,9 @@ class ContinuousBatcher(_BatcherBase):
         for pid in self.slot_pages[s]:
             self.allocator.release(pid)
         self.slot_pages[s] = []
-        self.block_table[s, :] = 0
+        self.engine.release(s)
+
+    # ------------------------------------------------------------ prefill
 
     def _chunk_size(self, pos: int, remaining: int) -> int:
         """Prefill block size: <= prefill_chunk, power-of-two bucketed (so
@@ -455,23 +539,18 @@ class ContinuousBatcher(_BatcherBase):
 
     def _prefill_slot(self, s: int, req: Request):
         """Write the prompt into slot s in blocks; the last block's logits
-        give the first generated token.  Starts at st["fed"] — nonzero when
-        a refcount-shared prefix was skipped (paged layout)."""
+        give the first generated token (sampled in-dispatch).  Starts at
+        st["fed"] — nonzero when a refcount-shared prefix was skipped
+        (paged layout)."""
         st = self.slot_state[s]
         prompt = np.asarray(req.prompt, np.int32)
         n, off, reset = len(prompt), st["fed"], True
+        row = self._sampling_row(s)
         tok = margin = None
         while off < n:
             size = self._chunk_size(off, n - off)
-            block = jnp.asarray(prompt[None, off:off + size])
-            if self.cache_layout == "paged":
-                tok, margin, self.cache = self._prefill(
-                    self.params, self.cache, s, block, np.int32(off),
-                    jnp.asarray(self.block_table[s:s + 1]), reset)
-            else:
-                tok, margin, self.cache = self._prefill(
-                    self.params, self.cache, s, block, reset)
-            self.prefill_dispatches += 1
+            tok, margin = self.engine.prefill_block(
+                s, prompt[None, off:off + size], off, reset, row)
             reset = False
             off += size
         # a size-S block books S slot-steps of work and S slot-steps of
@@ -479,11 +558,10 @@ class ContinuousBatcher(_BatcherBase):
         # the other lanes), so utilization agrees with decode-mode prefill
         self.active_slot_steps += n - st["fed"]
         self.total_slot_steps += n - st["fed"]
-        if self.cache_layout == "paged":
-            self.slot_pos[s] = n
+        self.engine.set_pos(s, n)
         st["fed"] = n
-        st["emitted"].append(int(tok))
-        st["margins"].append(float(margin))
+        st["emitted"].append(tok)
+        st["margins"].append(margin)
         self._finish_if_done(s)
 
     # --------------------------------------------------------------- step
@@ -491,7 +569,7 @@ class ContinuousBatcher(_BatcherBase):
     def step(self):
         """One engine tick: a SINGLE fused dispatch advances every active
         slot by one token (prompt feed in decode prefill mode, or
-        generated)."""
+        generated — sampled or greedy per the slot's SamplingParams)."""
         self._fill_slots()
         active = [s for s in range(self.n_slots)
                   if self.slot_req[s] is not None]
@@ -504,21 +582,10 @@ class ContinuousBatcher(_BatcherBase):
                 toks[s, 0] = req.prompt[st["fed"]]
             else:
                 toks[s, 0] = st["emitted"][-1]
-        if self.cache_layout == "paged":
-            nxt, margins, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(toks),
-                jnp.asarray(self.slot_pos), jnp.asarray(self.block_table),
-                jnp.asarray(self._reset_mask))
-            self.slot_pos[active] += 1
-        else:
-            active_mask = np.zeros((self.n_slots,), bool)
-            active_mask[active] = True
-            nxt, margins, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(toks),
-                jnp.asarray(self._reset_mask), jnp.asarray(active_mask))
-        self.decode_dispatches += 1
-        self._reset_mask[:] = False
-        nxt, margins = np.asarray(nxt), np.asarray(margins)
+        active_mask = np.zeros((self.n_slots,), bool)
+        active_mask[active] = True
+        nxt, margins = self.engine.decode(toks, active_mask,
+                                          self._sampling_batch())
         self.active_slot_steps += len(active)
         self.total_slot_steps += self.n_slots
         for s in active:
@@ -532,36 +599,30 @@ class ContinuousBatcher(_BatcherBase):
 
 
 class PerSlotBatcher(_BatcherBase):
-    """Seed engine: one jitted batch-1 decode call per active slot per tick
-    (n_slots dispatches/tick).  Kept as the equivalence baseline and the
-    bench's before-side; shares intake/accounting with the fused engine."""
+    """Seed baseline: one jitted batch-1 decode call per active slot per
+    tick (n_slots dispatches/tick).  Kept as the equivalence reference and
+    the bench's before-side; shares intake/accounting with the fused
+    engine and supports the same per-request sampling."""
 
-    def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
-                 capacity: int = 256, greedy: bool = True,
-                 bos_token: int | None = None):
-        super().__init__(cfg, params, n_slots, capacity, greedy, bos_token)
-        # one single-sequence cache per slot => independent positions
-        self.caches = [init_cache(cfg, 1, capacity, pos=0, dtype=jnp.float32)
-                       for _ in range(n_slots)]
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
+                 capacity: int = 256, bos_token: int | None = None,
+                 default_sampling: SamplingParams | None = None):
+        super().__init__(cfg, params, n_slots=n_slots, capacity=capacity,
+                         bos_token=bos_token,
+                         default_sampling=default_sampling)
+        self.engine = PerSlotEngine(cfg, params, n_slots, capacity)
 
-        def slot_step(params, cache, tok):
-            out = T.forward(params, cfg, tok, cache=cache)
-            return out.logits[:, 0], out.cache
-
-        self._step = jax.jit(slot_step)
+    @property
+    def caches(self):
+        return self.engine.caches
 
     def _fill_slots(self):
         for s in range(self.n_slots):
             if self.slot_req[s] is None and self.queue:
-                self.slot_req[s] = self.queue.pop(0)
-                self.caches[s] = init_cache(self.cfg, 1, self.capacity,
-                                            pos=0, dtype=jnp.float32)
-                self.slot_state[s] = {"emitted": [], "fed": 0,
-                                      "margins": []}
-
-    def cache_nbytes(self) -> int:
-        """Live device bytes of this engine's decode state."""
-        return sum(l.nbytes for c in self.caches for l in jax.tree.leaves(c))
+                req = self.queue.pop(0)
+                self.slot_req[s] = req
+                self.slot_state[s] = self._new_slot_state(req)
+                self.engine.reset_slot(s)
 
     def step(self):
         """One engine step: each active slot consumes one token (prompt feed
@@ -579,16 +640,11 @@ class PerSlotBatcher(_BatcherBase):
                 tok = int(req.prompt[st["fed"]])
             else:
                 tok = st["emitted"][-1]
-            logits, self.caches[s] = self._step(
-                self.params, self.caches[s],
-                jnp.asarray([[tok]], jnp.int32))
-            self.decode_dispatches += 1
+            nxt, margin = self.engine.step(s, tok, self._sampling_row(s))
             st["fed"] += 1
             if st["fed"] >= len(req.prompt):
-                row = np.asarray(logits[0], np.float32)
-                st["emitted"].append(int(row.argmax()))
-                top2 = np.partition(row, -2)[-2:]
-                st["margins"].append(float(top2[1] - top2[0]))
+                st["emitted"].append(nxt)
+                st["margins"].append(margin)
                 self._finish_if_done(s)
         if any_active:
             self.total_slot_steps += self.n_slots

@@ -1,10 +1,15 @@
 """Serving steps: batched single-token decode against a KV cache / SSM
-state, prefill (full-sequence forward), a greedy generation loop, and the
-slot-batched engine steps (fused decode over a slot pool with per-slot
-positions, chunked prefill into one slot's lanes)."""
-from __future__ import annotations
+state, prefill (full-sequence forward), a sampling-aware generation loop,
+and the slot-batched engine steps (fused decode over a slot pool with
+per-slot positions and per-slot sampling, chunked prefill into one slot's
+lanes).
 
-import functools
+Every fused step takes a ``SlotSampling`` batch (per-slot PRNG keys, emit
+indices, temperature / top-k / top-p — see serving/sampling.py): sampled
+and greedy slots ride through the SAME compiled program, so stochastic
+decode still costs exactly one dispatch per engine tick and a temperature
+of 0 recovers the greedy trajectory bit-for-bit."""
+from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
@@ -14,6 +19,9 @@ from repro.models.config import ModelConfig
 from repro.serving.kvcache import (paged_slot_slice, paged_slot_update,
                                    reset_paged_slots, reset_paged_sub,
                                    reset_slots, slot_slice, slot_update)
+from repro.serving.sampling import (SamplingParams, argmax_with_margin,
+                                    batched_scores, lockstep_scores,
+                                    row_scores)
 
 
 def make_serve_step(cfg: ModelConfig, use_pallas: bool = False):
@@ -46,7 +54,7 @@ def make_engine_step(cfg: ModelConfig, use_pallas: bool = False):
     """Fused slot-batched decode: ONE device program advances every slot of
     the pool by one token.
 
-    step(params, cache, tokens, reset_mask, active_mask)
+    step(params, cache, tokens, reset_mask, active_mask, sampling)
         -> (next_tok, margin, cache)
 
     cache: a stacked pool cache (batch == n_slots) with a (n_slots,) vector
@@ -58,17 +66,20 @@ def make_engine_step(cfg: ModelConfig, use_pallas: bool = False):
     bool — "pos" advances only for lanes carrying a sequence; an idle lane's
     position stays pinned (its dead-lane compute still runs but keeps
     writing the same ring entry of its own lanes, which the refill reset
-    zeroes).  next_tok: (n_slots,) greedy argmax per slot; margin: (n_slots,)
-    top1-top2 logit gap (a near-zero margin marks a numerical tie where
-    compiled variants of the same math may legitimately pick different
-    tokens)."""
+    zeroes).  sampling: a SlotSampling batch — per-slot Gumbel-max sampling
+    happens inside this dispatch; temperature-0 slots take the greedy
+    argmax of the raw logits.  next_tok: (n_slots,) chosen token per slot;
+    margin: (n_slots,) top1-top2 score gap (a near-zero margin marks a
+    numerical tie where compiled variants of the same math may legitimately
+    pick different tokens)."""
 
-    def step(params, cache, tokens, reset_mask, active_mask):
+    def step(params, cache, tokens, reset_mask, active_mask, sampling):
         cache = reset_slots(cfg, cache, reset_mask)
         pos0 = cache["pos"]
         out = T.forward(params, cfg, tokens, cache=cache,
                         use_pallas=use_pallas)
-        next_tok, margin = _argmax_with_margin(out.logits[:, -1])
+        scores = batched_scores(out.logits[:, -1], sampling)
+        next_tok, margin = argmax_with_margin(scores)
         new_cache = dict(out.cache,
                          pos=jnp.where(active_mask, out.cache["pos"], pos0))
         return next_tok, margin, new_cache
@@ -79,7 +90,7 @@ def make_engine_step(cfg: ModelConfig, use_pallas: bool = False):
 def make_paged_engine_step(cfg: ModelConfig, use_pallas: bool = False):
     """Fused slot-batched decode against the shared page pool.
 
-    step(params, cache, tokens, pos, block_table, reset_mask)
+    step(params, cache, tokens, pos, block_table, reset_mask, sampling)
         -> (next_tok, margin, cache)
 
     cache: a paged pool cache (kvcache.init_paged_cache) — attention K/V in
@@ -91,46 +102,44 @@ def make_paged_engine_step(cfg: ModelConfig, use_pallas: bool = False):
     page 0, so their dead-lane scatter never touches a live page.
     reset_mask: (n_slots,) bool — zeroes refilled slots' dense recurrent
     lanes; pool pages are never zeroed (stale entries are masked by
-    position validity)."""
+    position validity).  sampling: per-slot SlotSampling, fused exactly as
+    in make_engine_step."""
 
-    def step(params, cache, tokens, pos, block_table, reset_mask):
+    def step(params, cache, tokens, pos, block_table, reset_mask, sampling):
         cache = reset_paged_slots(cfg, cache, reset_mask)
         full = dict(cache, pos=pos, block_table=block_table)
         out = T.forward(params, cfg, tokens, cache=full,
                         use_pallas=use_pallas)
-        next_tok, margin = _argmax_with_margin(out.logits[:, -1])
+        scores = batched_scores(out.logits[:, -1], sampling)
+        next_tok, margin = argmax_with_margin(scores)
         new_cache = {k: v for k, v in out.cache.items() if k != "pos"}
         return next_tok, margin, new_cache
 
     return step
 
 
-def _argmax_with_margin(logits):
-    """(B, V) -> (argmax (B,), top1-top2 margin (B,) in fp32)."""
-    top2 = jax.lax.top_k(logits.astype(jnp.float32), 2)[0]
-    return jnp.argmax(logits, axis=-1), top2[:, 0] - top2[:, 1]
-
-
 def make_slot_prefill_step(cfg: ModelConfig, use_pallas: bool = False):
     """Chunked prefill into one slot of a stacked pool cache.
 
-    step(params, cache, slot, tokens, reset) -> (next_tok, margin, cache)
+    step(params, cache, slot, tokens, reset, row) -> (next_tok, margin, cache)
 
     tokens: (1, S) int32 — a block of prompt tokens written into slot
     `slot`'s cache lanes in ONE device call (instead of S decode steps).
     reset: traced bool — zero the slot's lanes first (set on the first block
-    of a request).  next_tok: scalar greedy argmax of the block's last
-    position — the first generated token when the block ends the prompt;
-    margin: its scalar top1-top2 logit gap."""
+    of a request).  row: a scalar-leaf SlotSampling for this slot — the
+    block's last-position logits are sampled (or argmaxed at temperature 0)
+    inside the same dispatch; next_tok is the first generated token when
+    the block ends the prompt, margin its top1-top2 score gap."""
 
-    def step(params, cache, slot, tokens, reset):
+    def step(params, cache, slot, tokens, reset, row):
         sub = slot_slice(cfg, cache, slot)
         sub = jax.tree.map(
             lambda a: jnp.where(reset, jnp.zeros((), a.dtype), a), sub)
         out = T.forward(params, cfg, tokens, cache=sub,
                         use_pallas=use_pallas)
         cache = slot_update(cfg, cache, slot, out.cache)
-        tok, margin = _argmax_with_margin(out.logits[:, -1])
+        scores = row_scores(out.logits[0, -1], row)
+        tok, margin = argmax_with_margin(scores[None])
         return tok[0], margin[0], cache
 
     return step
@@ -139,7 +148,7 @@ def make_slot_prefill_step(cfg: ModelConfig, use_pallas: bool = False):
 def make_paged_prefill_step(cfg: ModelConfig, use_pallas: bool = False):
     """Chunked prefill of one slot against the shared page pool.
 
-    step(params, cache, slot, tokens, pos0, bt_row, reset)
+    step(params, cache, slot, tokens, pos0, bt_row, reset, row)
         -> (next_tok, margin, cache)
 
     tokens: (1, S) int32 prompt block, written at positions pos0..pos0+S-1
@@ -147,9 +156,10 @@ def make_paged_prefill_step(cfg: ModelConfig, use_pallas: bool = False):
     the first block resumes behind a refcount-shared prompt prefix whose
     pages an earlier request already wrote.  reset: traced bool — zero the
     slot's dense recurrent lanes (hybrid) on a request's first block; pool
-    pages need no zeroing."""
+    pages need no zeroing.  row: scalar-leaf SlotSampling, as in
+    make_slot_prefill_step."""
 
-    def step(params, cache, slot, tokens, pos0, bt_row, reset):
+    def step(params, cache, slot, tokens, pos0, bt_row, reset, row):
         sub = paged_slot_slice(cfg, cache, slot)
         sub = reset_paged_sub(cfg, sub, reset)
         full = dict(sub, pos=pos0, block_table=bt_row)
@@ -157,24 +167,35 @@ def make_paged_prefill_step(cfg: ModelConfig, use_pallas: bool = False):
                         use_pallas=use_pallas)
         new = {k: v for k, v in out.cache.items() if k != "pos"}
         cache = paged_slot_update(cfg, cache, slot, new)
-        tok, margin = _argmax_with_margin(out.logits[:, -1])
+        scores = row_scores(out.logits[0, -1], row)
+        tok, margin = argmax_with_margin(scores[None])
         return tok[0], margin[0], cache
 
     return step
 
 
 def greedy_generate(cfg: ModelConfig, params, cache, first_tokens,
-                    n_steps: int, use_pallas: bool = False):
-    """Greedy decode loop (lax.scan over steps).  first_tokens: (B, 1[,C])."""
-    serve = make_serve_step(cfg, use_pallas)
+                    n_steps: int, use_pallas: bool = False,
+                    sampling: SamplingParams | None = None):
+    """Decode loop (lax.scan over steps).  first_tokens: (B, 1[,C]).
 
-    def body(carry, _):
+    Greedy by default; pass `sampling` with temperature > 0 for stochastic
+    decode — Gumbel-max sampling runs inside the scan body (still one
+    compiled program), keyed by sampling.seed, the batch row, and the step
+    index, so a rerun with the same seed reproduces the same tokens."""
+    serve = make_serve_step(cfg, use_pallas)
+    sample = sampling is not None and sampling.temperature > 0
+    base_key = jax.random.PRNGKey(sampling.seed) if sample else None
+
+    def body(carry, i):
         cache, toks = carry
         logits, cache = serve(params, cache, toks)
+        if sample:
+            logits = lockstep_scores(logits, base_key, i, sampling)
         nxt = jnp.argmax(logits, axis=-1)  # (B,) or (B, C)
         toks = nxt[:, None] if nxt.ndim == 1 else nxt[:, None, :]
         return (cache, toks.astype(jnp.int32)), nxt
 
-    (_, _), toks = jax.lax.scan(body, (cache, first_tokens), None,
-                                length=n_steps)
+    (_, _), toks = jax.lax.scan(body, (cache, first_tokens),
+                                jnp.arange(n_steps))
     return jnp.moveaxis(toks, 0, 1)  # (B, n_steps[, C])

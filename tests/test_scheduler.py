@@ -95,8 +95,12 @@ def test_utilization_reported(setup):
     eng = ContinuousBatcher(cfg, params, n_slots=2, capacity=64)
     eng.submit([Request(rid=i, prompt=[1, 2], max_new=3) for i in range(4)])
     done, steps = eng.run()
-    u = eng.utilization(steps)
+    u = eng.utilization()
     assert 0.1 < u <= 1.0
+    # the legacy `steps` argument is ignored and now warns
+    with pytest.warns(DeprecationWarning, match="utilization"):
+        legacy = eng.utilization(steps)
+    assert legacy == u
 
 
 def test_empty_prompt_rejected_or_bos_handled(setup):

@@ -9,6 +9,7 @@ import pytest
 
 from repro.configs import get_smoke_config
 from repro.models import params as Pm
+from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import (ContinuousBatcher, PerSlotBatcher,
                                      Request, completions_equivalent)
 
@@ -161,6 +162,107 @@ def test_one_dispatch_per_tick_independent_of_slots():
     ref.submit(_workload(cfg, n=8, seed=1))
     _, ref_steps = ref.run()
     assert ref.decode_dispatches == ref.active_slot_steps > ref_steps
+
+
+def _sampled_workload(cfg, n=7, seed=0, temperature=0.9, top_k=40):
+    return [Request(r.rid, list(r.prompt), r.max_new,
+                    SamplingParams(temperature=temperature, top_k=top_k,
+                                   seed=500 + r.rid))
+            for r in _workload(cfg, n=n, seed=seed)]
+
+
+@pytest.mark.parametrize("arch,over", [("qwen3_0_6b", {}),
+                                       ("zamba2_2_7b", {})])
+def test_sampled_reproducible_across_engines(arch, over):
+    """Same-seed sampled runs must produce the same tokens on the dense,
+    paged, and per-slot engines: the noise is keyed per (request seed,
+    emit index), never by slot or engine.  Engines compile different
+    programs, so divergence is tolerated only at perturbed-score ties."""
+    cfg, params = _setup(arch, over)
+    outs = {}
+    for tag, eng in [
+        ("dense", ContinuousBatcher(cfg, params, n_slots=3, capacity=32)),
+        ("paged", ContinuousBatcher(cfg, params, n_slots=3, capacity=32,
+                                    cache_layout="paged")),
+        ("perslot", PerSlotBatcher(cfg, params, n_slots=3, capacity=32)),
+    ]:
+        got, _ = _run_staggered(eng, _sampled_workload(cfg))
+        outs[tag] = got
+    for tag in ("paged", "perslot"):
+        assert completions_equivalent(outs["dense"].values(),
+                                      outs[tag].values()), \
+            {r: (outs["dense"][r].tokens, outs[tag][r].tokens,
+                 outs["dense"][r].margins) for r in outs["dense"]}
+    # a rerun on the same engine executes the same compiled program:
+    # equality is exact, no tie tolerance
+    again = ContinuousBatcher(cfg, params, n_slots=3, capacity=32)
+    got, _ = _run_staggered(again, _sampled_workload(cfg))
+    assert {r: c.tokens for r, c in got.items()} == \
+        {r: c.tokens for r, c in outs["dense"].items()}
+
+
+def test_sampled_decode_single_dispatch_per_tick():
+    """Turning sampling on must not un-fuse the engine: still exactly one
+    decode dispatch per tick on both cache layouts."""
+    cfg, params = _setup("qwen3_0_6b", {})
+    for layout in ("dense", "paged"):
+        eng = ContinuousBatcher(cfg, params, n_slots=4, capacity=32,
+                                cache_layout=layout)
+        eng.submit(_sampled_workload(cfg, n=8, seed=1))
+        done, steps = eng.run()
+        assert len(done) == 8
+        assert eng.decode_dispatches == steps, layout
+
+
+def test_sampled_seed_changes_tokens():
+    """Different seeds must actually change sampled trajectories (the
+    noise is live, not a constant)."""
+    cfg, params = _setup("qwen3_0_6b", {})
+    outs = []
+    for base_seed in (500, 9000):
+        eng = ContinuousBatcher(cfg, params, n_slots=2, capacity=48)
+        reqs = [Request(r.rid, list(r.prompt), r.max_new,
+                        SamplingParams(temperature=1.5, seed=base_seed
+                                       + r.rid))
+                for r in _workload(cfg, n=6, seed=2)]
+        eng.submit(reqs)
+        done, _ = eng.run()
+        outs.append({c.rid: c.tokens for c in done})
+    assert outs[0] != outs[1]
+
+
+def test_greedy_rows_unaffected_by_sampled_neighbors():
+    """Greedy and sampled requests share the fused dispatch; a greedy
+    request must emit exactly the tokens it gets in an all-greedy pool
+    (same compiled program, so equality is exact)."""
+    cfg, params = _setup("qwen3_0_6b", {})
+    probe = Request(rid=99, prompt=[7, 3, 11, 2], max_new=6)
+
+    alone = ContinuousBatcher(cfg, params, n_slots=3, capacity=32)
+    alone.submit([Request(99, list(probe.prompt), probe.max_new)])
+    want = {c.rid: c.tokens for c in alone.run()[0]}[99]
+
+    mixed = ContinuousBatcher(cfg, params, n_slots=3, capacity=32)
+    mixed.submit(_sampled_workload(cfg, n=4, seed=6, temperature=1.3)
+                 + [Request(99, list(probe.prompt), probe.max_new)])
+    got = {c.rid: c.tokens for c in mixed.run()[0]}[99]
+    assert got == want
+
+
+def test_chunked_and_decode_prefill_agree_when_sampled():
+    """The first generated token is sampled by the prefill dispatch in
+    chunked mode and by the decode dispatch in decode mode — the fold_in
+    key (seed, emit index 0) is the same, so trajectories must match."""
+    cfg, params = _setup("qwen3_0_6b", {})
+    outs = {}
+    for mode in ("chunked", "decode"):
+        eng = ContinuousBatcher(cfg, params, n_slots=2, capacity=48,
+                                prefill_mode=mode, prefill_chunk=8)
+        eng.submit(_sampled_workload(cfg, n=5, seed=3))
+        done, _ = eng.run()
+        outs[mode] = done
+    assert completions_equivalent(outs["chunked"], outs["decode"]), \
+        [(c.tokens, c.margins) for c in outs["chunked"]]
 
 
 def test_slot_reset_isolates_sequences():

@@ -6,7 +6,6 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
 from repro.core import crosspod as cp

@@ -1,7 +1,9 @@
 """Serving-engine bench: fused slot-batched decode vs the seed per-slot
 loop at n_slots in {1, 4, 8, 16}, the paged KV pool vs the dense cache
-layout on a skewed prompt-length mix, and sampled (temperature=0.8 /
-top_k=40) vs greedy decode on the same prompts and slots.
+layout on a skewed prompt-length mix, the Pallas paged-attention decode
+kernel vs the XLA ring gather on that same mix, and sampled
+(temperature=0.8 / top_k=40) vs greedy decode on the same prompts and
+slots.
 
 Reports decode tokens/sec, jitted device dispatches per engine tick (the
 fused engine issues exactly ONE decode dispatch per tick — greedy OR
@@ -150,6 +152,27 @@ def run(quick: bool = False):
         f";bytes_ratio={p_bytes / d_bytes:.3f}"
         f";pages={n_pages};page_size={paged.page_size}"
         f";peak_pages_in_use={paged.allocator.peak_in_use}"))
+
+    # ---- Pallas paged-attention decode kernel vs the XLA ring gather on
+    # the same skewed mix.  kernel="pallas" streams page tiles through the
+    # block table inside the fused dispatch; off-TPU the kernel runs in
+    # interpret mode, so CPU tokens/sec is a correctness/trajectory trace,
+    # not a speed claim (the backend field says which reading applies).
+    pallas_eng = ContinuousBatcher(cfg, params, n_slots=n_slots,
+                                   capacity=capacity, cache_layout="paged",
+                                   n_pages=n_pages, kernel="pallas")
+    _drive(pallas_eng, _clone(warm))
+    k_done, k_tok, k_s, k_ticks, k_disp = _drive(pallas_eng, _clone(mix))
+    kequiv = completions_equivalent(k_done, p_done)
+    k_tps, x_tps = k_tok / k_s, p_tok / p_s
+    rows.append((
+        "serving_paged_pallas_vs_xla",
+        k_s / max(1, k_tok) * 1e6,
+        f"slots={n_slots};tok={k_tok};equiv={kequiv}"
+        f";pallas_tok_s={k_tps:.1f};xla_tok_s={x_tps:.1f}"
+        f";pallas_over_xla={k_tps / x_tps:.2f}x"
+        f";pallas_disp_per_tick={k_disp / max(1, k_ticks):.4f}"
+        f";backend={jax.default_backend()}"))
 
     # ---- sampled decode (temperature=0.8, top_k=40) vs greedy on the same
     # prompts and slots: sampling rides inside the fused dispatch, so both

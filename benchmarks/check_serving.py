@@ -1,11 +1,22 @@
-"""CI gate over the serving bench artifact: the fused engines must hold
-exactly one decode dispatch per tick.
+"""CI gates over the serving bench artifact.
 
 Reads BENCH_serving.json (written by `benchmarks.run --only serving`) and
-fails if ANY fused `*disp_per_tick` field exceeds 1.00 — a sampling or
-cache-layout change silently un-fusing the dispatch is the regression
-this catches.  The seed per-slot baseline (`perslot_*`) is exempt: it
-pays one dispatch per active slot by design.
+fails on any of:
+
+- a fused `*disp_per_tick` field above 1.00 — a sampling or cache-layout
+  change silently un-fusing the dispatch (the seed per-slot baseline,
+  `perslot_*`, is exempt: it pays one dispatch per active slot by design);
+- a paged `bytes_ratio` above 0.35 — the page pool regressing toward
+  dense worst-case provisioning on the skewed mix;
+- any row's fused/paged `*tok_s` throughput dropping more than 20% below
+  the committed baseline (benchmarks/baseline_serving.json, refreshed
+  whenever a PR legitimately moves the numbers).  Only same-mode
+  artifacts are compared — full (non-quick) runs reuse row names at
+  different slot counts, so against a quick baseline the tok/s gate
+  skips itself loudly; a same-mode artifact matching ZERO baseline
+  fields fails (a rename must not silently disarm the gate).  The gate
+  measures wall-clock throughput, so baseline and CI artifact should
+  come from comparable runner hardware.
 
     PYTHONPATH=src python -m benchmarks.run --quick --only serving
     python benchmarks/check_serving.py BENCH_serving.json
@@ -13,43 +24,144 @@ pays one dispatch per active slot by design.
 from __future__ import annotations
 
 import json
+import os
 import sys
 
 MAX_DISP_PER_TICK = 1.00
+MAX_BYTES_RATIO = 0.35
+MAX_TOKS_DROP = 0.20  # fresh tok/s may drop at most 20% vs baseline
+
+BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "baseline_serving.json")
 
 
-def check(path: str) -> int:
+def _load(path: str) -> tuple:
+    """(quick_flag, {row name: fields}) of a bench artifact."""
     with open(path) as f:
         data = json.load(f)
-    seen, bad = 0, []
-    for row in data.get("rows", []):
-        for key, val in row.get("fields", {}).items():
+    return data.get("quick"), {row["name"]: row.get("fields", {})
+                               for row in data.get("rows", [])}
+
+
+def _check_fused_dispatch(rows: dict, bad: list) -> int:
+    seen = 0
+    for name, fields in rows.items():
+        for key, val in fields.items():
             if not key.endswith("disp_per_tick"):
                 continue
             if key.startswith("perslot"):
                 continue  # seed baseline: one dispatch per active slot
             seen += 1
             if not isinstance(val, (int, float)):
-                bad.append((row["name"], key,
+                bad.append((name, key,
                             f"non-numeric value {val!r} — the bench "
                             f"artifact format changed"))
             elif val > MAX_DISP_PER_TICK:
-                bad.append((row["name"], key,
+                bad.append((name, key,
                             f"{val} exceeds {MAX_DISP_PER_TICK} — the "
                             f"fused dispatch has un-fused"))
-    if not seen:
+    return seen
+
+
+def _check_bytes_ratio(rows: dict, bad: list) -> int:
+    seen = 0
+    for name, fields in rows.items():
+        val = fields.get("bytes_ratio")
+        if val is None:
+            continue
+        seen += 1
+        if not isinstance(val, (int, float)):
+            bad.append((name, "bytes_ratio", f"non-numeric value {val!r}"))
+        elif val > MAX_BYTES_RATIO:
+            bad.append((name, "bytes_ratio",
+                        f"{val} exceeds {MAX_BYTES_RATIO} — the paged "
+                        f"pool is regressing toward dense provisioning"))
+    return seen
+
+
+def _check_baseline(quick, rows: dict, baseline_path: str, bad: list) -> int:
+    """Compare every engine-throughput field (``*tok_s``, perslot baseline
+    exempt) against the committed baseline; tolerate MAX_TOKS_DROP.
+
+    Returns the number of fields compared, or -1 when the comparison was
+    legitimately skipped (quick/full mode mismatch: the full run reuses
+    row names at different slot counts and request mixes, so its numbers
+    are not commensurable with a quick baseline)."""
+    if not os.path.exists(baseline_path):
+        bad.append(("baseline", baseline_path,
+                    "missing — commit benchmarks/baseline_serving.json "
+                    "(run benchmarks.run --quick --only serving and copy "
+                    "BENCH_serving.json) so throughput regressions gate CI"))
+        return 0
+    base_quick, base = _load(baseline_path)
+    if quick != base_quick:
+        print(f"check_serving: quick={quick} artifact vs "
+              f"quick={base_quick} baseline — tok/s comparison skipped "
+              f"(rows are not commensurable across modes)",
+              file=sys.stderr)
+        return -1
+    seen = 0
+    for name, fields in rows.items():
+        bfields = base.get(name)
+        if bfields is None:
+            continue  # row not in baseline (e.g. full run vs quick base)
+        for key, val in fields.items():
+            if not key.endswith("tok_s") or key.startswith("perslot"):
+                continue
+            bval = bfields.get(key)
+            if bval is None:
+                continue  # field not in baseline (new bench column)
+            if not isinstance(val, (int, float)) or \
+                    not isinstance(bval, (int, float)) or bval <= 0:
+                # a formatting drift must not silently un-gate one field
+                bad.append((name, key,
+                            f"non-comparable values {val!r} vs baseline "
+                            f"{bval!r} — the bench artifact format "
+                            f"changed"))
+                continue
+            seen += 1
+            if val < (1.0 - MAX_TOKS_DROP) * bval:
+                bad.append((name, key,
+                            f"{val:.1f} tok/s is more than "
+                            f"{MAX_TOKS_DROP:.0%} below the baseline "
+                            f"{bval:.1f} — investigate, or refresh "
+                            f"benchmarks/baseline_serving.json if the "
+                            f"change is intended"))
+    return seen
+
+
+def check(path: str, baseline_path: str = BASELINE) -> int:
+    quick, rows = _load(path)
+    bad: list = []
+    n_disp = _check_fused_dispatch(rows, bad)
+    n_ratio = _check_bytes_ratio(rows, bad)
+    n_base = _check_baseline(quick, rows, baseline_path, bad)
+    if not n_disp:
         print(f"check_serving: no fused disp_per_tick fields in {path} — "
               "the bench artifact is malformed", file=sys.stderr)
+        return 1
+    if n_base == 0 and os.path.exists(baseline_path):
+        # the gate must fail loud, not silently disarm, when a rename
+        # leaves nothing to compare (mode mismatch returns -1 instead)
+        print(f"check_serving: no tok_s fields of {path} match the "
+              f"baseline {baseline_path} — row/field names drifted; "
+              f"refresh the baseline", file=sys.stderr)
         return 1
     if bad:
         for name, key, why in bad:
             print(f"check_serving: {name}: {key}: {why}", file=sys.stderr)
         return 1
-    print(f"check_serving: {seen} fused disp_per_tick fields all "
-          f"<= {MAX_DISP_PER_TICK}")
+    base_msg = ("tok_s comparison skipped (quick/full mode mismatch)"
+                if n_base < 0 else
+                f"{n_base} tok_s fields within {MAX_TOKS_DROP:.0%} of "
+                f"baseline")
+    print(f"check_serving: {n_disp} fused disp_per_tick fields all "
+          f"<= {MAX_DISP_PER_TICK}; {n_ratio} bytes_ratio fields all "
+          f"<= {MAX_BYTES_RATIO}; {base_msg}")
     return 0
 
 
 if __name__ == "__main__":
     sys.exit(check(sys.argv[1] if len(sys.argv) > 1
-                   else "BENCH_serving.json"))
+                   else "BENCH_serving.json",
+                   sys.argv[2] if len(sys.argv) > 2 else BASELINE))

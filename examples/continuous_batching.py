@@ -50,6 +50,10 @@ def main():
                     help="also run the seed per-slot loop")
     ap.add_argument("--paged", action="store_true",
                     help="also run the paged KV-pool layout")
+    ap.add_argument("--kernel", choices=("xla", "pallas"), default="xla",
+                    help="paged decode attention read: XLA ring gather or "
+                         "the Pallas paged-attention kernel (interpret "
+                         "mode off-TPU); needs --paged")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy (default); > 0 samples per request")
     ap.add_argument("--top-k", type=int, default=0)
@@ -57,6 +61,9 @@ def main():
     ap.add_argument("--seed", type=int, default=0,
                     help="base sampling seed (request i uses seed + i)")
     args = ap.parse_args()
+    if args.kernel == "pallas" and not args.paged:
+        ap.error("--kernel pallas selects the paged-attention decode "
+                 "kernel — pass --paged as well")
 
     from repro.configs import get_smoke_config
     from repro.models import params as Pm
@@ -109,8 +116,9 @@ def main():
             pps, _ = paged_attn_layout(cfg, 96)
             paged = ContinuousBatcher(cfg, params, n_slots=args.slots,
                                       capacity=96, cache_layout="paged",
-                                      n_pages=1 + args.slots * pps // 2)
-            p_done = drive(paged, workload(), "paged")
+                                      n_pages=1 + args.slots * pps // 2,
+                                      kernel=args.kernel)
+            p_done = drive(paged, workload(), f"paged[{args.kernel}]")
             same = completions_equivalent(done, p_done)
             print(f"paged == dense (up to argmax ties): {same}; cache bytes "
                   f"{paged.cache_nbytes()} vs {eng.cache_nbytes()} dense "

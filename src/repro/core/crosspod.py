@@ -20,7 +20,6 @@ the multi-pod mesh; plain local arrays in CPU tests).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, NamedTuple
 
 import jax

@@ -7,8 +7,6 @@ non-IID data when `pod_skew > 0` (each pod gets its own transition table —
 the framework analogue of the paper's node unbalance)."""
 from __future__ import annotations
 
-import functools
-from typing import Iterator
 
 import jax
 import jax.numpy as jnp

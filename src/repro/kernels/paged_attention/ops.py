@@ -1,0 +1,38 @@
+"""jit'd wrapper: model-layout (B, 1, H, hd) paged decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.paged_attention import \
+    paged_attention_grouped
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def paged_attention(q, k_pool, v_pool, block_table, last_pos, *,
+                    window: int = 0):
+    """q: (B, 1, H, hd) with H = g*KV (GQA) — the single decode token per
+    slot, already RoPE'd; its K/V must already be scattered into the pool.
+
+    k_pool/v_pool: (n_pages, page_size, KV, hd) shared pools.
+    block_table: (B, P) int32 page ids; last_pos: (B,) int32 absolute
+    position of the newest token per slot.  Groups the query heads onto
+    their KV head (the same (B, S, KV, g, hd) regrouping the jnp path
+    uses) and dispatches to the Pallas kernel — interpret mode off-TPU.
+    Returns (B, 1, H, hd).
+    """
+    B, S, H, hd = q.shape
+    assert S == 1, f"paged decode kernel is single-token (got S={S})"
+    KV = k_pool.shape[2]
+    g = H // KV
+    qg = q.reshape(B, KV, g, hd)
+    out = paged_attention_grouped(
+        qg, k_pool, v_pool, block_table.astype(jnp.int32),
+        last_pos.astype(jnp.int32), window=window, interpret=not _on_tpu())
+    return out.reshape(B, 1, H, hd)

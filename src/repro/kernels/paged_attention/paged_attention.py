@@ -1,0 +1,126 @@
+"""Paged attention decode — Pallas TPU kernel.
+
+One query token per slot attends over its logical KV ring, which lives
+scattered across a shared page pool and is addressed through a per-slot
+block table.  The repo's first Pallas kernel driven by DYNAMIC per-slot
+indices: the (n_slots, P) block table rides in as a scalar-prefetch
+operand, so each grid step's BlockSpec index_map picks the page tile to
+DMA straight out of the pool — no (B, T, KV, hd) gather ever materializes
+in HBM (the XLA path in models/layers.py pays that copy every tick).
+
+TPU mapping: grid (slot, kv_head, page) with the page dimension innermost
+and sequential, flash-style online softmax carrying (acc, m, l) in VMEM
+scratch across page tiles.  Block shapes are (page_size, head_dim) K/V
+tiles and a (group, head_dim) query tile (group = H / KV query heads per
+KV head, GQA).  Position-validity masking keeps the never-zeroed pool and
+the reserved null page 0 invisible: a ring entry is admitted only when
+the absolute position it holds is >= 0, <= the slot's newest position,
+and inside the sliding window (so stale pages, idle lanes parked on the
+null page, and unreached ring tail entries all mask out).
+
+Validated on CPU in interpret mode against ref.reference_paged_attention;
+on a real TPU the same pallas_call lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, last_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+            l_ref, *, scale: float, page_size: int, n_pages_slot: int,
+            window: int):
+    b = pl.program_id(0)
+    ip = pl.program_id(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (g, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)      # (page_size, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+
+    # absolute position held by each ring entry of this page tile: the
+    # largest value congruent to its ring index (mod T) that is <= the
+    # slot's newest position `last` (models/layers.py ring contract)
+    g = q.shape[0]
+    T = n_pages_slot * page_size
+    last = last_ref[b]
+    ring = ip * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (g, page_size), 1)
+    k_pos = last - ((last - ring) % T)
+    mask = k_pos >= 0                              # causal: k_pos <= last
+    if window:
+        mask &= k_pos > (last - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # (g,)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    # fully-masked tiles (idle slot parked on the null page): stay at zero
+    p = jnp.where(mask, p, 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+    m_ref[...] = m_cur
+
+    @pl.when(ip == n_pages_slot - 1)
+    def _out():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_attention_grouped(q, k_pool, v_pool, block_table, last_pos, *,
+                            window: int = 0, interpret: bool = True):
+    """q: (B, KV, g, hd) — GQA-grouped single-token queries (ops.py maps
+    the model layout).  k_pool/v_pool: (n_pages, page_size, KV, hd).
+    block_table: (B, P) int32 page ids.  last_pos: (B,) int32 newest
+    position per slot.  Returns (B, KV, g, hd)."""
+    B, KV, g, hd = q.shape
+    psz = k_pool.shape[1]
+    P = block_table.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, page_size=psz, n_pages_slot=P, window=window)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd),
+                         lambda b, kv, ip, bt, lp: (b, kv, 0, 0)),
+            # the dynamic gather: the page tile this grid step streams is
+            # chosen by the prefetched block table, not the grid indices
+            pl.BlockSpec((1, psz, 1, hd),
+                         lambda b, kv, ip, bt, lp: (bt[b, ip], 0, kv, 0)),
+            pl.BlockSpec((1, psz, 1, hd),
+                         lambda b, kv, ip, bt, lp: (bt[b, ip], 0, kv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda b, kv, ip, bt, lp: (b, kv, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, hd), jnp.float32),      # acc
+            pltpu.VMEM((g,), jnp.float32),         # m (running max)
+            pltpu.VMEM((g,), jnp.float32),         # l (running sum)
+        ],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, g, hd), q.dtype),
+        interpret=interpret,
+    )(block_table, last_pos, q, k_pool, v_pool)

@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for the paged-attention decode kernel.
+
+Mirrors the XLA paged decode path in models/layers.py: gather each slot's
+logical ring out of the shared page pool through its block-table row, mask
+by position validity (stale / null-page entries have k_pos < 0 or fall
+outside the causal window), fp32 softmax.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ring_positions(last, T):
+    """Absolute position held by ring slot i after the newest write.
+
+    last: (B,) absolute position of the newest token; the largest value
+    congruent to i (mod T) that is <= last — negative (invalid) for ring
+    entries no sequence has reached yet."""
+    idx = jnp.arange(T)
+    return last[:, None] - ((last[:, None] - idx[None, :]) % T)  # (B, T)
+
+
+def reference_paged_attention(q, k_pool, v_pool, block_table, last_pos, *,
+                              window: int = 0):
+    """q: (B, H, hd) — ONE query token per slot, at position last_pos[b].
+
+    k_pool/v_pool: (n_pages, page_size, KV, hd) shared pools, the new
+    token's K/V already scattered in.  block_table: (B, P) int32 page ids
+    (page 0 = reserved null page).  last_pos: (B,) int32.  Returns
+    (B, H, hd) in q's dtype."""
+    B, H, hd = q.shape
+    psz = k_pool.shape[1]
+    KV = k_pool.shape[2]
+    g = H // KV
+    T = block_table.shape[1] * psz
+
+    ring = jnp.arange(T)
+    g_idx = block_table[:, ring // psz] * psz + ring % psz       # (B, T)
+    flat_k = k_pool.reshape((-1,) + k_pool.shape[2:])
+    flat_v = v_pool.reshape((-1,) + v_pool.shape[2:])
+    ck = flat_k[g_idx].astype(jnp.float32)                       # (B, T, KV, hd)
+    cv = flat_v[g_idx].astype(jnp.float32)
+
+    k_pos = ring_positions(last_pos, T)
+    valid = (k_pos >= 0) & (k_pos <= last_pos[:, None])
+    if window:
+        valid &= k_pos > (last_pos[:, None] - window)
+
+    qh = q.reshape(B, KV, g, hd).astype(jnp.float32)
+    scale = 1.0 / float(hd) ** 0.5
+    s = jnp.einsum("bkgh,btkh->bkgt", qh, ck) * scale            # (B, KV, g, T)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows (idle slots)
+    out = jnp.einsum("bkgt,btkh->bkgh", p, cv)
+    return out.reshape(B, H, hd).astype(q.dtype)

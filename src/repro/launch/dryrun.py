@@ -31,7 +31,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ARCHS, get_config, model_archs
+from repro.configs import get_config, model_archs
 from repro.configs.shapes import SHAPES
 from repro.launch import roofline as RL
 from repro.launch.mesh import make_production_mesh

@@ -16,7 +16,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 
 def run_gtl_paper(args):

@@ -159,7 +159,8 @@ def chunked_attention(q, k, v, q_pos, k_pos, cfg: ModelConfig,
 
 
 def attention_block(p, x, cfg: ModelConfig, *, positions=None, cache=None,
-                    layer_chunked: bool = False, use_pallas: bool = False):
+                    layer_chunked: bool = False, use_pallas: bool = False,
+                    paged_kernel: str = "xla"):
     """GQA attention with RoPE/M-RoPE, qk-norm, bias, window/chunk masking.
 
     cache: None for training (full self-attention over x), else a decode
@@ -173,6 +174,14 @@ def attention_block(p, x, cfg: ModelConfig, *, positions=None, cache=None,
     Returns (out, new_cache).  "pos" is a scalar for a lock-step batch or a
     (B,) vector of per-sequence positions (the slot-batched serving engine);
     decode accepts S >= 1 tokens (chunked prefill writes a whole block).
+
+    paged_kernel: "xla" (default) reads the paged pool by gathering each
+    lane's logical ring into a (B, T, KV, hd) tensor; "pallas" runs the
+    paged-attention decode kernel (kernels/paged_attention) on eligible
+    dispatches — single-token, default positions, no M-RoPE/chunked-local
+    masking — streaming page tiles through the block table instead.
+    Ineligible shapes (multi-token prefill blocks) fall back to "xla", so
+    both settings are token-equivalent end to end.
     """
     B, S, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -228,7 +237,8 @@ def attention_block(p, x, cfg: ModelConfig, *, positions=None, cache=None,
         pos = cache["pos"]
         pos_b = jnp.broadcast_to(pos, (B,))
         abs_pos = pos_b[:, None] + jnp.arange(S)[None, :]  # (B, S)
-        if positions is None:
+        default_pos = positions is None
+        if default_pos:
             positions = abs_pos
         if cfg.mrope:
             pos3 = (positions if positions.ndim == 3 else
@@ -243,12 +253,16 @@ def attention_block(p, x, cfg: ModelConfig, *, positions=None, cache=None,
         paged = "block_table" in cache
         kv_dtype = cache["k"].dtype  # may be narrower (kv_cache_dtype)
         b_idx = jnp.arange(B)[:, None]
+        out = None
         if paged:
             # paged pool: scatter the S new tokens through the block table
-            # into the shared flat pool, then gather this lane's logical
-            # ring back out for attention.  Unallocated table entries point
-            # at the null page 0; its (garbage) entries sit at ring indices
-            # past `last` and are cut by the validity mask below.
+            # into the shared flat pool, then read the pool back for
+            # attention — either the Pallas decode kernel (page tiles
+            # streamed through the block table inside the kernel) or an
+            # XLA gather of this lane's whole logical ring.  Unallocated
+            # table entries point at the null page 0; its (garbage)
+            # entries sit at ring indices past `last` and are cut by the
+            # validity mask.
             bt = cache["block_table"]  # (B, P) page ids
             psz = cache["k"].shape[1]
             T = bt.shape[1] * psz
@@ -259,31 +273,42 @@ def attention_block(p, x, cfg: ModelConfig, *, positions=None, cache=None,
                 k.astype(kv_dtype))
             store_v = cache["v"].reshape(flat).at[w_idx].set(
                 v.astype(kv_dtype))
-            ring = jnp.arange(T)
-            g_idx = bt[:, ring // psz] * psz + ring % psz  # (B, T)
-            ck, cv = store_k[g_idx], store_v[g_idx]  # (B, T, KV, hd)
-            store_k = store_k.reshape(cache["k"].shape)
-            store_v = store_v.reshape(cache["v"].shape)
+            pool_k = store_k.reshape(cache["k"].shape)
+            pool_v = store_v.reshape(cache["v"].shape)
+            if (paged_kernel == "pallas" and S == 1 and default_pos
+                    and not cfg.mrope and not cfg.chunked_attention):
+                from repro.kernels.paged_attention import ops as pa_ops
+
+                out = pa_ops.paged_attention(
+                    q, pool_k, pool_v, bt, abs_pos[:, -1],
+                    window=cfg.sliding_window)
+            else:
+                ring = jnp.arange(T)
+                g_idx = bt[:, ring // psz] * psz + ring % psz  # (B, T)
+                ck, cv = store_k[g_idx], store_v[g_idx]  # (B, T, KV, hd)
+            store_k, store_v = pool_k, pool_v
         else:
             T = cache["k"].shape[1]
             slots = abs_pos % T  # ring writes; capacity == window when windowed
             ck = cache["k"].at[b_idx, slots].set(k.astype(kv_dtype))
             cv = cache["v"].at[b_idx, slots].set(v.astype(kv_dtype))
             store_k, store_v = ck, cv
-        # absolute position held by ring slot i after the writes: the largest
-        # value congruent to i (mod T) that is <= the last written position.
-        # For a non-ring cache (last < T) this reduces to k_pos = i for
-        # i <= last, invalid beyond.
-        last = abs_pos[:, -1]  # (B,)
-        idx = jnp.arange(T)
-        k_pos = last[:, None] - ((last[:, None] - idx[None, :]) % T)  # (B, T)
-        valid = k_pos >= 0
-        q_pos = positions[..., 0] if positions.ndim == 3 else positions
-        mask = _attn_mask(q_pos, k_pos, cfg.sliding_window,
-                          cfg.chunked_attention, chunk_on=layer_chunked)
-        mask &= valid[:, None, :]
-        out = multi_head_attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
-                                   mask, dtype=q.dtype)
+        if out is None:
+            # absolute position held by ring slot i after the writes: the
+            # largest value congruent to i (mod T) that is <= the last
+            # written position.  For a non-ring cache (last < T) this
+            # reduces to k_pos = i for i <= last, invalid beyond.
+            last = abs_pos[:, -1]  # (B,)
+            idx = jnp.arange(T)
+            k_pos = last[:, None] - ((last[:, None] - idx[None, :]) % T)
+            valid = k_pos >= 0  # (B, T)
+            q_pos = positions[..., 0] if positions.ndim == 3 else positions
+            mask = _attn_mask(q_pos, k_pos, cfg.sliding_window,
+                              cfg.chunked_attention, chunk_on=layer_chunked)
+            mask &= valid[:, None, :]
+            out = multi_head_attention(q, ck.astype(q.dtype),
+                                       cv.astype(q.dtype), mask,
+                                       dtype=q.dtype)
         new_cache = {"k": store_k, "v": store_v, "pos": pos + S}
 
     out = out.reshape(B, S, H * hd) @ p["wo"]

@@ -15,7 +15,6 @@ assigned architecture family.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax
@@ -37,11 +36,11 @@ class ForwardOut(NamedTuple):
 
 
 def _attn_mlp_block(p, h, cfg: ModelConfig, *, positions, cache,
-                    layer_chunked, use_pallas):
+                    layer_chunked, use_pallas, paged_kernel="xla"):
     a, new_cache = Lyr.attention_block(
         p["attn"], Lyr.rms_norm(h, p["ln1"], cfg.norm_eps), cfg,
         positions=positions, cache=cache, layer_chunked=layer_chunked,
-        use_pallas=use_pallas)
+        use_pallas=use_pallas, paged_kernel=paged_kernel)
     h = h + a
     x2 = Lyr.rms_norm(h, p["ln2"], cfg.norm_eps)
     if cfg.is_moe:
@@ -72,11 +71,13 @@ def _mamba_block(p, h, cfg: ModelConfig, *, cache, use_pallas):
     return h + a, new_cache, jnp.float32(0.0)
 
 
-def _block(p, h, cfg, *, positions, cache, layer_chunked, use_pallas):
+def _block(p, h, cfg, *, positions, cache, layer_chunked, use_pallas,
+           paged_kernel="xla"):
     if cfg.block_kind == "attention":
         return _attn_mlp_block(p, h, cfg, positions=positions, cache=cache,
                                layer_chunked=layer_chunked,
-                               use_pallas=use_pallas)
+                               use_pallas=use_pallas,
+                               paged_kernel=paged_kernel)
     if cfg.block_kind == "rwkv6":
         return _rwkv_block(p, h, cfg, cache=cache, use_pallas=use_pallas)
     if cfg.block_kind in ("mamba2", "hybrid"):
@@ -157,8 +158,13 @@ def _scan_or_loop(body, carry, xs, use_scan: bool):
 
 
 def forward(params, cfg: ModelConfig, tokens, *, patch_embeds=None,
-            positions=None, cache=None, use_pallas: bool = False) -> ForwardOut:
-    """Training (cache=None, full sequence) or decode (cache set, S>=1)."""
+            positions=None, cache=None, use_pallas: bool = False,
+            paged_kernel: str = "xla") -> ForwardOut:
+    """Training (cache=None, full sequence) or decode (cache set, S>=1).
+
+    paged_kernel: paged-pool decode attention implementation — "xla"
+    (ring gather) or "pallas" (kernels/paged_attention); only consulted
+    when the cache carries a block table (see layers.attention_block)."""
     h = embed_inputs(params, cfg, tokens, patch_embeds)
     B, S = h.shape[:2]
     if cfg.mrope and positions is None and cache is None:
@@ -191,7 +197,8 @@ def forward(params, cfg: ModelConfig, tokens, *, patch_embeds=None,
             pos_l = positions
         h, new_cache_l, aux_l = _block(
             p, h, cfg, positions=pos_l, cache=cache_l,
-            layer_chunked=flag, use_pallas=use_pallas)
+            layer_chunked=flag, use_pallas=use_pallas,
+            paged_kernel=paged_kernel)
         if decode and cfg.block_kind == "attention":
             new_cache_l = {k: v for k, v in new_cache_l.items()
                            if k not in ("pos", "block_table")}
@@ -228,7 +235,8 @@ def forward(params, cfg: ModelConfig, tokens, *, patch_embeds=None,
                 sc["block_table"] = block_table
             h, new_sc, aux_s = _attn_mlp_block(
                 shared, h, cfg, positions=positions, cache=sc,
-                layer_chunked=False, use_pallas=use_pallas)
+                layer_chunked=False, use_pallas=use_pallas,
+                paged_kernel=paged_kernel)
             if decode:
                 new_sc = {k: v for k, v in new_sc.items()
                           if k not in ("pos", "block_table")}

@@ -12,6 +12,16 @@ Layer split (who runs vs how it runs):
   pool per layer, host-owned block tables + positions), `PerSlotEngine`
   (seed batch-1 baseline).  Each owns its decode state and jitted step
   functions and advances the whole slot pool in ONE dispatch per tick.
+  `PagedEngine` takes a ``kernel="xla"|"pallas"`` knob (also exposed on
+  `ContinuousBatcher`): "xla" — the default and the equivalence oracle —
+  reads the pool by gathering each lane's logical ring into a
+  (n_slots, T, KV, hd) tensor; "pallas" runs the paged-attention decode
+  kernel (repro.kernels.paged_attention), which streams K/V page tiles
+  through the block table inside the kernel (scalar-prefetch index maps)
+  with flash-style online softmax, GQA head grouping, and position-
+  validity masking — no ring gather ever lands in HBM.  Both settings
+  stay inside the same single fused dispatch per tick and are token-
+  equivalent; multi-token prefill blocks always use the XLA read.
 - ``sampling`` — the decode-policy kernel.  Per-slot temperature /
   top-k / top-p sampling expressed as Gumbel-max over filtered scaled
   logits, fused INSIDE the engine dispatch: per-slot base PRNG keys and

@@ -121,16 +121,25 @@ class PagedEngine:
 
     Page *lifetime* (alloc / refcount / free) belongs to the policy
     layer's PageAllocator; this engine owns the device pool and the block
-    table the dispatches scatter through."""
+    table the dispatches scatter through.
+
+    kernel: decode-attention pool read — "xla" (default, the equivalence
+    oracle: gather each lane's logical ring) or "pallas" (the
+    kernels/paged_attention decode kernel: page tiles streamed through
+    the block table in-kernel).  Both run inside the same single fused
+    dispatch per tick and are token-equivalent."""
 
     layout = "paged"
 
     def __init__(self, cfg: ModelConfig, params, n_slots: int,
                  capacity: int, page_size: int = DEFAULT_PAGE_SIZE,
-                 n_pages: int | None = None, use_pallas: bool = False):
+                 n_pages: int | None = None, use_pallas: bool = False,
+                 kernel: str = "xla"):
+        assert kernel in ("xla", "pallas"), kernel
         self.cfg, self.params = cfg, params
         self.n_slots, self.capacity = n_slots, capacity
         self.page_size = page_size
+        self.kernel = kernel
         self.pages_per_slot, logical = paged_attn_layout(
             cfg, capacity, page_size)
         if n_pages is None:  # full provisioning (dense-equivalent)
@@ -141,10 +150,12 @@ class PagedEngine:
         self.slot_pos = np.zeros((n_slots,), np.int32)
         self.cache = init_paged_cache(cfg, n_slots, capacity, n_pages,
                                       page_size, dtype=jnp.float32)
-        self._decode = jax.jit(make_paged_engine_step(cfg, use_pallas),
-                               donate_argnums=1)
-        self._prefill = jax.jit(make_paged_prefill_step(cfg, use_pallas),
-                                donate_argnums=1)
+        self._decode = jax.jit(
+            make_paged_engine_step(cfg, use_pallas, kernel),
+            donate_argnums=1)
+        self._prefill = jax.jit(
+            make_paged_prefill_step(cfg, use_pallas, kernel),
+            donate_argnums=1)
         self._reset_mask = np.zeros((n_slots,), bool)
         self.decode_dispatches = 0
         self.prefill_dispatches = 0

@@ -52,7 +52,10 @@ Cache layouts (`cache_layout=` on the fused engine):
     shared tokens).  Prefix sharing turns itself off when the logical
     ring can wrap (a wrapped ring overwrites prefix entries).  Recurrent
     archs (mamba2 / rwkv6) keep O(1) dense state; hybrid pages only its
-    shared attention leaves.
+    shared attention leaves.  `kernel="pallas"` swaps the paged decode
+    attention read for the Pallas paged-attention kernel (page tiles
+    streamed through the block table in-kernel instead of an XLA ring
+    gather); "xla" stays the default and the equivalence oracle.
 
 `PerSlotBatcher` drives the seed engine — one jitted batch-1 call per
 active slot per tick — as the equivalence baseline and the bench's
@@ -365,14 +368,20 @@ class ContinuousBatcher(_BatcherBase):
                  use_pallas: bool = False, cache_layout: str = "dense",
                  page_size: int = DEFAULT_PAGE_SIZE,
                  n_pages: int | None = None, share_prefix: bool = True,
+                 kernel: str = "xla",
                  default_sampling: SamplingParams | None = None):
         super().__init__(cfg, params, n_slots=n_slots, capacity=capacity,
                          bos_token=bos_token,
                          default_sampling=default_sampling)
         assert prefill_mode in ("chunked", "decode"), prefill_mode
         assert cache_layout in ("dense", "paged"), cache_layout
+        assert kernel in ("xla", "pallas"), kernel
         if cfg.is_recurrent:
             cache_layout = "dense"  # O(1) decode state: nothing to page
+        if kernel == "pallas" and cache_layout != "paged":
+            raise ValueError(
+                "kernel='pallas' selects the paged-attention decode kernel"
+                " — it needs cache_layout='paged' on a non-recurrent arch")
         self.cache_layout = cache_layout
         self.prefill_mode = prefill_mode
         self.prefill_chunk = max(1, prefill_chunk)
@@ -381,7 +390,8 @@ class ContinuousBatcher(_BatcherBase):
                                       use_pallas)
         else:
             self.engine = PagedEngine(cfg, params, n_slots, capacity,
-                                      page_size, n_pages, use_pallas)
+                                      page_size, n_pages, use_pallas,
+                                      kernel)
             self.allocator = PageAllocator(self.engine.n_pages, page_size)
             self.slot_pages: list = [[] for _ in range(n_slots)]
             logical = self.engine.ring_cap

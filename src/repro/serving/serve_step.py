@@ -87,11 +87,17 @@ def make_engine_step(cfg: ModelConfig, use_pallas: bool = False):
     return step
 
 
-def make_paged_engine_step(cfg: ModelConfig, use_pallas: bool = False):
+def make_paged_engine_step(cfg: ModelConfig, use_pallas: bool = False,
+                           kernel: str = "xla"):
     """Fused slot-batched decode against the shared page pool.
 
     step(params, cache, tokens, pos, block_table, reset_mask, sampling)
         -> (next_tok, margin, cache)
+
+    kernel: how decode attention reads the pool — "xla" gathers each
+    lane's logical ring, "pallas" streams page tiles through the block
+    table inside kernels/paged_attention (one fused dispatch either way;
+    the XLA path is the default and the equivalence oracle).
 
     cache: a paged pool cache (kvcache.init_paged_cache) — attention K/V in
     shared (n_pages, page_size, KV, hd) pools, hybrid recurrent state in
@@ -109,7 +115,7 @@ def make_paged_engine_step(cfg: ModelConfig, use_pallas: bool = False):
         cache = reset_paged_slots(cfg, cache, reset_mask)
         full = dict(cache, pos=pos, block_table=block_table)
         out = T.forward(params, cfg, tokens, cache=full,
-                        use_pallas=use_pallas)
+                        use_pallas=use_pallas, paged_kernel=kernel)
         scores = batched_scores(out.logits[:, -1], sampling)
         next_tok, margin = argmax_with_margin(scores)
         new_cache = {k: v for k, v in out.cache.items() if k != "pos"}
@@ -145,7 +151,8 @@ def make_slot_prefill_step(cfg: ModelConfig, use_pallas: bool = False):
     return step
 
 
-def make_paged_prefill_step(cfg: ModelConfig, use_pallas: bool = False):
+def make_paged_prefill_step(cfg: ModelConfig, use_pallas: bool = False,
+                            kernel: str = "xla"):
     """Chunked prefill of one slot against the shared page pool.
 
     step(params, cache, slot, tokens, pos0, bt_row, reset, row)
@@ -164,7 +171,7 @@ def make_paged_prefill_step(cfg: ModelConfig, use_pallas: bool = False):
         sub = reset_paged_sub(cfg, sub, reset)
         full = dict(sub, pos=pos0, block_table=bt_row)
         out = T.forward(params, cfg, tokens, cache=full,
-                        use_pallas=use_pallas)
+                        use_pallas=use_pallas, paged_kernel=kernel)
         new = {k: v for k, v in out.cache.items() if k != "pos"}
         cache = paged_slot_update(cfg, cache, slot, new)
         scores = row_scores(out.logits[0, -1], row)

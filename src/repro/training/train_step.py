@@ -2,7 +2,6 @@
 cross-pod GTL (per-pod local SGD + periodic model exchange)."""
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax

@@ -1,6 +1,5 @@
 """Malicious-model corruption + robustness (paper Section 7)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,7 +1,6 @@
 """Synthetic datasets + the paper's three partition regimes."""
 import jax
 import numpy as np
-import pytest
 
 from repro.data import (HAPT_LIKE, MNIST_HOG_LIKE, make_dataset,
                         partition_class_unbalanced, partition_node_unbalanced,

@@ -1,5 +1,4 @@
 """End-to-end GTL / noHTL procedure tests (small fast scenario)."""
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -8,7 +7,6 @@ import pytest
 
 from repro.core import gtl as G
 from repro.core import nohtl as NH
-from repro.core import base_learner as bl
 from repro.core.experiment import make_scenario, run_scenario
 from repro.training import metrics as M
 

@@ -8,7 +8,6 @@ import pytest
 
 from repro.configs import get_config, get_smoke_config, model_archs
 from repro.data.lm import SyntheticLM
-from repro.models import params as Pm
 from repro.models import transformer as T
 from repro.training import optimizer as O
 from repro.training import train_step as TS

@@ -1,6 +1,5 @@
 """Network-overhead accounting: closed forms, bounds, Table 6/7 values."""
 import numpy as np
-import pytest
 
 from repro.core import overhead as oh
 

@@ -1,0 +1,153 @@
+"""Pallas paged-attention decode kernel vs the pure-jnp oracle (interpret
+mode on CPU): GQA head-group ratios, ragged per-slot positions, page-
+boundary lengths, ring wrap, sliding windows, and null-page masking."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.paged_attention import ops as pa_ops
+from repro.kernels.paged_attention import ref as pa_ref
+
+PSZ = 16
+
+
+def _pool_setup(key, B, H, KV, hd, pages_per_slot, n_pages, psz=PSZ):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    k_pool = jax.random.normal(ks[1], (n_pages, psz, KV, hd))
+    v_pool = jax.random.normal(ks[2], (n_pages, psz, KV, hd))
+    return q, k_pool, v_pool
+
+
+def _check(q, k_pool, v_pool, bt, last, window=0, tol=2e-6):
+    out = pa_ops.paged_attention(q, k_pool, v_pool, bt, last, window=window)
+    want = pa_ref.reference_paged_attention(q[:, 0], k_pool, v_pool, bt,
+                                            last, window=window)
+    np.testing.assert_allclose(np.asarray(out[:, 0], np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 5)
+
+
+@pytest.mark.parametrize("H,KV", [(4, 4), (4, 2), (8, 2), (4, 1)])
+@pytest.mark.parametrize("hd", [64, 128])
+def test_gqa_ratios(H, KV, hd):
+    """Every GQA grouping (incl. MHA and MQA) matches the oracle."""
+    B, P, n_pages = 3, 4, 13
+    q, kp, vp = _pool_setup(jax.random.PRNGKey(0), B, H, KV, hd, P, n_pages)
+    bt = jnp.asarray(np.random.default_rng(0).permutation(
+        np.arange(1, 13)).reshape(B, P), jnp.int32)
+    last = jnp.array([37, 5, 60], jnp.int32)
+    _check(q, kp, vp, bt, last)
+
+
+def test_ragged_positions():
+    """Each slot attends exactly to its own prefix — per-slot positions
+    are fully independent (the slot-batched serving shape)."""
+    B, H, KV, hd, P = 5, 4, 2, 64, 3
+    q, kp, vp = _pool_setup(jax.random.PRNGKey(1), B, H, KV, hd, P, 16)
+    bt = jnp.arange(1, 1 + B * P, dtype=jnp.int32).reshape(B, P)
+    last = jnp.array([0, 1, 15, 16, 40], jnp.int32)
+    _check(q, kp, vp, bt, last)
+
+
+@pytest.mark.parametrize("last", [PSZ - 1, PSZ, 2 * PSZ - 1, 2 * PSZ])
+def test_page_boundary_lengths(last):
+    """Sequence lengths straddling page boundaries (the off-by-one zone of
+    the page-tile masking)."""
+    B, H, KV, hd, P = 1, 4, 2, 64, 3
+    q, kp, vp = _pool_setup(jax.random.PRNGKey(2), B, H, KV, hd, P, 8)
+    bt = jnp.array([[2, 5, 7]], jnp.int32)
+    _check(q, kp, vp, bt, jnp.array([last], jnp.int32))
+
+
+def test_ring_wrap():
+    """last >= T: the logical ring has wrapped and older entries were
+    overwritten — validity must admit exactly the most recent T
+    positions."""
+    B, H, KV, hd, P = 2, 4, 2, 64, 2
+    T = P * PSZ
+    q, kp, vp = _pool_setup(jax.random.PRNGKey(3), B, H, KV, hd, P, 8)
+    bt = jnp.array([[1, 2], [3, 4]], jnp.int32)
+    _check(q, kp, vp, bt, jnp.array([T, 3 * T + 7], jnp.int32))
+
+
+@pytest.mark.parametrize("window", [8, 20, 31])
+def test_sliding_window(window):
+    """Windows that are not page-aligned: masking happens mid-tile (the
+    paged logical ring rounds the window UP to whole pages, so in-kernel
+    window masking is load-bearing, not redundant)."""
+    B, H, KV, hd, P = 2, 4, 2, 64, 3
+    q, kp, vp = _pool_setup(jax.random.PRNGKey(4), B, H, KV, hd, P, 9)
+    bt = jnp.array([[1, 2, 3], [4, 5, 6]], jnp.int32)
+    _check(q, kp, vp, bt, jnp.array([45, 12], jnp.int32), window=window)
+
+
+def test_null_page_masking():
+    """Unallocated block-table rows park on the reserved null page 0; its
+    garbage entries must be invisible.  Slot 0 holds a live 1-token
+    sequence; slot 1 is an idle lane entirely on the null page — its
+    output is a don't-care but must be finite (no NaN from an all-masked
+    softmax)."""
+    B, H, KV, hd, P = 2, 4, 2, 64, 3
+    q, kp, vp = _pool_setup(jax.random.PRNGKey(5), B, H, KV, hd, P, 8)
+    # poison the null page: if it leaks through the mask, outputs explode
+    kp = kp.at[0].set(1e4)
+    vp = vp.at[0].set(1e4)
+    bt = jnp.array([[7, 0, 0], [0, 0, 0]], jnp.int32)
+    last = jnp.array([0, 0], jnp.int32)
+    out = pa_ops.paged_attention(q, kp, vp, bt, last)
+    want = pa_ref.reference_paged_attention(q[:, 0], kp, vp, bt, last)
+    assert np.isfinite(np.asarray(out)).all()
+    # slot 0 saw only its own page-7 entry at ring index 0
+    np.testing.assert_allclose(np.asarray(out[0, 0], np.float32),
+                               np.asarray(want[0], np.float32),
+                               rtol=2e-6, atol=1e-5)
+    assert np.abs(np.asarray(out[0])).max() < 1e3
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pool_dtypes(dtype):
+    """Narrower KV-pool storage (kv_cache_dtype) accumulates in fp32."""
+    B, H, KV, hd, P = 2, 4, 2, 64, 2
+    q, kp, vp = _pool_setup(jax.random.PRNGKey(6), B, H, KV, hd, P, 8)
+    bt = jnp.array([[1, 2], [3, 4]], jnp.int32)
+    last = jnp.array([20, 9], jnp.int32)
+    out = pa_ops.paged_attention(q, kp.astype(dtype), vp.astype(dtype),
+                                 bt, last)
+    want = pa_ref.reference_paged_attention(
+        q[:, 0], kp.astype(dtype), vp.astype(dtype), bt, last)
+    tol = 2e-6 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out[:, 0], np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 5)
+
+
+def test_matches_layers_xla_gather_path():
+    """The kernel must agree with the exact XLA path models/layers.py
+    runs under kernel="xla" — gather the ring, mask by validity, jnp
+    softmax — on a shared-pool state two ragged slots wrote themselves."""
+    from repro.models import layers as Lyr
+
+    B, H, KV, hd, P, psz = 2, 4, 2, 64, 3, PSZ
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    k_pool = jax.random.normal(ks[1], (8, psz, KV, hd))
+    v_pool = jax.random.normal(ks[2], (8, psz, KV, hd))
+    bt = jnp.array([[1, 2, 3], [4, 5, 6]], jnp.int32)
+    last = jnp.array([18, 3], jnp.int32)
+
+    T = P * psz
+    ring = jnp.arange(T)
+    g_idx = bt[:, ring // psz] * psz + ring % psz
+    ck = k_pool.reshape(-1, KV, hd)[g_idx]
+    cv = v_pool.reshape(-1, KV, hd)[g_idx]
+    k_pos = pa_ref.ring_positions(last, T)
+    mask = Lyr._attn_mask(last[:, None], k_pos) & (k_pos >= 0)[:, None, :]
+    want = Lyr.multi_head_attention(q, ck, cv, mask, dtype=q.dtype)
+
+    out = pa_ops.paged_attention(q, k_pool, v_pool, bt, last)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-6, atol=1e-5)

@@ -1,5 +1,4 @@
 """Optimizer, checkpointing, aggregation, dynamic scenario."""
-import os
 
 import jax
 import jax.numpy as jnp

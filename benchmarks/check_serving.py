@@ -8,6 +8,11 @@ fails on any of:
   `perslot_*`, is exempt: it pays one dispatch per active slot by design);
 - a paged `bytes_ratio` above 0.35 — the page pool regressing toward
   dense worst-case provisioning on the skewed mix;
+- the overload row's `lazy_occupancy` not strictly exceeding its
+  `worstcase_occupancy` — lazy page allocation (+ preemption) no longer
+  buying concurrency over worst-case reservation on the overload mix
+  (an artifact with NO overload occupancy row fails too: a renamed or
+  dropped row must not silently disarm the gate);
 - any row's fused/paged `*tok_s` throughput dropping more than 20% below
   the committed baseline (benchmarks/baseline_serving.json, refreshed
   whenever a PR legitimately moves the numbers).  Only same-mode
@@ -79,6 +84,29 @@ def _check_bytes_ratio(rows: dict, bad: list) -> int:
     return seen
 
 
+def _check_overload(rows: dict, bad: list) -> int:
+    """Lazy allocation must sustain strictly higher mean slot occupancy
+    than worst-case reservation on every row reporting both."""
+    seen = 0
+    for name, fields in rows.items():
+        lazy = fields.get("lazy_occupancy")
+        wc = fields.get("worstcase_occupancy")
+        if lazy is None and wc is None:
+            continue
+        seen += 1
+        if not isinstance(lazy, (int, float)) or \
+                not isinstance(wc, (int, float)):
+            bad.append((name, "lazy_occupancy",
+                        f"non-numeric occupancy pair {lazy!r} / {wc!r} — "
+                        f"the bench artifact format changed"))
+        elif lazy <= wc:
+            bad.append((name, "lazy_occupancy",
+                        f"{lazy} does not exceed worstcase_occupancy {wc} "
+                        f"— lazy admission is no longer buying concurrency "
+                        f"on the overload mix"))
+    return seen
+
+
 def _check_baseline(quick, rows: dict, baseline_path: str, bad: list) -> int:
     """Compare every engine-throughput field (``*tok_s``, perslot baseline
     exempt) against the committed baseline; tolerate MAX_TOKS_DROP.
@@ -135,10 +163,16 @@ def check(path: str, baseline_path: str = BASELINE) -> int:
     bad: list = []
     n_disp = _check_fused_dispatch(rows, bad)
     n_ratio = _check_bytes_ratio(rows, bad)
+    n_over = _check_overload(rows, bad)
     n_base = _check_baseline(quick, rows, baseline_path, bad)
     if not n_disp:
         print(f"check_serving: no fused disp_per_tick fields in {path} — "
               "the bench artifact is malformed", file=sys.stderr)
+        return 1
+    if not n_over:
+        print(f"check_serving: no lazy/worstcase occupancy row in {path} "
+              "— the overload bench row was renamed or dropped",
+              file=sys.stderr)
         return 1
     if n_base == 0 and os.path.exists(baseline_path):
         # the gate must fail loud, not silently disarm, when a rename
@@ -157,7 +191,8 @@ def check(path: str, baseline_path: str = BASELINE) -> int:
                 f"baseline")
     print(f"check_serving: {n_disp} fused disp_per_tick fields all "
           f"<= {MAX_DISP_PER_TICK}; {n_ratio} bytes_ratio fields all "
-          f"<= {MAX_BYTES_RATIO}; {base_msg}")
+          f"<= {MAX_BYTES_RATIO}; {n_over} overload rows with "
+          f"lazy_occupancy > worstcase_occupancy; {base_msg}")
     return 0
 
 

@@ -54,6 +54,12 @@ def main():
                     help="paged decode attention read: XLA ring gather or "
                          "the Pallas paged-attention kernel (interpret "
                          "mode off-TPU); needs --paged")
+    ap.add_argument("--allocation", choices=("worst_case", "lazy"),
+                    default="worst_case",
+                    help="paged admission: reserve worst-case pages up "
+                         "front, or admit on prompt pages and grow on "
+                         "demand (preempting + resuming on exhaustion); "
+                         "needs --paged")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy (default); > 0 samples per request")
     ap.add_argument("--top-k", type=int, default=0)
@@ -64,6 +70,9 @@ def main():
     if args.kernel == "pallas" and not args.paged:
         ap.error("--kernel pallas selects the paged-attention decode "
                  "kernel — pass --paged as well")
+    if args.allocation == "lazy" and not args.paged:
+        ap.error("--allocation lazy admits on prompt pages of the paged "
+                 "pool — pass --paged as well")
 
     from repro.configs import get_smoke_config
     from repro.models import params as Pm
@@ -117,14 +126,17 @@ def main():
             paged = ContinuousBatcher(cfg, params, n_slots=args.slots,
                                       capacity=96, cache_layout="paged",
                                       n_pages=1 + args.slots * pps // 2,
-                                      kernel=args.kernel)
-            p_done = drive(paged, workload(), f"paged[{args.kernel}]")
+                                      kernel=args.kernel,
+                                      allocation=args.allocation)
+            tag = f"paged[{args.kernel},{args.allocation}]"
+            p_done = drive(paged, workload(), tag)
             same = completions_equivalent(done, p_done)
             print(f"paged == dense (up to argmax ties): {same}; cache bytes "
                   f"{paged.cache_nbytes()} vs {eng.cache_nbytes()} dense "
                   f"({paged.cache_nbytes() / eng.cache_nbytes():.2f}x), "
                   f"peak pages in use {paged.allocator.peak_in_use}"
-                  f"/{paged.n_pages - 1}")
+                  f"/{paged.n_pages - 1}, {paged.preemptions} preemptions, "
+                  f"occupancy {paged.mean_occupancy():.0%}")
 
 
 if __name__ == "__main__":

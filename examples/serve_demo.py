@@ -13,9 +13,16 @@ Part 3 reruns the fused engine with per-request stochastic sampling
 dispatch, so dispatches/tick stays at 1.00, and a second run with the
 same seeds reproduces the same tokens.
 
+Part 4 drives the async request-lifecycle frontend over a lazily
+allocated paged pool: tokens stream per tick (`async for tok in handle`),
+one request is cancelled mid-decode (its pages reclaimed on the spot),
+and an undersized pool forces preemption + resume while every surviving
+stream still delivers exactly its completion's tokens.
+
     PYTHONPATH=src python examples/serve_demo.py --gen 24
 """
 import argparse
+import asyncio
 import os
 import sys
 import time
@@ -115,6 +122,49 @@ def main():
         print(f"qwen3_0_6b sampled: {len(done)} reqs in {steps} ticks, "
               f"{eng.decode_dispatches / max(1, steps):.2f} dispatch/tick")
     print(f"same seeds reproduce the same tokens: {runs[0] == runs[1]}")
+
+    print("\n== async streaming frontend (lazy pages, cancellation, "
+          "preemption) ==")
+    from repro.serving import ServingFrontend
+
+    async def lifecycle_demo():
+        # 3 usable pages for requests that worst-case 2 each: lazy
+        # admission over-commits the pool and preemption keeps it busy
+        eng = ContinuousBatcher(cfg, params, n_slots=2, capacity=64,
+                                cache_layout="paged", n_pages=4,
+                                allocation="lazy")
+        free0 = eng.allocator.n_free
+        async with ServingFrontend(eng, max_pending=8) as frontend:
+            rng = np.random.default_rng(7)
+            handles = [await frontend.submit(
+                rng.integers(1, cfg.vocab_size, 4).tolist(), 16,
+                priority=i % 2)  # odd rids outrank even ones
+                for i in range(3)]
+            victim = await frontend.submit(
+                rng.integers(1, cfg.vocab_size, 4).tolist(), 16)
+
+            async def consume(h, cancel_after=None):
+                toks = []
+                async for tok in h:
+                    toks.append(tok)
+                    if cancel_after and len(toks) == cancel_after:
+                        h.cancel()
+                return toks
+
+            results = await asyncio.gather(
+                *(consume(h) for h in handles),
+                consume(victim, cancel_after=3))
+        for h, toks in zip(handles, results[:-1]):
+            print(f"  rid={h.rid} [{h.status:9s}] streamed "
+                  f"{len(toks)} tokens: {toks[:6]}...")
+        print(f"  rid={victim.rid} [{victim.status:9s}] cancelled after "
+              f"{len(results[-1])} streamed tokens")
+        print(f"  preemptions={eng.preemptions}, pages leaked="
+              f"{free0 - eng.allocator.n_free}, "
+              f"{eng.decode_dispatches / max(1, eng.decode_ticks):.2f} "
+              f"dispatch/tick")
+
+    asyncio.run(lifecycle_demo())
 
 
 if __name__ == "__main__":

@@ -1,26 +1,114 @@
-"""Serving launcher: batched decode demo with KV/SSM state and optional
-stochastic sampling (temperature / top-k / top-p, seeded).
+"""Serving launcher: the async request-lifecycle frontend over the fused
+continuous-batching engine — per-token streaming, priority classes,
+deadlines, lazy page allocation with preemption, and optional stochastic
+sampling (temperature / top-k / top-p, seeded).
 
-  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6_7b --smoke \
-      --batch 4 --prompt-len 16 --gen 32 --temperature 0.8 --top-k 40
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3_0_6b --smoke \
+      --requests 6 --slots 4 --gen 24 --layout paged --allocation lazy \
+      --pages 9 --temperature 0.8 --top-k 40 --stream
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
+
+
+async def _serve(args, cfg, params):
+    from repro.serving import ContinuousBatcher, SamplingParams, ServingFrontend
+
+    layout = args.layout
+    if args.allocation == "lazy" and layout != "paged":
+        print("--allocation lazy needs the paged pool: switching "
+              "--layout paged")
+        layout = "paged"
+    kw = {}
+    if layout == "paged" and args.pages:
+        kw["n_pages"] = args.pages
+    batcher = ContinuousBatcher(
+        cfg, params, n_slots=args.slots, capacity=args.capacity,
+        cache_layout=layout, allocation=args.allocation, **kw)
+
+    rng = np.random.default_rng(args.seed)
+    sampled = args.temperature > 0
+
+    async with ServingFrontend(batcher,
+                               max_pending=args.max_pending) as frontend:
+        handles = []
+        t0 = time.time()
+        for i in range(args.requests):
+            sp = SamplingParams(temperature=args.temperature,
+                                top_k=args.top_k, top_p=args.top_p,
+                                seed=args.seed + i) if sampled else None
+            handles.append(await frontend.submit(
+                rng.integers(1, cfg.vocab_size,
+                             args.prompt_len).tolist(),
+                args.gen, sampling=sp, priority=args.priority,
+                deadline_ms=args.deadline_ms))
+
+        async def consume(h):
+            toks = []
+            async for tok in h:
+                toks.append(tok)
+                if args.stream and h.rid == 0:
+                    print(f"  [stream rid=0] token {len(toks):3d}: {tok}")
+            return toks
+
+        streams = await asyncio.gather(*(consume(h) for h in handles))
+        completions = await asyncio.gather(*(h.result() for h in handles))
+        wall = time.time() - t0
+
+    toks = sum(len(c.tokens) for c in completions)
+    mode = (f"sampled(T={args.temperature}, top_k={args.top_k}, "
+            f"top_p={args.top_p}, seed={args.seed}+rid)"
+            if sampled else "greedy")
+    print(f"arch={cfg.name} layout={layout} allocation={args.allocation} "
+          f"slots={args.slots} requests={args.requests} "
+          f"prompt={args.prompt_len} gen={args.gen} decode={mode}")
+    print(f"{toks} tokens in {wall:.2f}s ({toks / wall:.1f} tok/s, "
+          f"{batcher.decode_dispatches / max(1, batcher.decode_ticks):.2f} "
+          f"dispatch/tick, occupancy "
+          f"{batcher.mean_occupancy():.0%}, utilization "
+          f"{batcher.utilization():.0%}, "
+          f"{batcher.preemptions} preemptions)")
+    for h, toks_ in zip(handles[:4], streams[:4]):
+        print(f"  rid={h.rid} [{h.status}] streamed {len(toks_)} tokens: "
+              f"{toks_[:8]}...")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--capacity", type=int, default=256)
+    ap.add_argument("--layout", choices=("dense", "paged"), default="dense",
+                    help="decode-state layout (recurrent archs stay dense)")
+    ap.add_argument("--allocation", choices=("worst_case", "lazy"),
+                    default="worst_case",
+                    help="paged admission: reserve the worst case up "
+                         "front, or admit on prompt pages and grow on "
+                         "demand (preempting on exhaustion)")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="page-pool size (0 = full provisioning); "
+                         "undersize it with --allocation lazy to watch "
+                         "preemption keep the pool busy")
+    ap.add_argument("--priority", type=int, default=0,
+                    help="priority class for every request (lower is "
+                         "preempted first under --allocation lazy)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline; sooner deadlines are "
+                         "preempted later")
+    ap.add_argument("--max-pending", type=int, default=64,
+                    help="bounded intake: submit() suspends beyond this")
+    ap.add_argument("--stream", action="store_true",
+                    help="print request 0's tokens as they stream")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy (default); > 0 samples")
     ap.add_argument("--top-k", type=int, default=0,
@@ -28,50 +116,15 @@ def main():
     ap.add_argument("--top-p", type=float, default=1.0,
                     help="nucleus sampling threshold (1.0 = off)")
     ap.add_argument("--seed", type=int, default=0,
-                    help="sampling seed (same seed, same tokens)")
+                    help="base sampling seed (request i uses seed + i)")
     args = ap.parse_args()
 
     from repro.configs import get_config, get_smoke_config
     from repro.models import params as Pm
-    from repro.serving import (SamplingParams, greedy_generate, init_cache,
-                               make_serve_step)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    key = jax.random.PRNGKey(0)
-    params, _ = Pm.init_params(key, cfg)
-    B = args.batch
-    sampling = SamplingParams(temperature=args.temperature,
-                              top_k=args.top_k, top_p=args.top_p,
-                              seed=args.seed)
-
-    cache = init_cache(cfg, B, args.capacity, pos=0)
-    serve = jax.jit(make_serve_step(cfg))
-
-    # feed the prompt token by token (decode-path prefill)
-    shape = ((B, 1, cfg.num_codebooks) if cfg.num_codebooks > 1 else (B, 1))
-    tok = jnp.zeros(shape, jnp.int32)
-    t0 = time.time()
-    for i in range(args.prompt_len):
-        logits, cache = serve(params, cache, tok)
-        nxt = jnp.argmax(logits, axis=-1)
-        tok = (nxt[:, None] if nxt.ndim == 1 else nxt[:, None, :]).astype(jnp.int32)
-    prompt_s = time.time() - t0
-
-    t0 = time.time()
-    out = greedy_generate(cfg, params, cache, tok, args.gen,
-                          sampling=sampling)
-    out = jax.device_get(out)
-    gen_s = time.time() - t0
-    per_tok = gen_s / args.gen
-    mode = (f"sampled(T={sampling.temperature}, top_k={sampling.top_k}, "
-            f"top_p={sampling.top_p}, seed={sampling.seed})"
-            if sampling.temperature > 0 else "greedy")
-    print(f"arch={cfg.name} batch={B} prompt={args.prompt_len} "
-          f"gen={args.gen} decode={mode}")
-    print(f"prompt: {prompt_s:.2f}s; generate: {gen_s:.2f}s "
-          f"({per_tok*1e3:.1f} ms/token/batch, "
-          f"{B/per_tok:.1f} tok/s aggregate)")
-    print("sample tokens[0,:16]:", out[0, :16].tolist())
+    params, _ = Pm.init_params(jax.random.PRNGKey(0), cfg)
+    asyncio.run(_serve(args, cfg, params))
 
 
 if __name__ == "__main__":

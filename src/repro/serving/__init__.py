@@ -1,27 +1,50 @@
-"""Serving stack: a host-side POLICY layer over device-facing ENGINES.
+"""Serving stack: an async REQUEST-LIFECYCLE layer and a host-side POLICY
+layer over device-facing ENGINES.
 
-Layer split (who runs vs how it runs):
+Layer split (who may run vs who runs vs how it runs):
 
+- ``frontend`` — request lifecycle.  `ServingFrontend` is an asyncio
+  service over a batcher: ``await submit(...)`` returns a
+  `RequestHandle` that streams tokens per tick (``async for tok in
+  handle``), resolves to a `Completion` (``await handle.result()``), and
+  cancels at any stage (intake, queued, mid-prefill, mid-decode) with
+  immediate slot/page reclaim.  Intake is a bounded queue — `submit`
+  suspends callers for backpressure instead of buffering unboundedly —
+  and per-request ``priority=`` / ``deadline_ms=`` ride the scheduler's
+  `Request` into the preemption policy.
 - ``scheduler`` — policy.  `Request` / `SamplingParams` intake and
-  validation, FIFO admission, per-request token budgets, worst-case page
+  validation, FIFO admission, per-request token budgets, page
   reservation with refcounted prompt-prefix sharing (`PageAllocator`),
-  slot assignment/release, completion records, utilization metrics.
-  Touches no device buffers.
+  slot assignment/release, `preempt(rid)` / `cancel(rid)`, completion
+  records, utilization/occupancy metrics.  Touches no device buffers.
+  Paged admission has two modes (``allocation=``): "worst_case"
+  (default) reserves a request's whole-sequence page budget up front and
+  stalls the FIFO queue on exhaustion; "lazy" admits on the prompt's
+  pages only, acquires each decode page on demand at page boundaries,
+  and on pool exhaustion preempts the most preemptible running request
+  (lowest priority, then latest/absent deadline, then most recent
+  admission) — its slot and non-shared pages are released and it is
+  requeued WITH its generated tokens, so the resume is a recompute
+  prefill of prompt + emitted (never a re-sample) and completions are
+  token-for-token what an unpreempted run produces; a resume is
+  re-admitted at its remaining worst case, so a once-preempted request
+  returns only when it can run to completion (anti-thrash).  A request whose
+  worst case can NEVER fit the pool is still rejected at submit().
+  Preemption and lazy growth are host-side bookkeeping only: the fused
+  tick stays at exactly one dispatch.
 - ``engine`` — dispatch.  `DenseEngine` (stacked dense rings, device
   `pos` vector, in-dispatch slot reset), `PagedEngine` (ONE shared page
-  pool per layer, host-owned block tables + positions), `PerSlotEngine`
-  (seed batch-1 baseline).  Each owns its decode state and jitted step
-  functions and advances the whole slot pool in ONE dispatch per tick.
-  `PagedEngine` takes a ``kernel="xla"|"pallas"`` knob (also exposed on
-  `ContinuousBatcher`): "xla" — the default and the equivalence oracle —
-  reads the pool by gathering each lane's logical ring into a
-  (n_slots, T, KV, hd) tensor; "pallas" runs the paged-attention decode
-  kernel (repro.kernels.paged_attention), which streams K/V page tiles
-  through the block table inside the kernel (scalar-prefetch index maps)
-  with flash-style online softmax, GQA head grouping, and position-
-  validity masking — no ring gather ever lands in HBM.  Both settings
-  stay inside the same single fused dispatch per tick and are token-
-  equivalent; multi-token prefill blocks always use the XLA read.
+  pool per layer, host-owned block tables + positions, `set_page` for
+  lazy growth), `PerSlotEngine` (seed batch-1 baseline).  Each owns its
+  decode state and jitted step functions and advances the whole slot
+  pool in ONE dispatch per tick.  `PagedEngine` takes a
+  ``kernel="xla"|"pallas"`` knob (also on `ContinuousBatcher`): "xla" —
+  the default and the equivalence oracle — gathers each lane's logical
+  ring; "pallas" runs the paged-attention decode kernel
+  (repro.kernels.paged_attention), streaming K/V page tiles through the
+  block table in-kernel (scalar-prefetch index maps, flash-style online
+  softmax, GQA grouping, position-validity masking).  Both stay inside
+  the same single fused dispatch per tick and are token-equivalent.
 - ``sampling`` — the decode-policy kernel.  Per-slot temperature /
   top-k / top-p sampling expressed as Gumbel-max over filtered scaled
   logits, fused INSIDE the engine dispatch: per-slot base PRNG keys and
@@ -29,7 +52,8 @@ Layer split (who runs vs how it runs):
   key `fold_in`-derived per (request seed, emit index) — so sampled
   decode costs exactly one dispatch per tick, temperature 0 recovers the
   greedy path bit-for-bit, and same-seed runs reproduce token-for-token
-  across the dense, paged, and per-slot engines.
+  across the dense, paged, and per-slot engines AND across a
+  preempt/resume cycle (the emit index never rewinds).
 - ``kvcache`` / ``serve_step`` — decode-state construction (dense +
   paged layouts, slot ops) and the jitted step functions both engine
   kinds compile.
@@ -81,4 +105,8 @@ from repro.serving.scheduler import (  # noqa: F401
     Request,
     Completion,
     completions_equivalent,
+)
+from repro.serving.frontend import (  # noqa: F401
+    RequestHandle,
+    ServingFrontend,
 )

@@ -181,6 +181,12 @@ class PagedEngine:
         lands nowhere live (the allocator reclaims the pages host-side)."""
         self.block_table[s, :] = 0
 
+    def set_page(self, s: int, idx: int, pid: int):
+        """Lazy-allocation growth: point entry idx of slot s's block-table
+        row at a just-acquired page (host-side write; the next dispatch
+        scatters through it)."""
+        self.block_table[s, idx] = pid
+
     def set_pos(self, s: int, pos: int):
         self.slot_pos[s] = pos
 

@@ -1,0 +1,315 @@
+"""Async request-lifecycle frontend over the fused serving engine.
+
+`ServingFrontend` turns the tick-driven `ContinuousBatcher` into an
+asyncio service: callers `await submit(...)` and get back a
+`RequestHandle` they can stream token-by-token (`async for tok in
+handle`), await to completion (`await handle.result()`), or cancel at any
+lifecycle stage.  One background task owns the engine and loops
+
+    drain intake -> batcher.step() (ONE fused dispatch) -> pump emissions
+
+yielding to the event loop between ticks, so streams, new submissions and
+cancellations interleave with decode without threads (pass
+``tick_in_thread=True`` to run each tick via ``asyncio.to_thread`` when
+device ticks are long enough to starve the loop).
+
+Lifecycle semantics:
+
+- **backpressure**: the intake queue is bounded (``max_pending``);
+  `submit` suspends the caller until the engine drains, instead of
+  buffering unboundedly — the edge-serving posture: shed load at the
+  front, don't fall over at the back.
+- **streaming**: tokens are surfaced from each tick's emissions in
+  arrival order; a preempted-and-resumed request never re-streams tokens
+  it already delivered (the scheduler preserves emitted tokens across
+  preemption, and the handle tracks its high-water mark).
+- **cancellation**: `handle.cancel()` works mid-intake, mid-queue,
+  mid-prefill and mid-decode; the scheduler reclaims the slot and every
+  non-shared page immediately, no Completion is recorded, the token
+  stream ends, and `result()` raises `asyncio.CancelledError`.
+- **priority / deadlines**: ``priority=`` and ``deadline_ms=`` ride on
+  the scheduler's `Request` and feed the lazy-allocation preemption
+  policy (lowest priority, then latest/absent deadline, then most recent
+  admission is preempted first).  Deadlines are converted to absolute
+  loop-clock milliseconds; only their ordering matters.
+- **status**: ``handle.status`` walks "queued" -> "running" -> "done"
+  (or "cancelled" / "error"); a preempted request shows "queued" again
+  until it is re-admitted.
+
+Invalid requests (empty prompt, prompt >= capacity, infeasible page
+budget, ...) fail their OWN handle — `result()` re-raises the
+scheduler's ValueError — and never poison the intake batch.
+"""
+from __future__ import annotations
+
+import asyncio
+
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import Completion, Request
+
+_END = object()  # stream terminator sentinel
+
+
+class RequestHandle:
+    """A live handle on one submitted request (created by
+    `ServingFrontend.submit`, not directly)."""
+
+    def __init__(self, frontend: "ServingFrontend", rid: int,
+                 request: Request):
+        self.rid = rid
+        self.request = request
+        self.status = "queued"
+        self.completion: Completion | None = None
+        self.error: Exception | None = None
+        self._frontend = frontend
+        self._stream: asyncio.Queue = asyncio.Queue()
+        self._finished = asyncio.Event()
+        self._sent = 0  # tokens already pushed to the stream
+
+    # ------------------------------------------------------- consumer API
+
+    def done(self) -> bool:
+        """True once the request reached a terminal state (done /
+        cancelled / error)."""
+        return self._finished.is_set()
+
+    def cancel(self) -> bool:
+        """Drop the request at whatever stage it is in; its slot and pages
+        are reclaimed immediately.  Returns False if it already reached a
+        terminal state."""
+        return self._frontend._cancel(self)
+
+    async def result(self) -> Completion:
+        """Wait for the terminal state; returns the Completion, re-raises
+        the submit-time error, or raises CancelledError if cancelled."""
+        await self._finished.wait()
+        if self.error is not None:
+            raise self.error
+        if self.completion is None:
+            raise asyncio.CancelledError(f"request {self.rid} cancelled")
+        return self.completion
+
+    def __aiter__(self):
+        return self
+
+    async def __anext__(self):
+        tok = await self._stream.get()
+        if tok is _END:
+            raise StopAsyncIteration
+        return tok
+
+    # ------------------------------------------------- frontend plumbing
+
+    def _push(self, emitted: list):
+        for tok in emitted[self._sent:]:
+            self._stream.put_nowait(tok)
+        self._sent = max(self._sent, len(emitted))
+
+    def _finish(self, completion: Completion):
+        self._push(completion.tokens)
+        self.completion = completion
+        self.status = "done"
+        self._finished.set()
+        self._stream.put_nowait(_END)
+
+    def _fail(self, error: Exception):
+        self.error = error
+        self.status = "error"
+        self._finished.set()
+        self._stream.put_nowait(_END)
+
+    def _cancelled(self):
+        self.status = "cancelled"
+        self._finished.set()
+        self._stream.put_nowait(_END)
+
+
+class ServingFrontend:
+    """Asyncio streaming frontend over a batcher (`ContinuousBatcher`;
+    anything with submit/step/cancel/slot_req/slot_state/done works).
+
+        batcher = ContinuousBatcher(cfg, params, cache_layout="paged",
+                                    allocation="lazy")
+        async with ServingFrontend(batcher, max_pending=32) as fe:
+            handle = await fe.submit(prompt, max_new=64, priority=1,
+                                     deadline_ms=2000)
+            async for tok in handle:
+                ...
+            completion = await handle.result()
+    """
+
+    def __init__(self, batcher, *, max_pending: int = 64,
+                 tick_in_thread: bool = False):
+        self.batcher = batcher
+        self.max_pending = max_pending
+        self.tick_in_thread = tick_in_thread
+        self._intake: asyncio.Queue = asyncio.Queue(maxsize=max_pending)
+        self._handles: dict[int, RequestHandle] = {}
+        self._cancels: list = []  # rids to drop, applied between ticks
+        self._next_rid = 0
+        self._done_seen = len(batcher.done)
+        self._task: asyncio.Task | None = None
+
+    # ---------------------------------------------------------- lifecycle
+
+    def start(self):
+        """Spawn the engine-driving task on the running event loop."""
+        if self._task is None:
+            self._task = asyncio.get_running_loop().create_task(self._run())
+
+    async def stop(self):
+        """Stop the engine task.  Pending work stays in the batcher; a
+        later start() resumes it."""
+        if self._task is not None:
+            self._task.cancel()
+            try:
+                await self._task
+            except asyncio.CancelledError:
+                pass
+            self._task = None
+        self._apply_cancels()  # reclaim pages of late cancellations
+
+    async def __aenter__(self):
+        self.start()
+        return self
+
+    async def __aexit__(self, *exc):
+        await self.stop()
+
+    # ------------------------------------------------------------- intake
+
+    async def submit(self, prompt, max_new: int, *,
+                     sampling: SamplingParams | None = None,
+                     priority: int = 0,
+                     deadline_ms: float | None = None) -> RequestHandle:
+        """Enqueue one request; suspends (backpressure) while
+        ``max_pending`` submissions are already waiting for the engine."""
+        rid = self._next_rid
+        self._next_rid += 1
+        deadline = None
+        if deadline_ms is not None:
+            deadline = asyncio.get_running_loop().time() * 1e3 + deadline_ms
+        req = Request(rid=rid, prompt=list(prompt), max_new=max_new,
+                      sampling=sampling, priority=priority,
+                      deadline=deadline)
+        handle = RequestHandle(self, rid, req)
+        self._handles[rid] = handle
+        try:
+            await self._intake.put(handle)
+        except asyncio.CancelledError:
+            # the submitter gave up mid-backpressure (e.g. wait_for
+            # timeout): the never-enqueued handle must not linger
+            self._handles.pop(rid, None)
+            handle._cancelled()
+            raise
+        return handle
+
+    def _cancel(self, handle: RequestHandle) -> bool:
+        if handle.done():
+            return False
+        # the handle's stream terminates NOW; the batcher-side drop
+        # (queue removal / slot + page reclaim) is applied by the engine
+        # task between ticks, so a cancel can never mutate scheduler
+        # state while a tick runs in a worker thread (tick_in_thread)
+        self._cancels.append(handle.rid)
+        handle._cancelled()
+        self._handles.pop(handle.rid, None)
+        if self._task is None:
+            self._apply_cancels()  # no engine task: reclaim right here
+        return True
+
+    def _apply_cancels(self):
+        while self._cancels:
+            self.batcher.cancel(self._cancels.pop())
+
+    def _admit(self, handle: RequestHandle) -> bool:
+        if handle.done():
+            return False  # cancelled while still in intake
+        try:
+            self.batcher.submit([handle.request])
+        except ValueError as e:
+            # an invalid request fails its own handle only
+            handle._fail(e)
+            self._handles.pop(handle.rid, None)
+            return False
+        return True
+
+    def _drain(self) -> int:
+        """Move intake into the batcher queue — but only while the batcher
+        holds fewer than max_pending waiters, so total admitted-but-unrun
+        backlog stays bounded and submit() keeps suspending under
+        sustained overload (the intake bound alone would reset each
+        tick)."""
+        n = 0
+        while len(self.batcher.queue) < self.max_pending:
+            try:
+                handle = self._intake.get_nowait()
+            except asyncio.QueueEmpty:
+                break
+            n += self._admit(handle)
+        return n
+
+    # -------------------------------------------------------------- loop
+
+    def _busy(self) -> bool:
+        b = self.batcher
+        return bool(b.queue) or any(r is not None for r in b.slot_req)
+
+    async def _run(self):
+        try:
+            while True:
+                self._apply_cancels()
+                self._drain()
+                if not self._busy():
+                    # idle: park until the next submission arrives
+                    handle = await self._intake.get()
+                    if not self._admit(handle):
+                        continue
+                if self.tick_in_thread:
+                    await asyncio.to_thread(self.batcher.step)
+                else:
+                    self.batcher.step()
+                self._apply_cancels()  # cancels raced the tick: drop now
+                self._pump()
+                # one tick per loop turn: let consumers interleave
+                await asyncio.sleep(0)
+        except asyncio.CancelledError:
+            raise
+        except Exception as e:
+            # an engine error must fail every open handle loudly, not
+            # leave their streams/results hanging on a dead task
+            for handle in list(self._handles.values()):
+                if not handle.done():
+                    handle._fail(e)
+            self._handles.clear()
+            raise
+
+    def _pump(self):
+        """Surface this tick's emissions: stream new tokens from live
+        slots, resolve fresh completions, and mark preempted requests as
+        queued again."""
+        b = self.batcher
+        running = set()
+        for s in range(b.n_slots):
+            req, st = b.slot_req[s], b.slot_state[s]
+            if req is None:
+                continue
+            handle = self._handles.get(req.rid)
+            if handle is None or handle.done():
+                continue
+            running.add(req.rid)
+            handle.status = "running"
+            handle._push(st["emitted"])
+        finished = []
+        for c in b.done[self._done_seen:]:
+            handle = self._handles.get(c.rid)
+            if handle is not None and not handle.done():
+                handle._finish(c)
+                finished.append(c.rid)
+        self._done_seen = len(b.done)
+        for rid in finished:
+            self._handles.pop(rid, None)
+        for rid, handle in self._handles.items():
+            if (handle.status == "running" and rid not in running
+                    and not handle.done()):
+                handle.status = "queued"  # preempted back to the queue

@@ -41,21 +41,45 @@ Cache layouts (`cache_layout=` on the fused engine):
     every slot owns worst-case `capacity` entries for its whole lifetime;
   - "paged": ONE shared (n_pages, page_size, KV, hd) pool per layer plus
     per-slot block tables of page ids (vLLM-style).  A `PageAllocator`
-    owns page lifetime host-side: admission reserves ceil((prompt +
-    budget) / page_size) pages up front, so a request is admitted only
-    when its whole sequence fits — the queue stalls (FIFO) on pool
-    exhaustion and admission resumes as finishing slots release their
-    pages; a request whose worst case can NEVER fit the pool is rejected
-    at submit() instead of stalling the queue head forever.  Requests
-    sharing a common prompt prefix refcount the same pages (with chunked
-    prefill on pure-attention archs the sharer also SKIPS prefilling the
-    shared tokens).  Prefix sharing turns itself off when the logical
-    ring can wrap (a wrapped ring overwrites prefix entries).  Recurrent
-    archs (mamba2 / rwkv6) keep O(1) dense state; hybrid pages only its
-    shared attention leaves.  `kernel="pallas"` swaps the paged decode
-    attention read for the Pallas paged-attention kernel (page tiles
-    streamed through the block table in-kernel instead of an XLA ring
-    gather); "xla" stays the default and the equivalence oracle.
+    owns page lifetime host-side; a request whose worst case can NEVER
+    fit the pool is rejected at submit() instead of stalling the queue
+    head forever.  Requests sharing a common prompt prefix refcount the
+    same pages (with chunked prefill on pure-attention archs the sharer
+    also SKIPS prefilling the shared tokens).  Prefix sharing turns
+    itself off when the logical ring can wrap (a wrapped ring overwrites
+    prefix entries).  Recurrent archs (mamba2 / rwkv6) keep O(1) dense
+    state; hybrid pages only its shared attention leaves.
+    `kernel="pallas"` swaps the paged decode attention read for the
+    Pallas paged-attention kernel (page tiles streamed through the block
+    table in-kernel instead of an XLA ring gather); "xla" stays the
+    default and the equivalence oracle.
+
+Page admission policy (`allocation=` on the paged layout):
+
+  - "worst_case" (default): admission reserves ceil((prompt + budget) /
+    page_size) pages up front, so a request runs only when its whole
+    sequence is guaranteed to fit — the queue stalls (FIFO) on pool
+    exhaustion and admission resumes as finishing slots release pages;
+  - "lazy": admission reserves only the prompt's pages and each decode
+    page is acquired on demand when a slot's position crosses a page
+    boundary.  On pool exhaustion the scheduler PREEMPTS the most
+    preemptible running request — lowest `Request.priority` first, then
+    latest/absent deadline, then most recently admitted — releasing its
+    slot and non-shared pages and requeuing it at the queue head WITH its
+    generated tokens, so the resume is a prefill of prompt + emitted
+    (no token is ever re-sampled) and the completion is token-for-token
+    what an unpreempted run produces.  Anti-thrash: a RESUME is admitted
+    at its remaining worst case, so a preempted request comes back only
+    when it can run to completion — it never grows again, never
+    re-triggers preemption, and pays its recompute at most once per
+    displacement instead of ping-ponging with the request that displaced
+    it.  Preemption is host-side policy only: no extra device dispatch,
+    the fused tick stays at 1.00 dispatch/tick.
+
+Lifecycle controls shared by both layouts: `preempt(rid)` force-requeues
+a running request through the same resume path, and `cancel(rid)` drops a
+request at any stage (queued, mid-prefill, mid-decode), reclaiming its
+slot and pages immediately and recording no Completion.
 
 `PerSlotBatcher` drives the seed engine — one jitted batch-1 call per
 active slot per tick — as the equivalence baseline and the bench's
@@ -67,7 +91,6 @@ configured.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Iterable
 
 import numpy as np
@@ -87,6 +110,13 @@ class Request:
     # decode policy; None falls back to the batcher's default_sampling
     # (greedy unless configured otherwise)
     sampling: SamplingParams | None = None
+    # preemption policy inputs (lazy paged allocation): a LOWER priority
+    # is preempted first; among equal priorities the request with the
+    # latest (or no) deadline goes first.  Deadlines are opaque floats —
+    # only their ordering matters (the async frontend passes absolute
+    # milliseconds derived from deadline_ms)
+    priority: int = 0
+    deadline: float | None = None
 
 
 @dataclasses.dataclass
@@ -140,12 +170,21 @@ class PageAllocator:
     dropped at the same moment, so a later lookup can never hand out a
     reclaimed page id.  Page 0 is the reserved null page (idle lanes and
     unallocated block-table entries point at it) and is permanently
-    pinned."""
+    pinned.
 
-    def __init__(self, n_pages: int, page_size: int):
+    `allocation` records the admission policy the pool is driven under:
+    "worst_case" reserves a request's whole-sequence page budget at
+    admission; "lazy" reserves only the prompt pages and acquires decode
+    pages on demand at page boundaries (pool exhaustion then triggers
+    scheduler preemption instead of an admission stall)."""
+
+    def __init__(self, n_pages: int, page_size: int,
+                 allocation: str = "worst_case"):
         assert n_pages >= 2, "need at least the null page plus one"
+        assert allocation in ("worst_case", "lazy"), allocation
         self.n_pages = n_pages
         self.page_size = page_size
+        self.allocation = allocation
         self._free = list(range(n_pages - 1, 0, -1))  # pop() -> 1, 2, ...
         self.refcount = np.zeros((n_pages,), np.int32)
         self.refcount[0] = 1  # null page: never allocated, never freed
@@ -217,6 +256,14 @@ class _BatcherBase:
         self.done: list = []
         self.active_slot_steps = 0    # slot-steps that carried a sequence
         self.total_slot_steps = 0     # slot-step capacity offered so far
+        self.preemptions = 0          # running requests forced back to queue
+        self.decode_ticks = 0         # fused decode ticks driven so far
+        self.decode_active_slots = 0  # live slots summed over decode ticks
+        # preempted requests awaiting re-admission: id(request) ->
+        # (emitted, margins); resume prefills prompt + emitted instead of
+        # re-sampling anything
+        self._resume: dict = {}
+        self._admit_seq = 0           # admission order, for victim choice
 
     # ------------------------------------------------- engine delegation
 
@@ -266,7 +313,9 @@ class _BatcherBase:
 
     def _new_slot_state(self, req: Request, fed0: int = 0) -> dict:
         sp = req.sampling or self.default_sampling
+        self._admit_seq += 1
         return {"emitted": [], "fed": fed0, "margins": [], "sp": sp,
+                "admit_seq": self._admit_seq,
                 # base PRNG key, derived once per request from its seed;
                 # greedy requests never consume randomness
                 "key": request_key(sp.seed) if sp.temperature > 0
@@ -324,6 +373,26 @@ class _BatcherBase:
     def _release_slot(self, s: int):
         """Hook: layout-specific reclaim when slot s's sequence finishes."""
 
+    def cancel(self, rid: int) -> bool:
+        """Drop request `rid` at whatever lifecycle stage it is in —
+        queued (including preempted-and-requeued), mid-prefill or
+        mid-decode.  Its slot and pages are reclaimed immediately and no
+        Completion is recorded.  Returns False when the rid is unknown
+        (never submitted, already finished, or already cancelled)."""
+        for i, req in enumerate(self.queue):
+            if req.rid == rid:
+                self.queue.pop(i)
+                self._resume.pop(id(req), None)
+                return True
+        for s in range(self.n_slots):
+            req = self.slot_req[s]
+            if req is not None and req.rid == rid:
+                self._release_slot(s)
+                self.slot_req[s] = None
+                self.slot_state[s] = None
+                return True
+        return False
+
     # --------------------------------------------------------------- loop
 
     def run(self, max_steps: int = 10_000):
@@ -342,20 +411,26 @@ class _BatcherBase:
 
     # ------------------------------------------------------------ metrics
 
-    def utilization(self, steps: int | None = None) -> float:
+    def utilization(self) -> float:
         """Fraction of offered slot-step capacity that carried a sequence.
 
         Every prompt token counts one active slot-step whether it was fed
         through a decode tick or written by a chunked-prefill block (a
         size-S batch-1 block books S slot-steps of work and S slot-steps
         of offered capacity), so chunked and decode prefill modes report
-        consistent figures on the same workload."""
-        if steps is not None:
-            warnings.warn(
-                "utilization(steps) is deprecated: the argument is ignored "
-                "— call utilization() with no arguments",
-                DeprecationWarning, stacklevel=2)
+        consistent figures on the same workload.  (The legacy `steps`
+        argument — already ignored and deprecated — is gone: passing it
+        is a TypeError.)"""
         return self.active_slot_steps / max(1, self.total_slot_steps)
+
+    def mean_occupancy(self) -> float:
+        """Mean fraction of the slot pool holding a live request per
+        decode tick — the concurrency the admission policy actually
+        sustained (worst-case page reservation caps this well below 1.0
+        on an overloaded pool; lazy allocation admits on prompt pages and
+        rides closer to full)."""
+        return self.decode_active_slots / max(1, self.decode_ticks
+                                              * self.n_slots)
 
 
 class ContinuousBatcher(_BatcherBase):
@@ -368,7 +443,7 @@ class ContinuousBatcher(_BatcherBase):
                  use_pallas: bool = False, cache_layout: str = "dense",
                  page_size: int = DEFAULT_PAGE_SIZE,
                  n_pages: int | None = None, share_prefix: bool = True,
-                 kernel: str = "xla",
+                 kernel: str = "xla", allocation: str = "worst_case",
                  default_sampling: SamplingParams | None = None):
         super().__init__(cfg, params, n_slots=n_slots, capacity=capacity,
                          bos_token=bos_token,
@@ -376,13 +451,19 @@ class ContinuousBatcher(_BatcherBase):
         assert prefill_mode in ("chunked", "decode"), prefill_mode
         assert cache_layout in ("dense", "paged"), cache_layout
         assert kernel in ("xla", "pallas"), kernel
+        assert allocation in ("worst_case", "lazy"), allocation
         if cfg.is_recurrent:
             cache_layout = "dense"  # O(1) decode state: nothing to page
         if kernel == "pallas" and cache_layout != "paged":
             raise ValueError(
                 "kernel='pallas' selects the paged-attention decode kernel"
                 " — it needs cache_layout='paged' on a non-recurrent arch")
+        if cache_layout == "dense":
+            # dense slots own worst-case lanes by construction: there is
+            # nothing to allocate lazily (preempt()/cancel() still work)
+            allocation = "worst_case"
         self.cache_layout = cache_layout
+        self.allocation = allocation
         self.prefill_mode = prefill_mode
         self.prefill_chunk = max(1, prefill_chunk)
         if cache_layout == "dense":
@@ -392,7 +473,8 @@ class ContinuousBatcher(_BatcherBase):
             self.engine = PagedEngine(cfg, params, n_slots, capacity,
                                       page_size, n_pages, use_pallas,
                                       kernel)
-            self.allocator = PageAllocator(self.engine.n_pages, page_size)
+            self.allocator = PageAllocator(self.engine.n_pages, page_size,
+                                           allocation)
             self.slot_pages: list = [[] for _ in range(n_slots)]
             logical = self.engine.ring_cap
             # sharing is sound only while the logical ring never wraps (a
@@ -451,6 +533,16 @@ class ContinuousBatcher(_BatcherBase):
                 f"{self.engine.n_pages - 1} — raise n_pages or lower "
                 f"capacity")
 
+    def _feed_tokens(self, req: Request) -> list:
+        """Tokens whose K/V the slot must hold before normal decode can
+        (re)start: the prompt, plus — on a preemption resume — every
+        already-generated token except the last (the last one is the next
+        decode tick's input, exactly as if no preemption had happened)."""
+        rs = self._resume.get(id(req))
+        if rs is None:
+            return req.prompt
+        return list(req.prompt) + rs[0][:-1]
+
     def _fill_slots(self):
         for s in range(self.n_slots):
             if self.slot_req[s] is None and self.queue:
@@ -462,12 +554,18 @@ class ContinuousBatcher(_BatcherBase):
                     req, fed0 = admitted
                 else:
                     req = self.queue.pop(0)
+                feed = self._feed_tokens(req)
+                rs = self._resume.pop(id(req), None)
                 self.slot_req[s] = req
-                self.slot_state[s] = self._new_slot_state(req, fed0)
+                st = self._new_slot_state(req, fed0)
+                if rs is not None:
+                    st["emitted"], st["margins"] = rs
+                self.slot_state[s] = st
                 if self.prefill_mode == "chunked":
-                    self._prefill_slot(s, req)
+                    self._prefill_slot(s, feed, fresh=rs is None)
                 else:
-                    # prompt will be fed through decode ticks; zero the
+                    # prompt (and, on resume, the replayed generated
+                    # tokens) will be fed through decode ticks; zero the
                     # slot's lanes inside the next fused dispatch
                     self.engine.mark_reset(s)
 
@@ -482,23 +580,36 @@ class ContinuousBatcher(_BatcherBase):
         return keys
 
     def _admit_paged(self, s: int):
-        """Try to admit the queue head into slot s: reserve every page its
-        whole sequence (prompt + budget) can touch, sharing refcounted
-        prefix pages where the index has them.  Returns (request,
+        """Try to admit the queue head into slot s, sharing refcounted
+        prefix pages where the index has them.  Worst-case allocation
+        reserves every page the whole sequence (prompt + budget) can
+        touch; lazy allocation reserves only the pages the prefill will
+        write (prompt — plus replayed generated tokens on a resume) and
+        leaves decode pages to on-demand growth.  Returns (request,
         first-unshared-token) or None when the pool can't hold it yet."""
         req = self.queue[0]
         ps = self.engine.page_size
-        need = self._worst_case_pages(req)
+        feed = self._feed_tokens(req)
+        if self.allocation == "lazy" and id(req) not in self._resume:
+            need = -(-min(len(feed), self._ring_cap) // ps)
+        else:
+            # worst case — always for allocation="worst_case", and as the
+            # anti-thrash rule for a lazy RESUME: a preempted request is
+            # re-admitted only when it can run to completion, so it never
+            # grows (never re-triggers preemption) and the recompute
+            # prefill is paid at most once per displacement instead of
+            # ping-ponging with the request that displaced it
+            need = self._worst_case_pages(req)
         # infeasible requests are rejected at submit(); anything queued
         # can always be admitted once enough pages are reclaimed
         assert need <= self.engine.n_pages - 1, req.rid
         shared: list = []
-        full_pages = len(req.prompt) // ps
-        keys = self._prefix_chain(req.prompt, full_pages) if self._share \
+        full_pages = len(feed) // ps
+        keys = self._prefix_chain(feed, full_pages) if self._share \
             else []
-        # skip mode must leave >= 1 prompt token to feed (its logits seed
-        # the first generated token)
-        limit = min(full_pages, (len(req.prompt) - 1) // ps) \
+        # skip mode must leave >= 1 token to feed (a fresh admission
+        # samples its first generated token from the last fed logits)
+        limit = min(full_pages, (len(feed) - 1) // ps) \
             if self._share_skip else full_pages
         for key in keys[:limit]:
             pid = self.allocator.lookup_prefix(key)
@@ -513,7 +624,7 @@ class ContinuousBatcher(_BatcherBase):
         pages = shared + [self.allocator.alloc()
                           for _ in range(need - len(shared))]
         self.slot_pages[s] = pages
-        # publish this request's own full prompt pages for later sharers
+        # publish this request's own full prefill pages for later sharers
         if self._share:
             for k in range(len(shared), full_pages):
                 self.allocator.register_prefix(keys[k], pages[k])
@@ -532,6 +643,72 @@ class ContinuousBatcher(_BatcherBase):
         self.slot_pages[s] = []
         self.engine.release(s)
 
+    # ------------------------------------------------------- preemption
+
+    def preempt(self, rid: int) -> bool:
+        """Force the running request `rid` back to the queue head with its
+        generated tokens (the on-demand page-growth path uses the same
+        mechanism when the pool exhausts).  Works on both layouts; returns
+        False when rid is not currently in a slot."""
+        for s in range(self.n_slots):
+            req = self.slot_req[s]
+            if req is not None and req.rid == rid:
+                self._preempt(s)
+                return True
+        return False
+
+    def _preempt(self, s: int):
+        """Host-side only: release slot s's pages/lane, stash its emitted
+        tokens for a resume prefill, requeue it at the head."""
+        req, st = self.slot_req[s], self.slot_state[s]
+        self.preemptions += 1
+        if st["emitted"]:
+            self._resume[id(req)] = (list(st["emitted"]),
+                                     list(st["margins"]))
+        self._release_slot(s)
+        self.slot_req[s] = None
+        self.slot_state[s] = None
+        self.queue.insert(0, req)
+
+    def _victim_order(self, s: int):
+        """Sort key: the MOST preemptible running request first — lowest
+        priority, then latest (or no) deadline, then most recently
+        admitted."""
+        req, st = self.slot_req[s], self.slot_state[s]
+        dl = req.deadline if req.deadline is not None else float("inf")
+        return (req.priority, -dl, -st["admit_seq"])
+
+    def _grow_decode_pages(self):
+        """Lazy allocation: before the fused tick, make sure every live
+        slot owns the page its next token lands in, acquiring pages at
+        page boundaries and preempting the most preemptible running
+        request (possibly the grower itself, which then simply leaves the
+        tick) when the pool is exhausted.  Pure host-side bookkeeping —
+        the dispatch count never moves."""
+        if self.cache_layout != "paged" or self.allocation != "lazy":
+            return
+        ps = self.engine.page_size
+        for s in range(self.n_slots):
+            if self.slot_req[s] is None:
+                continue
+            pos = int(self.engine.slot_pos[s])
+            idx = (pos % self._ring_cap) // ps
+            if idx < len(self.slot_pages[s]):
+                continue  # page already owned (or the ring wrapped)
+            assert idx == len(self.slot_pages[s]), (s, pos, idx)
+            while self.allocator.n_free == 0:
+                victim = min((v for v in range(self.n_slots)
+                              if self.slot_req[v] is not None),
+                             key=self._victim_order)
+                self._preempt(victim)
+                if victim == s:
+                    break  # the grower was the weakest: it yielded
+            if self.slot_req[s] is None:
+                continue
+            pid = self.allocator.alloc()
+            self.slot_pages[s].append(pid)
+            self.engine.set_page(s, idx, pid)
+
     # ------------------------------------------------------------ prefill
 
     def _chunk_size(self, pos: int, remaining: int) -> int:
@@ -547,20 +724,24 @@ class ContinuousBatcher(_BatcherBase):
             p *= 2
         return p
 
-    def _prefill_slot(self, s: int, req: Request):
-        """Write the prompt into slot s in blocks; the last block's logits
-        give the first generated token (sampled in-dispatch).  Starts at
-        st["fed"] — nonzero when a refcount-shared prefix was skipped
-        (paged layout)."""
+    def _prefill_slot(self, s: int, feed, fresh: bool = True):
+        """Write `feed` into slot s in blocks.  On a fresh admission feed
+        is the prompt and the last block's logits give the first generated
+        token (sampled in-dispatch); on a preemption resume feed is
+        prompt + already-emitted tokens (minus the last) and the block
+        outputs are discarded — the resumed request's next token is
+        already known, nothing is re-sampled.  Starts at st["fed"] —
+        nonzero when a refcount-shared prefix was skipped (paged
+        layout)."""
         st = self.slot_state[s]
-        prompt = np.asarray(req.prompt, np.int32)
-        n, off, reset = len(prompt), st["fed"], True
+        tokens = np.asarray(feed, np.int32)
+        n, off, reset = len(tokens), st["fed"], True
         row = self._sampling_row(s)
         tok = margin = None
         while off < n:
             size = self._chunk_size(off, n - off)
             tok, margin = self.engine.prefill_block(
-                s, prompt[None, off:off + size], off, reset, row)
+                s, tokens[None, off:off + size], off, reset, row)
             reset = False
             off += size
         # a size-S block books S slot-steps of work and S slot-steps of
@@ -570,38 +751,51 @@ class ContinuousBatcher(_BatcherBase):
         self.total_slot_steps += n - st["fed"]
         self.engine.set_pos(s, n)
         st["fed"] = n
-        st["emitted"].append(tok)
-        st["margins"].append(margin)
-        self._finish_if_done(s)
+        if fresh:
+            st["emitted"].append(tok)
+            st["margins"].append(margin)
+            self._finish_if_done(s)
 
     # --------------------------------------------------------------- step
 
     def step(self):
         """One engine tick: a SINGLE fused dispatch advances every active
-        slot by one token (prompt feed in decode prefill mode, or
-        generated — sampled or greedy per the slot's SamplingParams)."""
+        slot by one token (prompt feed in decode prefill mode, replayed
+        tokens on a decode-mode resume, or generated — sampled or greedy
+        per the slot's SamplingParams).  Under lazy allocation the tick
+        first secures each live slot's next page (preempting on
+        exhaustion) — still exactly one device dispatch."""
         self._fill_slots()
+        self._grow_decode_pages()
         active = [s for s in range(self.n_slots)
                   if self.slot_req[s] is not None]
         if not active:
             return False
         toks = np.zeros((self.n_slots, 1), np.int32)
+        emit = np.zeros((self.n_slots,), bool)
         for s in active:
             req, st = self.slot_req[s], self.slot_state[s]
-            if st["fed"] < len(req.prompt):
+            p = len(req.prompt)
+            if st["fed"] < p:
                 toks[s, 0] = req.prompt[st["fed"]]
             else:
-                toks[s, 0] = st["emitted"][-1]
+                toks[s, 0] = st["emitted"][st["fed"] - p]
+            # this feed produces a NEW token only when it is the last
+            # known one; earlier feeds are prompt tokens or a resume
+            # replay, whose outputs are already known and discarded
+            emit[s] = st["fed"] == p + len(st["emitted"]) - 1
         active_mask = np.zeros((self.n_slots,), bool)
         active_mask[active] = True
         nxt, margins = self.engine.decode(toks, active_mask,
                                           self._sampling_batch())
+        self.decode_ticks += 1
+        self.decode_active_slots += len(active)
         self.active_slot_steps += len(active)
         self.total_slot_steps += self.n_slots
         for s in active:
-            req, st = self.slot_req[s], self.slot_state[s]
+            st = self.slot_state[s]
             st["fed"] += 1
-            if st["fed"] >= len(req.prompt):
+            if emit[s]:
                 st["emitted"].append(int(nxt[s]))
                 st["margins"].append(float(margins[s]))
                 self._finish_if_done(s)
@@ -656,6 +850,8 @@ class PerSlotBatcher(_BatcherBase):
                 st["emitted"].append(nxt)
                 st["margins"].append(margin)
                 self._finish_if_done(s)
+            self.decode_active_slots += 1
         if any_active:
             self.total_slot_steps += self.n_slots
+            self.decode_ticks += 1
         return any_active

@@ -1,0 +1,255 @@
+"""Async ServingFrontend: per-token streaming, cancellation at every
+lifecycle stage, bounded-intake backpressure, priority/deadline plumbing
+and error isolation.
+
+The tests are sync functions driving the event loop with ``asyncio.run``
+so they run on any pytest install; ``pytest-asyncio`` is pinned in the
+test extras for native ``async def`` tests."""
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import params as Pm
+from repro.serving.frontend import ServingFrontend
+from repro.serving.scheduler import (ContinuousBatcher, Request,
+                                     completions_equivalent)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("qwen3_0_6b")
+    params, _ = Pm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompts(cfg, n=3, plen=5, seed=5):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size, plen).tolist()
+            for _ in range(n)]
+
+
+def test_streamed_tokens_match_batch_run(setup):
+    """Every handle streams exactly its completion's tokens, and the
+    completions match a plain (frontend-free) batcher run."""
+    cfg, params = setup
+    prompts = _prompts(cfg)
+
+    async def go():
+        eng = ContinuousBatcher(cfg, params, n_slots=2, capacity=64)
+        async with ServingFrontend(eng, max_pending=8) as fe:
+            handles = [await fe.submit(p, 10) for p in prompts]
+
+            async def consume(h):
+                return [tok async for tok in h]
+
+            streams = await asyncio.gather(*(consume(h) for h in handles))
+            comps = await asyncio.gather(*(h.result() for h in handles))
+        return streams, comps, [h.status for h in handles]
+
+    streams, comps, statuses = asyncio.run(go())
+    assert statuses == ["done"] * 3
+    for toks, c in zip(streams, comps):
+        assert toks == c.tokens and len(toks) == 10
+
+    ref = ContinuousBatcher(cfg, params, n_slots=2, capacity=64)
+    ref.submit([Request(rid=i, prompt=list(p), max_new=10)
+                for i, p in enumerate(prompts)])
+    assert completions_equivalent(list(comps), ref.run()[0])
+
+
+def test_cancellation_at_every_stage_reclaims_pages(setup):
+    """Cancel in intake (frontend not yet draining), in the batcher queue,
+    and mid-decode; the paged allocator's free count must round-trip and
+    cancelled handles must terminate their streams and raise from
+    result()."""
+    cfg, params = setup
+    prompts = _prompts(cfg, n=4)
+
+    async def go():
+        eng = ContinuousBatcher(cfg, params, n_slots=1, capacity=64,
+                                cache_layout="paged", allocation="lazy")
+        free0 = eng.allocator.n_free
+        fe = ServingFrontend(eng, max_pending=8)
+        # intake stage: loop not started, nothing drained yet
+        h_intake = await fe.submit(prompts[0], 8)
+        assert h_intake.cancel()
+        assert h_intake.cancel() is False  # already terminal
+        fe.start()
+        # one slot: the first running, the second queued behind it
+        h_run = await fe.submit(prompts[1], 16)
+        h_queue = await fe.submit(prompts[2], 8)
+        got = []
+        async for tok in h_run:
+            got.append(tok)
+            if len(got) == 1:
+                assert h_queue.cancel()   # mid-queue
+            if len(got) == 4:
+                h_run.cancel()            # mid-decode
+        with pytest.raises(asyncio.CancelledError):
+            await h_run.result()
+        # a fresh request still serves normally afterwards
+        h_ok = await fe.submit(prompts[3], 6)
+        comp = await h_ok.result()
+        await fe.stop()
+        return eng, free0, got, comp, (h_intake.status, h_queue.status)
+
+    eng, free0, got, comp, statuses = asyncio.run(go())
+    assert statuses == ("cancelled", "cancelled")
+    assert 4 <= len(got) <= 6  # stream ended promptly after cancel
+    assert len(comp.tokens) == 6
+    assert eng.allocator.n_free == free0 and eng.allocator.in_use == 0
+    # cancelled rids recorded no Completion
+    assert {c.rid for c in eng.done} == {comp.rid}
+
+
+def test_bounded_intake_backpressure(setup):
+    """submit() suspends once max_pending submissions wait in intake, and
+    resumes as the engine drains them."""
+    cfg, params = setup
+    prompts = _prompts(cfg, n=2)
+
+    async def go():
+        eng = ContinuousBatcher(cfg, params, n_slots=1, capacity=64)
+        fe = ServingFrontend(eng, max_pending=1)
+        await fe.submit(prompts[0], 4)          # fills the intake queue
+        with pytest.raises(asyncio.TimeoutError):
+            # nothing drains (loop not started): the second submit blocks
+            await asyncio.wait_for(fe.submit(prompts[1], 4), timeout=0.05)
+        fe.start()
+        h = await fe.submit(prompts[1], 4)      # drains now: goes through
+        comp = await h.result()
+        await fe.stop()
+        return comp
+
+    assert len(asyncio.run(go()).tokens) == 4
+
+
+def test_priority_and_deadline_reach_the_scheduler(setup):
+    """priority= / deadline_ms= land on the scheduler Request (deadline as
+    an absolute loop-clock value) and feed the preemption policy."""
+    cfg, params = setup
+
+    async def go():
+        eng = ContinuousBatcher(cfg, params, n_slots=1, capacity=64)
+        fe = ServingFrontend(eng)
+        t0 = asyncio.get_running_loop().time() * 1e3
+        h = await fe.submit([1, 2, 3], 2, priority=7, deadline_ms=500.0)
+        plain = await fe.submit([1, 2, 3], 2)
+        return h.request, plain.request, t0
+
+    req, plain, t0 = asyncio.run(go())
+    assert req.priority == 7
+    assert plain.priority == 0 and plain.deadline is None
+    assert req.deadline is not None and req.deadline >= t0 + 500.0
+
+
+def test_invalid_request_fails_only_its_own_handle(setup):
+    """A request the scheduler rejects (prompt >= capacity) errors its own
+    handle — result() re-raises — while traffic around it still serves."""
+    cfg, params = setup
+
+    async def go():
+        eng = ContinuousBatcher(cfg, params, n_slots=1, capacity=8)
+        async with ServingFrontend(eng) as fe:
+            bad = await fe.submit(list(range(1, 9)), 4)  # prompt == cap
+            good = await fe.submit([1, 2], 3)
+            with pytest.raises(ValueError, match="capacity"):
+                await bad.result()
+            comp = await good.result()
+        return bad.status, comp
+
+    status, comp = asyncio.run(go())
+    assert status == "error" and len(comp.tokens) == 3
+
+
+def test_engine_error_fails_every_open_handle(setup):
+    """Regression: an exception out of batcher.step() must fail every
+    open handle (streams end, result() re-raises) and surface from
+    stop() — not die silently in the background task while consumers
+    hang forever."""
+    cfg, params = setup
+
+    async def go():
+        eng = ContinuousBatcher(cfg, params, n_slots=1, capacity=64)
+        fe = ServingFrontend(eng)
+        fe.start()
+        h = await fe.submit([1, 2, 3], 8)
+
+        def boom():
+            raise RuntimeError("engine exploded")
+
+        eng.step = boom
+        with pytest.raises(RuntimeError, match="exploded"):
+            await asyncio.wait_for(h.result(), timeout=10)
+        assert [tok async for tok in h] == []  # stream is terminated
+        with pytest.raises(RuntimeError, match="exploded"):
+            await fe.stop()
+        return h.status
+
+    assert asyncio.run(go()) == "error"
+
+
+def test_cancel_with_threaded_ticks_reclaims_pages(setup):
+    """Regression: with tick_in_thread=True a cancel arriving while a
+    tick runs in the worker thread must be deferred to the loop task —
+    never mutating scheduler state mid-dispatch — and still reclaim
+    every page."""
+    cfg, params = setup
+
+    async def go():
+        eng = ContinuousBatcher(cfg, params, n_slots=2, capacity=64,
+                                cache_layout="paged", allocation="lazy")
+        free0 = eng.allocator.n_free
+        async with ServingFrontend(eng, tick_in_thread=True) as fe:
+            a = await fe.submit([1, 2, 3, 4], 10)
+            b = await fe.submit([5, 6, 7, 8], 10)
+            got = []
+            async for tok in a:
+                got.append(tok)
+                if len(got) == 3:
+                    b.cancel()
+            comp = await a.result()
+        return eng, free0, comp, b.status
+
+    eng, free0, comp, status = asyncio.run(go())
+    assert status == "cancelled" and len(comp.tokens) == 10
+    assert eng.allocator.n_free == free0
+
+
+def test_preempted_request_restreams_nothing(setup):
+    """Force preemption under a starved lazy pool while streaming: each
+    rid's streamed tokens must equal its completion exactly (no replayed
+    duplicates), and the handle dips back to "queued" while preempted."""
+    cfg, params = setup
+    prompts = _prompts(cfg, n=3, plen=4, seed=11)
+
+    async def go():
+        eng = ContinuousBatcher(cfg, params, n_slots=2, capacity=64,
+                                cache_layout="paged", n_pages=4,
+                                allocation="lazy")
+        async with ServingFrontend(eng, max_pending=8) as fe:
+            handles = [await fe.submit(p, 20) for p in prompts]
+            seen_queued_again = set()
+
+            async def consume(h):
+                toks = []
+                async for tok in h:
+                    toks.append(tok)
+                    for other in handles:
+                        if other.status == "queued" and other._sent:
+                            seen_queued_again.add(other.rid)
+                return toks
+
+            streams = await asyncio.gather(*(consume(h) for h in handles))
+            comps = await asyncio.gather(*(h.result() for h in handles))
+        return eng, streams, comps, seen_queued_again
+
+    eng, streams, comps, requeued = asyncio.run(go())
+    assert eng.preemptions > 0
+    assert requeued  # at least one preempted request was seen mid-queue
+    for toks, c in zip(streams, comps):
+        assert toks == c.tokens and len(toks) == 20
+    assert eng.allocator.in_use == 0

@@ -97,10 +97,10 @@ def test_utilization_reported(setup):
     done, steps = eng.run()
     u = eng.utilization()
     assert 0.1 < u <= 1.0
-    # the legacy `steps` argument is ignored and now warns
-    with pytest.warns(DeprecationWarning, match="utilization"):
-        legacy = eng.utilization(steps)
-    assert legacy == u
+    # the legacy `steps` argument (ignored since PR 2, deprecated with a
+    # warning in PR 3) is gone outright: passing it is a TypeError
+    with pytest.raises(TypeError):
+        eng.utilization(steps)
 
 
 def test_empty_prompt_rejected_or_bos_handled(setup):

@@ -21,6 +21,11 @@ exceeding worst-case occupancy (benchmarks/check_serving.py).
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
+import textwrap
 import time
 
 import jax
@@ -266,7 +271,118 @@ def run(quick: bool = False):
         f";lazy_disp_per_tick={l_disp / max(1, l_ticks):.4f}"
         f";worstcase_disp_per_tick={w_disp / max(1, w_ticks):.4f}"
         f";pages={n_pages};lazy_ticks={l_ticks};worstcase_ticks={w_ticks}"))
+
+    rows.append(_sharded_row(quick))
     return rows
+
+
+# ---- mesh-sharded serving vs the single-device engine on the (2, 2)
+# debug mesh.  Runs in a SUBPROCESS with 8 forced host devices (the main
+# bench process must keep the real device world); on CPU the placeholder
+# devices time-share one core, so sharded tok/s is a correctness /
+# dispatch-contract trace, not a speed claim — the gated fields are the
+# equivalence flags and the per-mesh-tick dispatch count.
+
+_SHARDED_SCRIPT = textwrap.dedent("""
+    import json
+    import os
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.models import params as Pm
+    from repro.serving.sampling import SamplingParams
+    from repro.serving.scheduler import (ContinuousBatcher, Request,
+                                         completions_equivalent)
+
+    assert len(jax.devices()) == 8
+    quick = os.environ.get("SHARDED_QUICK") == "1"
+    cfg = get_smoke_config("qwen3_0_6b")
+    params, _ = Pm.init_params(jax.random.PRNGKey(0), cfg)
+    n_slots = 4 if quick else 8
+    n_requests = 8 if quick else 16
+
+    def workload(seed=0):
+        rng = np.random.default_rng(seed)
+        reqs = []
+        for i in range(n_requests):
+            sp = (SamplingParams(temperature=0.8, top_k=40, seed=1000 + i)
+                  if i % 2 else None)
+            reqs.append(Request(
+                rid=i, prompt=rng.integers(1, cfg.vocab_size,
+                                           rng.integers(2, 12)).tolist(),
+                max_new=int(rng.integers(8, 16)), sampling=sp))
+        return reqs
+
+    def drive(b, seed=0):
+        d0 = b.decode_dispatches
+        b.submit(workload(seed))
+        start = time.time()
+        done, ticks = b.run()
+        wall = time.time() - start
+        toks = sum(len(c.tokens) for c in done)
+        return done, toks / wall, b.decode_dispatches - d0, ticks
+
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    out = {"slots": n_slots, "mesh": "2x2"}
+    res = {}
+    for name, layout, m in (("single", "dense", None),
+                            ("sharded", "dense", mesh),
+                            ("paged_single", "paged", None),
+                            ("paged_sharded", "paged", mesh)):
+        b = ContinuousBatcher(cfg, params, n_slots=n_slots, capacity=64,
+                              cache_layout=layout, mesh=m)
+        drive(b, seed=99)  # warm: compile every dispatch shape
+        done, tps, disp, ticks = drive(b)
+        res[name] = done
+        out[f"{name}_tok_s"] = round(tps, 1)
+        out[f"{name}_disp_per_tick"] = round(disp / max(1, ticks), 4)
+        if m is not None:
+            out[f"{name}_groups"] = b.n_slot_groups
+            out[f"{name}_bytes_global"] = b.cache_nbytes()
+            out[f"{name}_bytes_dev"] = b.cache_nbytes_per_device()
+    out["sharded_equiv"] = completions_equivalent(res["single"],
+                                                  res["sharded"])
+    out["paged_sharded_equiv"] = completions_equivalent(
+        res["paged_single"], res["paged_sharded"])
+    print("JSON::" + json.dumps(out))
+""")
+
+
+def _sharded_row(quick: bool):
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    env["SHARDED_QUICK"] = "1" if quick else "0"
+    proc = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=1800)
+    if proc.returncode != 0:
+        raise RuntimeError("sharded serving bench subprocess failed:\n"
+                           + proc.stderr[-3000:])
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("JSON::")][-1]
+    o = json.loads(line[len("JSON::"):])
+    s_tps = o["sharded_tok_s"]
+    return (
+        "serving_sharded_vs_single",
+        1e6 / max(1e-9, s_tps),
+        f"mesh={o['mesh']};slots={o['slots']}"
+        f";sharded_equiv={o['sharded_equiv']}"
+        f";paged_sharded_equiv={o['paged_sharded_equiv']}"
+        f";single_tok_s={o['single_tok_s']:.1f}"
+        f";sharded_tok_s={s_tps:.1f}"
+        f";paged_sharded_tok_s={o['paged_sharded_tok_s']:.1f}"
+        f";sharded_disp_per_tick={o['sharded_disp_per_tick']:.4f}"
+        f";paged_sharded_disp_per_tick="
+        f"{o['paged_sharded_disp_per_tick']:.4f}"
+        f";slot_groups={o['sharded_groups']}"
+        f";sharded_cache_bytes_global={o['sharded_bytes_global']}"
+        f";sharded_cache_bytes_per_device={o['sharded_bytes_dev']}"
+        f";backend={jax.default_backend()}")
 
 
 if __name__ == "__main__":

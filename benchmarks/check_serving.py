@@ -13,6 +13,11 @@ fails on any of:
   buying concurrency over worst-case reservation on the overload mix
   (an artifact with NO overload occupancy row fails too: a renamed or
   dropped row must not silently disarm the gate);
+- any `*sharded_equiv` field not True — the mesh-sharded engines
+  diverging from the single-device trajectory beyond argmax-tie
+  tolerance on the (2, 2) debug mesh (an artifact with NO
+  serving_sharded_vs_single row fails too; its `*disp_per_tick` fields
+  are gated by the fused-dispatch check like every other row);
 - any row's fused/paged `*tok_s` throughput dropping more than 20% below
   the committed baseline (benchmarks/baseline_serving.json, refreshed
   whenever a PR legitimately moves the numbers).  Only same-mode
@@ -107,6 +112,22 @@ def _check_overload(rows: dict, bad: list) -> int:
     return seen
 
 
+def _check_sharded(rows: dict, bad: list) -> int:
+    """Every sharded-equivalence flag must read True (the bench emits the
+    bool as the literal string "True"/"False")."""
+    seen = 0
+    for name, fields in rows.items():
+        for key, val in fields.items():
+            if not key.endswith("sharded_equiv"):
+                continue
+            seen += 1
+            if str(val) != "True":
+                bad.append((name, key,
+                            f"{val!r} — the mesh-sharded engine diverged "
+                            f"from the single-device trajectory"))
+    return seen
+
+
 def _check_baseline(quick, rows: dict, baseline_path: str, bad: list) -> int:
     """Compare every engine-throughput field (``*tok_s``, perslot baseline
     exempt) against the committed baseline; tolerate MAX_TOKS_DROP.
@@ -164,6 +185,7 @@ def check(path: str, baseline_path: str = BASELINE) -> int:
     n_disp = _check_fused_dispatch(rows, bad)
     n_ratio = _check_bytes_ratio(rows, bad)
     n_over = _check_overload(rows, bad)
+    n_shard = _check_sharded(rows, bad)
     n_base = _check_baseline(quick, rows, baseline_path, bad)
     if not n_disp:
         print(f"check_serving: no fused disp_per_tick fields in {path} — "
@@ -172,6 +194,11 @@ def check(path: str, baseline_path: str = BASELINE) -> int:
     if not n_over:
         print(f"check_serving: no lazy/worstcase occupancy row in {path} "
               "— the overload bench row was renamed or dropped",
+              file=sys.stderr)
+        return 1
+    if not n_shard or "serving_sharded_vs_single" not in rows:
+        print(f"check_serving: no sharded equivalence fields in {path} — "
+              "the serving_sharded_vs_single row was renamed or dropped",
               file=sys.stderr)
         return 1
     if n_base == 0 and os.path.exists(baseline_path):
@@ -192,7 +219,8 @@ def check(path: str, baseline_path: str = BASELINE) -> int:
     print(f"check_serving: {n_disp} fused disp_per_tick fields all "
           f"<= {MAX_DISP_PER_TICK}; {n_ratio} bytes_ratio fields all "
           f"<= {MAX_BYTES_RATIO}; {n_over} overload rows with "
-          f"lazy_occupancy > worstcase_occupancy; {base_msg}")
+          f"lazy_occupancy > worstcase_occupancy; {n_shard} sharded "
+          f"equivalence fields all True; {base_msg}")
     return 0
 
 

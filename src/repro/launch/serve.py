@@ -6,6 +6,13 @@ sampling (temperature / top-k / top-p, seeded).
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_0_6b --smoke \
       --requests 6 --slots 4 --gen 24 --layout paged --allocation lazy \
       --pages 9 --temperature 0.8 --top-k 40 --stream
+
+Mesh-sharded serving: ``--mesh DxM`` runs the engine on a
+(data=D, model=M) jax.sharding.Mesh — slots shard over "data", heads
+over "model" (requires D*M visible devices; set
+XLA_FLAGS=--xla_force_host_platform_device_count=N to debug on CPU).
+``--kernel pallas`` selects the paged-attention decode kernel (single
+device only; needs --layout paged).
 """
 from __future__ import annotations
 
@@ -17,6 +24,21 @@ import jax
 import numpy as np
 
 
+def _parse_mesh(spec: str):
+    """"DxM" -> a (data=D, model=M) mesh over the first D*M devices."""
+    try:
+        d, m = (int(x) for x in spec.lower().split("x"))
+    except ValueError:
+        raise SystemExit(f"--mesh {spec!r}: expected DxM, e.g. 2x2")
+    need, have = d * m, len(jax.devices())
+    if need > have:
+        raise SystemExit(
+            f"--mesh {spec} needs {need} devices but only {have} are "
+            f"visible (set XLA_FLAGS=--xla_force_host_platform_device_"
+            f"count={need} to debug on CPU)")
+    return jax.make_mesh((d, m), ("data", "model"))
+
+
 async def _serve(args, cfg, params):
     from repro.serving import ContinuousBatcher, SamplingParams, ServingFrontend
 
@@ -25,12 +47,20 @@ async def _serve(args, cfg, params):
         print("--allocation lazy needs the paged pool: switching "
               "--layout paged")
         layout = "paged"
+    if args.kernel == "pallas" and layout != "paged":
+        raise SystemExit("--kernel pallas selects the paged-attention "
+                         "decode kernel — pass --layout paged as well")
+    mesh = _parse_mesh(args.mesh) if args.mesh else None
+    if mesh is not None and args.kernel == "pallas":
+        raise SystemExit("--kernel pallas is single-device — drop --mesh "
+                         "or use the default --kernel xla")
     kw = {}
     if layout == "paged" and args.pages:
         kw["n_pages"] = args.pages
     batcher = ContinuousBatcher(
         cfg, params, n_slots=args.slots, capacity=args.capacity,
-        cache_layout=layout, allocation=args.allocation, **kw)
+        cache_layout=layout, allocation=args.allocation,
+        kernel=args.kernel, mesh=mesh, **kw)
 
     rng = np.random.default_rng(args.seed)
     sampled = args.temperature > 0
@@ -60,6 +90,7 @@ async def _serve(args, cfg, params):
         streams = await asyncio.gather(*(consume(h) for h in handles))
         completions = await asyncio.gather(*(h.result() for h in handles))
         wall = time.time() - t0
+        stats = frontend.stats()
 
     toks = sum(len(c.tokens) for c in completions)
     mode = (f"sampled(T={args.temperature}, top_k={args.top_k}, "
@@ -67,7 +98,11 @@ async def _serve(args, cfg, params):
             if sampled else "greedy")
     print(f"arch={cfg.name} layout={layout} allocation={args.allocation} "
           f"slots={args.slots} requests={args.requests} "
-          f"prompt={args.prompt_len} gen={args.gen} decode={mode}")
+          f"prompt={args.prompt_len} gen={args.gen} decode={mode} "
+          f"kernel={args.kernel} mesh={stats['mesh']}")
+    print(f"cache {stats['cache_bytes_global'] / 1e6:.2f} MB global, "
+          f"{stats['cache_bytes_per_device'] / 1e6:.2f} MB/device over "
+          f"{stats['slot_groups']} slot group(s)")
     print(f"{toks} tokens in {wall:.2f}s ({toks / wall:.1f} tok/s, "
           f"{batcher.decode_dispatches / max(1, batcher.decode_ticks):.2f} "
           f"dispatch/tick, occupancy "
@@ -90,6 +125,14 @@ def main():
     ap.add_argument("--capacity", type=int, default=256)
     ap.add_argument("--layout", choices=("dense", "paged"), default="dense",
                     help="decode-state layout (recurrent archs stay dense)")
+    ap.add_argument("--kernel", choices=("xla", "pallas"), default="xla",
+                    help="paged decode-attention implementation: XLA ring "
+                         "gather (default, the equivalence oracle) or the "
+                         "Pallas paged-attention kernel (--layout paged)")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="run the engine on a (data=D, model=M) mesh: "
+                         "slots shard over the data axis, attention heads "
+                         "over the model axis (needs D*M devices)")
     ap.add_argument("--allocation", choices=("worst_case", "lazy"),
                     default="worst_case",
                     help="paged admission: reserve the worst case up "

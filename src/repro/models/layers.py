@@ -160,7 +160,7 @@ def chunked_attention(q, k, v, q_pos, k_pos, cfg: ModelConfig,
 
 def attention_block(p, x, cfg: ModelConfig, *, positions=None, cache=None,
                     layer_chunked: bool = False, use_pallas: bool = False,
-                    paged_kernel: str = "xla"):
+                    paged_kernel: str = "xla", shard=None):
     """GQA attention with RoPE/M-RoPE, qk-norm, bias, window/chunk masking.
 
     cache: None for training (full self-attention over x), else a decode
@@ -182,6 +182,11 @@ def attention_block(p, x, cfg: ModelConfig, *, positions=None, cache=None,
     masking — streaming page tiles through the block table instead.
     Ineligible shapes (multi-token prefill blocks) fall back to "xla", so
     both settings are token-equivalent end to end.
+
+    shard: optional serving.sharding.ShardingPlan — pins q/k/v, the cache
+    writes, and the attention output with with_sharding_constraint (batch
+    on the data axes, heads on the model axis; GQA KV heads replicate when
+    n_kv does not divide the model axis).  No-op on 1-device meshes.
     """
     B, S, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -196,6 +201,10 @@ def attention_block(p, x, cfg: ModelConfig, *, positions=None, cache=None,
     q = q.reshape(B, S, H, hd)
     k = k.reshape(B, S, KV, hd)
     v = v.reshape(B, S, KV, hd)
+    if shard is not None:
+        q = shard.act(q, batch=0, heads=2)
+        k = shard.act(k, batch=0, heads=2)
+        v = shard.act(v, batch=0, heads=2)
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"], cfg.norm_eps)
         k = rms_norm(k, p["k_norm"], cfg.norm_eps)
@@ -275,6 +284,9 @@ def attention_block(p, x, cfg: ModelConfig, *, positions=None, cache=None,
                 v.astype(kv_dtype))
             pool_k = store_k.reshape(cache["k"].shape)
             pool_v = store_v.reshape(cache["v"].shape)
+            if shard is not None:  # pool: (n_pages, psz, KV, hd)
+                pool_k = shard.act(pool_k, heads=2)
+                pool_v = shard.act(pool_v, heads=2)
             if (paged_kernel == "pallas" and S == 1 and default_pos
                     and not cfg.mrope and not cfg.chunked_attention):
                 from repro.kernels.paged_attention import ops as pa_ops
@@ -286,12 +298,18 @@ def attention_block(p, x, cfg: ModelConfig, *, positions=None, cache=None,
                 ring = jnp.arange(T)
                 g_idx = bt[:, ring // psz] * psz + ring % psz  # (B, T)
                 ck, cv = store_k[g_idx], store_v[g_idx]  # (B, T, KV, hd)
+                if shard is not None:
+                    ck = shard.act(ck, batch=0, heads=2)
+                    cv = shard.act(cv, batch=0, heads=2)
             store_k, store_v = pool_k, pool_v
         else:
             T = cache["k"].shape[1]
             slots = abs_pos % T  # ring writes; capacity == window when windowed
             ck = cache["k"].at[b_idx, slots].set(k.astype(kv_dtype))
             cv = cache["v"].at[b_idx, slots].set(v.astype(kv_dtype))
+            if shard is not None:  # ring: (B, T, KV, hd)
+                ck = shard.act(ck, batch=0, heads=2)
+                cv = shard.act(cv, batch=0, heads=2)
             store_k, store_v = ck, cv
         if out is None:
             # absolute position held by ring slot i after the writes: the
@@ -311,6 +329,8 @@ def attention_block(p, x, cfg: ModelConfig, *, positions=None, cache=None,
                                        dtype=q.dtype)
         new_cache = {"k": store_k, "v": store_v, "pos": pos + S}
 
+    if shard is not None:
+        out = shard.act(out, batch=0, heads=2)
     out = out.reshape(B, S, H * hd) @ p["wo"]
     return out, new_cache
 

@@ -36,11 +36,12 @@ class ForwardOut(NamedTuple):
 
 
 def _attn_mlp_block(p, h, cfg: ModelConfig, *, positions, cache,
-                    layer_chunked, use_pallas, paged_kernel="xla"):
+                    layer_chunked, use_pallas, paged_kernel="xla",
+                    shard=None):
     a, new_cache = Lyr.attention_block(
         p["attn"], Lyr.rms_norm(h, p["ln1"], cfg.norm_eps), cfg,
         positions=positions, cache=cache, layer_chunked=layer_chunked,
-        use_pallas=use_pallas, paged_kernel=paged_kernel)
+        use_pallas=use_pallas, paged_kernel=paged_kernel, shard=shard)
     h = h + a
     x2 = Lyr.rms_norm(h, p["ln2"], cfg.norm_eps)
     if cfg.is_moe:
@@ -72,12 +73,12 @@ def _mamba_block(p, h, cfg: ModelConfig, *, cache, use_pallas):
 
 
 def _block(p, h, cfg, *, positions, cache, layer_chunked, use_pallas,
-           paged_kernel="xla"):
+           paged_kernel="xla", shard=None):
     if cfg.block_kind == "attention":
         return _attn_mlp_block(p, h, cfg, positions=positions, cache=cache,
                                layer_chunked=layer_chunked,
                                use_pallas=use_pallas,
-                               paged_kernel=paged_kernel)
+                               paged_kernel=paged_kernel, shard=shard)
     if cfg.block_kind == "rwkv6":
         return _rwkv_block(p, h, cfg, cache=cache, use_pallas=use_pallas)
     if cfg.block_kind in ("mamba2", "hybrid"):
@@ -159,13 +160,20 @@ def _scan_or_loop(body, carry, xs, use_scan: bool):
 
 def forward(params, cfg: ModelConfig, tokens, *, patch_embeds=None,
             positions=None, cache=None, use_pallas: bool = False,
-            paged_kernel: str = "xla") -> ForwardOut:
+            paged_kernel: str = "xla", shard=None) -> ForwardOut:
     """Training (cache=None, full sequence) or decode (cache set, S>=1).
 
     paged_kernel: paged-pool decode attention implementation — "xla"
     (ring gather) or "pallas" (kernels/paged_attention); only consulted
-    when the cache carries a block table (see layers.attention_block)."""
+    when the cache carries a block table (see layers.attention_block).
+
+    shard: optional serving.sharding.ShardingPlan — constrains the
+    residual stream's batch dim to the data axes and the attention head
+    dims to the model axis (with_sharding_constraint; a strict no-op on
+    1-device meshes so the traced program matches shard=None)."""
     h = embed_inputs(params, cfg, tokens, patch_embeds)
+    if shard is not None:
+        h = shard.act(h, batch=0)
     B, S = h.shape[:2]
     if cfg.mrope and positions is None and cache is None:
         positions = mrope_positions(cfg, B, S)
@@ -198,7 +206,7 @@ def forward(params, cfg: ModelConfig, tokens, *, patch_embeds=None,
         h, new_cache_l, aux_l = _block(
             p, h, cfg, positions=pos_l, cache=cache_l,
             layer_chunked=flag, use_pallas=use_pallas,
-            paged_kernel=paged_kernel)
+            paged_kernel=paged_kernel, shard=shard)
         if decode and cfg.block_kind == "attention":
             new_cache_l = {k: v for k, v in new_cache_l.items()
                            if k not in ("pos", "block_table")}
@@ -236,7 +244,7 @@ def forward(params, cfg: ModelConfig, tokens, *, patch_embeds=None,
             h, new_sc, aux_s = _attn_mlp_block(
                 shared, h, cfg, positions=positions, cache=sc,
                 layer_chunked=False, use_pallas=use_pallas,
-                paged_kernel=paged_kernel)
+                paged_kernel=paged_kernel, shard=shard)
             if decode:
                 new_sc = {k: v for k, v in new_sc.items()
                           if k not in ("pos", "block_table")}

@@ -57,6 +57,27 @@ Layer split (who may run vs who runs vs how it runs):
 - ``kvcache`` / ``serve_step`` — decode-state construction (dense +
   paged layouts, slot ops) and the jitted step functions both engine
   kinds compile.
+- ``sharding`` — mesh placement.  Dense and Paged engines (and
+  `ContinuousBatcher`) take ``mesh=``: a jax.sharding.Mesh (axes from
+  ``("pod", "data", "model")``, as launch/mesh.py builds) or a prebuilt
+  `ShardingPlan`.  Placement contract: params are tensor-parallel over
+  ``"model"`` via the training logical-axis rules (GQA-aware — KV heads
+  replicate when n_kv does not divide the model axis); slot/batch dims —
+  dense rings, paged block tables, per-dispatch token/mask/sampling rows
+  — shard over the data axes, so each data shard owns a contiguous SLOT
+  GROUP; the paged pool shards its KV-head axis on ``"model"`` and
+  replicates pages over data.  Params and caches are `jax.device_put` at
+  engine construction and the jitted steps pin ``in_shardings`` /
+  ``out_shardings`` (cache donated shard-for-shard), so the whole pool
+  still advances in ONE fused dispatch — the dispatch/tick contract
+  reads 1.00 per MESH tick, not per device.  Guarantees: ``mesh=None``
+  is today's single-device path bit-for-bit; a ``(1, 1)`` mesh traces
+  the identical program (constraints no-op on one device) and is
+  token-identical; the Pallas kernels are single-device and rejected
+  with a mesh.  Host-side layers (scheduler/frontend) stay device-free
+  but mesh-aware: per-slot-group occupancy accounting and
+  ``cache_nbytes_per_device()`` (max addressable bytes on any one
+  device) next to the global ``cache_nbytes()``.
 
 Sampling contract: a request's decode policy is `Request.sampling`
 (falling back to the batcher's `default_sampling`, greedy).  The chosen
@@ -70,11 +91,18 @@ from repro.serving.kvcache import (  # noqa: F401
     init_cache,
     init_paged_cache,
     cache_bytes,
+    constrain_cache,
+    dense_cache_shardings,
     paged_attn_layout,
     paged_cache_bytes,
+    paged_cache_shardings,
     reset_slots,
     slot_slice,
     slot_update,
+)
+from repro.serving.sharding import (  # noqa: F401
+    ShardingPlan,
+    tree_device_nbytes,
 )
 from repro.serving.sampling import (  # noqa: F401
     GREEDY,

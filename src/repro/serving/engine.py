@@ -27,6 +27,13 @@ Per-slot sampling state (serving/sampling.SlotSampling) rides through
 every decode and prefill dispatch as batched arrays: greedy and sampled
 slots share one compiled program, so turning sampling on never un-fuses
 the dispatch.
+
+Dense and Paged engines take ``mesh=`` (a jax.sharding.Mesh or a prebuilt
+serving.sharding.ShardingPlan): params and caches are placed with
+jax.device_put at construction and the jitted steps pin in/out shardings,
+so one fused dispatch still advances the whole pool — 1.00 dispatch per
+MESH tick, with slots sharded over the data axes and heads over "model".
+``mesh=None`` keeps today's single-device path bit-for-bit.
 """
 from __future__ import annotations
 
@@ -45,6 +52,25 @@ from repro.serving.serve_step import (make_engine_step,
                                       make_paged_engine_step,
                                       make_paged_prefill_step,
                                       make_slot_prefill_step)
+from repro.serving.sharding import as_plan, tree_device_nbytes
+
+
+def _check_mesh_kernel(plan, use_pallas: bool, kernel: str = "xla"):
+    """The Pallas kernels are single-device programs (opaque custom calls
+    GSPMD cannot partition) — reject the combination loudly instead of
+    letting XLA fail mid-compile."""
+    if plan is not None and (use_pallas or kernel == "pallas"):
+        raise ValueError(
+            "mesh sharding and the Pallas kernels are mutually exclusive "
+            "for now — the kernels are single-device programs; use the "
+            "XLA path (use_pallas=False, kernel='xla') on a mesh")
+
+
+def _check_slot_groups(plan, n_slots: int):
+    if plan is not None and n_slots % plan.data_size:
+        raise ValueError(
+            f"n_slots={n_slots} must divide into {plan.data_size} data "
+            f"shards — each data shard owns a contiguous slot group")
 
 
 class DenseEngine:
@@ -52,8 +78,13 @@ class DenseEngine:
 
     layout = "dense"
 
-    def __init__(self, cfg: ModelConfig, params, n_slots: int,
-                 capacity: int, use_pallas: bool = False):
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int,
+                 capacity: int, use_pallas: bool = False, mesh=None):
+        self.plan = as_plan(mesh, cfg)
+        self.mesh = None if self.plan is None else self.plan.mesh
+        _check_mesh_kernel(self.plan, use_pallas)
+        _check_slot_groups(self.plan, n_slots)
+        self.n_slot_groups = 1 if self.plan is None else self.plan.data_size
         self.cfg, self.params = cfg, params
         self.n_slots, self.capacity = n_slots, capacity
         # ring size of the attention cache (multi-token prefill blocks must
@@ -67,10 +98,34 @@ class DenseEngine:
         self.cache = init_cache(cfg, n_slots, capacity,
                                 pos=np.zeros((n_slots,), np.int32),
                                 dtype=jnp.float32)
-        self._decode = jax.jit(make_engine_step(cfg, use_pallas),
-                               donate_argnums=1)
-        self._prefill = jax.jit(make_slot_prefill_step(cfg, use_pallas),
-                                donate_argnums=1)
+        if self.plan is None:
+            self._decode = jax.jit(make_engine_step(cfg, use_pallas),
+                                   donate_argnums=1)
+            self._prefill = jax.jit(make_slot_prefill_step(cfg, use_pallas),
+                                    donate_argnums=1)
+        else:
+            plan = self.plan
+            psh = plan.param_shardings(params)
+            csh = plan.dense_cache_shardings(self.cache)
+            row, rep = plan.rows(), plan.replicated()
+            # placement happens once at construction; the jits then PIN the
+            # layout (in_shardings) so GSPMD never silently re-lays-out the
+            # pool, and out cache shardings == in cache shardings so the
+            # donated buffers alias shard-for-shard
+            self.params = jax.device_put(params, psh)
+            self.cache = jax.device_put(self.cache, csh)
+            # sampling state rides in REPLICATED (its leaves are tiny and
+            # the Gumbel-max region must stay unsharded — ShardingPlan.rep)
+            self._decode = jax.jit(
+                make_engine_step(cfg, use_pallas, plan=plan),
+                donate_argnums=1,
+                in_shardings=(psh, csh, row, row, row, rep),
+                out_shardings=(rep, rep, csh))
+            self._prefill = jax.jit(
+                make_slot_prefill_step(cfg, use_pallas, plan=plan),
+                donate_argnums=1,
+                in_shardings=(psh, csh, rep, rep, rep, rep),
+                out_shardings=(rep, rep, csh))
         self._reset_mask = np.zeros((n_slots,), bool)
         self.decode_dispatches = 0
         self.prefill_dispatches = 0
@@ -112,8 +167,13 @@ class DenseEngine:
         return np.asarray(nxt), np.asarray(margins)
 
     def cache_nbytes(self) -> int:
-        """Live device bytes of this engine's decode state."""
+        """GLOBAL decode-state bytes, summed across every device."""
         return sum(l.nbytes for l in jax.tree.leaves(self.cache))
+
+    def cache_nbytes_per_device(self) -> int:
+        """Max addressable decode-state bytes on any one device (== global
+        when unsharded; the HBM number a capacity planner cares about)."""
+        return tree_device_nbytes(self.cache)
 
 
 class PagedEngine:
@@ -131,11 +191,16 @@ class PagedEngine:
 
     layout = "paged"
 
-    def __init__(self, cfg: ModelConfig, params, n_slots: int,
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int,
                  capacity: int, page_size: int = DEFAULT_PAGE_SIZE,
                  n_pages: int | None = None, use_pallas: bool = False,
-                 kernel: str = "xla"):
+                 kernel: str = "xla", mesh=None):
         assert kernel in ("xla", "pallas"), kernel
+        self.plan = as_plan(mesh, cfg)
+        self.mesh = None if self.plan is None else self.plan.mesh
+        _check_mesh_kernel(self.plan, use_pallas, kernel)
+        _check_slot_groups(self.plan, n_slots)
+        self.n_slot_groups = 1 if self.plan is None else self.plan.data_size
         self.cfg, self.params = cfg, params
         self.n_slots, self.capacity = n_slots, capacity
         self.page_size = page_size
@@ -150,12 +215,30 @@ class PagedEngine:
         self.slot_pos = np.zeros((n_slots,), np.int32)
         self.cache = init_paged_cache(cfg, n_slots, capacity, n_pages,
                                       page_size, dtype=jnp.float32)
-        self._decode = jax.jit(
-            make_paged_engine_step(cfg, use_pallas, kernel),
-            donate_argnums=1)
-        self._prefill = jax.jit(
-            make_paged_prefill_step(cfg, use_pallas, kernel),
-            donate_argnums=1)
+        if self.plan is None:
+            self._decode = jax.jit(
+                make_paged_engine_step(cfg, use_pallas, kernel),
+                donate_argnums=1)
+            self._prefill = jax.jit(
+                make_paged_prefill_step(cfg, use_pallas, kernel),
+                donate_argnums=1)
+        else:
+            plan = self.plan
+            psh = plan.param_shardings(params)
+            csh = plan.paged_cache_shardings(self.cache)
+            row, rep = plan.rows(), plan.replicated()
+            self.params = jax.device_put(params, psh)
+            self.cache = jax.device_put(self.cache, csh)
+            self._decode = jax.jit(
+                make_paged_engine_step(cfg, use_pallas, kernel, plan=plan),
+                donate_argnums=1,
+                in_shardings=(psh, csh, row, row, row, row, rep),
+                out_shardings=(rep, rep, csh))
+            self._prefill = jax.jit(
+                make_paged_prefill_step(cfg, use_pallas, kernel, plan=plan),
+                donate_argnums=1,
+                in_shardings=(psh, csh, rep, rep, rep, rep, rep, rep),
+                out_shardings=(rep, rep, csh))
         self._reset_mask = np.zeros((n_slots,), bool)
         self.decode_dispatches = 0
         self.prefill_dispatches = 0
@@ -211,9 +294,16 @@ class PagedEngine:
         return np.asarray(nxt), np.asarray(margins)
 
     def cache_nbytes(self) -> int:
-        """Live device bytes, host block table + pos vector included."""
+        """GLOBAL decode-state bytes (every device summed), host block
+        table + pos vector included."""
         n = sum(l.nbytes for l in jax.tree.leaves(self.cache))
         return n + self.block_table.nbytes + self.slot_pos.nbytes
+
+    def cache_nbytes_per_device(self) -> int:
+        """Max addressable decode-state bytes on any one device; the host
+        block table + pos vector ride along with every device's program."""
+        return (tree_device_nbytes(self.cache) + self.block_table.nbytes
+                + self.slot_pos.nbytes)
 
 
 class PerSlotEngine:
@@ -225,10 +315,11 @@ class PerSlotEngine:
 
     layout = "per_slot"
 
-    def __init__(self, cfg: ModelConfig, params, n_slots: int,
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int,
                  capacity: int, use_pallas: bool = False):
         self.cfg, self.params = cfg, params
         self.n_slots, self.capacity = n_slots, capacity
+        self.plan, self.mesh, self.n_slot_groups = None, None, 1
         # one single-sequence cache per slot => independent positions
         self.caches = [init_cache(cfg, 1, capacity, pos=0,
                                   dtype=jnp.float32)
@@ -262,3 +353,7 @@ class PerSlotEngine:
         """Live device bytes of this engine's decode state."""
         return sum(l.nbytes for c in self.caches
                    for l in jax.tree.leaves(c))
+
+    def cache_nbytes_per_device(self) -> int:
+        """Single-device engine: per-device == global."""
+        return self.cache_nbytes()

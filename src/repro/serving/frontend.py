@@ -249,6 +249,29 @@ class ServingFrontend:
             n += self._admit(handle)
         return n
 
+    # ------------------------------------------------------------- status
+
+    def stats(self) -> dict:
+        """Operational snapshot of the batcher under this frontend —
+        mesh-aware: cache bytes are reported globally AND per device, and
+        occupancy per slot group (one group per data shard), so an
+        operator sees both total state and the per-chip HBM/skew picture."""
+        b = self.batcher
+        mesh = getattr(b, "mesh", None)
+        return {
+            "n_slots": b.n_slots,
+            "mesh": (None if mesh is None
+                     else dict(zip(mesh.axis_names, mesh.devices.shape))),
+            "slot_groups": getattr(b, "n_slot_groups", 1),
+            "group_occupancy": [float(x) for x in b.group_occupancy()],
+            "cache_bytes_global": b.cache_nbytes(),
+            "cache_bytes_per_device": b.cache_nbytes_per_device(),
+            "decode_ticks": b.decode_ticks,
+            "decode_dispatches": b.decode_dispatches,
+            "preemptions": b.preemptions,
+            "pending": len(b.queue),
+        }
+
     # -------------------------------------------------------------- loop
 
     def _busy(self) -> bool:

@@ -19,8 +19,11 @@ Two attention-cache layouts:
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig
 
@@ -292,3 +295,74 @@ def reset_paged_sub(cfg: ModelConfig, sub, reset):
         lambda ax, a: a if ax < 0 else
         jnp.where(reset, jnp.zeros((), a.dtype), a),
         paged_cache_axes(cfg), sub)
+
+
+# --------------------------------------------------------- mesh shardings
+#
+# NamedSharding trees for both cache layouts on a serving mesh (axis names
+# from ("pod", "data", "model"); see serving/sharding.ShardingPlan, which
+# wraps these with the engine-facing API).  Contract:
+#
+# - dense pool: the slot/batch axis of every leaf (and the (n_slots,) pos
+#   vector) shards over the data axes; attention K/V leaves additionally
+#   shard their KV-head axis over "model";
+# - paged pool: per-slot (hybrid recurrent) leaves shard their slot axis
+#   over data; the shared (n_pages, page_size, KV, hd) pools shard the
+#   KV-head axis over "model" and REPLICATE over data — any slot's block
+#   table may point at any page, so the page axis cannot follow the slots;
+# - divisibility fallback everywhere: a dim shards only when the mesh axis
+#   divides it evenly (GQA KV heads replicate when n_kv < model axis).
+
+
+def _mesh_sizes(mesh, data_axes, model_axis):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ds = math.prod(sizes.get(a, 1) for a in data_axes)
+    ms = sizes.get(model_axis, 1) if model_axis else 1
+    return ds, ms
+
+
+def dense_cache_shardings(cfg: ModelConfig, cache, mesh, *,
+                          data_axes=("data",), model_axis="model"):
+    """NamedSharding tree for a dense (init_cache) pool cache."""
+    ds, ms = _mesh_sizes(mesh, data_axes, model_axis)
+    axes = cache_batch_axes(cfg, cache)
+
+    def one(path, ax, leaf):
+        spec = [None] * leaf.ndim
+        if ds > 1 and leaf.ndim > ax and leaf.shape[ax] % ds == 0:
+            spec[ax] = tuple(data_axes)
+        name = getattr(path[-1], "key", None) if path else None
+        # attention K/V leaves are (..., batch, T, KV, hd): KV at ax + 2
+        if (name in ("k", "v") and ms > 1 and leaf.ndim == ax + 4
+                and leaf.shape[ax + 2] % ms == 0):
+            spec[ax + 2] = model_axis
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, axes, cache)
+
+
+def paged_cache_shardings(cfg: ModelConfig, cache, mesh, *,
+                          data_axes=("data",), model_axis="model"):
+    """NamedSharding tree for a paged (init_paged_cache) cache."""
+    ds, ms = _mesh_sizes(mesh, data_axes, model_axis)
+    axes = paged_cache_axes(cfg)
+
+    def one(ax, leaf):
+        spec = [None] * leaf.ndim
+        if ax >= 0:  # per-slot dense lanes (hybrid recurrent state)
+            if ds > 1 and leaf.shape[ax] % ds == 0:
+                spec[ax] = tuple(data_axes)
+        elif ms > 1 and leaf.shape[-2] % ms == 0:
+            # shared pool (..., n_pages, page_size, KV, hd): KV at -2
+            spec[-2] = model_axis
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, axes, cache)
+
+
+def constrain_cache(cache, shardings):
+    """Sharded variant of the slot ops' output: re-pin a cache tree's
+    shardings mid-trace (after reset_slots / slot_update / scatter) so
+    GSPMD keeps the slot and KV axes partitioned instead of re-deciding
+    the layout after every update."""
+    return jax.tree.map(jax.lax.with_sharding_constraint, cache, shardings)

@@ -259,6 +259,12 @@ class _BatcherBase:
         self.preemptions = 0          # running requests forced back to queue
         self.decode_ticks = 0         # fused decode ticks driven so far
         self.decode_active_slots = 0  # live slots summed over decode ticks
+        # mesh accounting (overridden by mesh-aware batchers): the slot
+        # pool splits into n_slot_groups contiguous groups, one per data
+        # shard; group_active counts live slots per group per tick
+        self.mesh = None
+        self.n_slot_groups = 1
+        self.group_active = np.zeros((1,), np.int64)
         # preempted requests awaiting re-admission: id(request) ->
         # (emitted, margins); resume prefills prompt + emitted instead of
         # re-sampling anything
@@ -276,8 +282,22 @@ class _BatcherBase:
         return self.engine.prefill_dispatches
 
     def cache_nbytes(self) -> int:
-        """Live device bytes of the engine's decode state."""
+        """GLOBAL device bytes of the engine's decode state (all devices)."""
         return self.engine.cache_nbytes()
+
+    def cache_nbytes_per_device(self) -> int:
+        """Max addressable decode-state bytes on any one device (== global
+        when unsharded) — keeps paged-vs-dense byte ratios meaningful on a
+        mesh."""
+        return self.engine.cache_nbytes_per_device()
+
+    def group_occupancy(self) -> list:
+        """Per-slot-group occupancy (live slot fraction per data shard per
+        decode tick) — a skewed list means one shard decodes dead lanes
+        while another queues."""
+        spg = max(1, self.n_slots // self.n_slot_groups)
+        return [self.group_active[g] / max(1, self.decode_ticks * spg)
+                for g in range(self.n_slot_groups)]
 
     # ------------------------------------------------------------- intake
 
@@ -444,7 +464,8 @@ class ContinuousBatcher(_BatcherBase):
                  page_size: int = DEFAULT_PAGE_SIZE,
                  n_pages: int | None = None, share_prefix: bool = True,
                  kernel: str = "xla", allocation: str = "worst_case",
-                 default_sampling: SamplingParams | None = None):
+                 default_sampling: SamplingParams | None = None,
+                 mesh=None):
         super().__init__(cfg, params, n_slots=n_slots, capacity=capacity,
                          bos_token=bos_token,
                          default_sampling=default_sampling)
@@ -467,12 +488,15 @@ class ContinuousBatcher(_BatcherBase):
         self.prefill_mode = prefill_mode
         self.prefill_chunk = max(1, prefill_chunk)
         if cache_layout == "dense":
-            self.engine = DenseEngine(cfg, params, n_slots, capacity,
-                                      use_pallas)
+            self.engine = DenseEngine(cfg, params, n_slots=n_slots,
+                                      capacity=capacity,
+                                      use_pallas=use_pallas, mesh=mesh)
         else:
-            self.engine = PagedEngine(cfg, params, n_slots, capacity,
-                                      page_size, n_pages, use_pallas,
-                                      kernel)
+            self.engine = PagedEngine(cfg, params, n_slots=n_slots,
+                                      capacity=capacity,
+                                      page_size=page_size, n_pages=n_pages,
+                                      use_pallas=use_pallas, kernel=kernel,
+                                      mesh=mesh)
             self.allocator = PageAllocator(self.engine.n_pages, page_size,
                                            allocation)
             self.slot_pages: list = [[] for _ in range(n_slots)]
@@ -487,6 +511,9 @@ class ContinuousBatcher(_BatcherBase):
                                 and cfg.block_kind == "attention")
         # prefill block chunking bound (logical ring under paged layout)
         self._ring_cap = self.engine.ring_cap
+        self.mesh = self.engine.mesh
+        self.n_slot_groups = self.engine.n_slot_groups
+        self.group_active = np.zeros((self.n_slot_groups,), np.int64)
 
     # ------------------------------------------------ engine delegation
 
@@ -790,6 +817,9 @@ class ContinuousBatcher(_BatcherBase):
                                           self._sampling_batch())
         self.decode_ticks += 1
         self.decode_active_slots += len(active)
+        spg = max(1, self.n_slots // self.n_slot_groups)
+        for s in active:
+            self.group_active[s // spg] += 1
         self.active_slot_steps += len(active)
         self.total_slot_steps += self.n_slots
         for s in active:
@@ -814,7 +844,8 @@ class PerSlotBatcher(_BatcherBase):
         super().__init__(cfg, params, n_slots=n_slots, capacity=capacity,
                          bos_token=bos_token,
                          default_sampling=default_sampling)
-        self.engine = PerSlotEngine(cfg, params, n_slots, capacity)
+        self.engine = PerSlotEngine(cfg, params, n_slots=n_slots,
+                                    capacity=capacity)
 
     @property
     def caches(self):
@@ -851,6 +882,7 @@ class PerSlotBatcher(_BatcherBase):
                 st["margins"].append(margin)
                 self._finish_if_done(s)
             self.decode_active_slots += 1
+            self.group_active[0] += 1
         if any_active:
             self.total_slot_steps += self.n_slots
             self.decode_ticks += 1

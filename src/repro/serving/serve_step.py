@@ -50,7 +50,8 @@ def make_prefill_step(cfg: ModelConfig, use_pallas: bool = False):
     return step
 
 
-def make_engine_step(cfg: ModelConfig, use_pallas: bool = False):
+def make_engine_step(cfg: ModelConfig, use_pallas: bool = False,
+                     plan=None):
     """Fused slot-batched decode: ONE device program advances every slot of
     the pool by one token.
 
@@ -71,14 +72,28 @@ def make_engine_step(cfg: ModelConfig, use_pallas: bool = False):
     argmax of the raw logits.  next_tok: (n_slots,) chosen token per slot;
     margin: (n_slots,) top1-top2 score gap (a near-zero margin marks a
     numerical tie where compiled variants of the same math may legitimately
-    pick different tokens)."""
+    pick different tokens).
+
+    plan: optional ShardingPlan — re-pins the cache's slot/KV-head
+    partitioning after the in-trace reset and threads activation
+    constraints through the forward (no-op trace-wise on a 1-device
+    mesh, so mesh=(1,1) compiles the same program as plan=None)."""
 
     def step(params, cache, tokens, reset_mask, active_mask, sampling):
         cache = reset_slots(cfg, cache, reset_mask)
+        if plan is not None:
+            cache = plan.constrain_dense_cache(cache)
         pos0 = cache["pos"]
         out = T.forward(params, cfg, tokens, cache=cache,
-                        use_pallas=use_pallas)
-        scores = batched_scores(out.logits[:, -1], sampling)
+                        use_pallas=use_pallas, shard=plan)
+        logits = out.logits[:, -1]
+        if plan is not None:
+            # replicate the Gumbel-max region: sharding the legacy threefry
+            # RNG would change the noise bits (see ShardingPlan.rep)
+            logits = plan.rep(logits)
+        scores = batched_scores(logits, sampling)
+        if plan is not None:
+            scores = plan.rep(scores)
         next_tok, margin = argmax_with_margin(scores)
         new_cache = dict(out.cache,
                          pos=jnp.where(active_mask, out.cache["pos"], pos0))
@@ -88,7 +103,7 @@ def make_engine_step(cfg: ModelConfig, use_pallas: bool = False):
 
 
 def make_paged_engine_step(cfg: ModelConfig, use_pallas: bool = False,
-                           kernel: str = "xla"):
+                           kernel: str = "xla", plan=None):
     """Fused slot-batched decode against the shared page pool.
 
     step(params, cache, tokens, pos, block_table, reset_mask, sampling)
@@ -113,10 +128,18 @@ def make_paged_engine_step(cfg: ModelConfig, use_pallas: bool = False,
 
     def step(params, cache, tokens, pos, block_table, reset_mask, sampling):
         cache = reset_paged_slots(cfg, cache, reset_mask)
+        if plan is not None:
+            cache = plan.constrain_paged_cache(cache)
         full = dict(cache, pos=pos, block_table=block_table)
         out = T.forward(params, cfg, tokens, cache=full,
-                        use_pallas=use_pallas, paged_kernel=kernel)
-        scores = batched_scores(out.logits[:, -1], sampling)
+                        use_pallas=use_pallas, paged_kernel=kernel,
+                        shard=plan)
+        logits = out.logits[:, -1]
+        if plan is not None:
+            logits = plan.rep(logits)
+        scores = batched_scores(logits, sampling)
+        if plan is not None:
+            scores = plan.rep(scores)
         next_tok, margin = argmax_with_margin(scores)
         new_cache = {k: v for k, v in out.cache.items() if k != "pos"}
         return next_tok, margin, new_cache
@@ -124,7 +147,8 @@ def make_paged_engine_step(cfg: ModelConfig, use_pallas: bool = False,
     return step
 
 
-def make_slot_prefill_step(cfg: ModelConfig, use_pallas: bool = False):
+def make_slot_prefill_step(cfg: ModelConfig, use_pallas: bool = False,
+                           plan=None):
     """Chunked prefill into one slot of a stacked pool cache.
 
     step(params, cache, slot, tokens, reset, row) -> (next_tok, margin, cache)
@@ -142,9 +166,16 @@ def make_slot_prefill_step(cfg: ModelConfig, use_pallas: bool = False):
         sub = jax.tree.map(
             lambda a: jnp.where(reset, jnp.zeros((), a.dtype), a), sub)
         out = T.forward(params, cfg, tokens, cache=sub,
-                        use_pallas=use_pallas)
+                        use_pallas=use_pallas, shard=plan)
         cache = slot_update(cfg, cache, slot, out.cache)
-        scores = row_scores(out.logits[0, -1], row)
+        if plan is not None:
+            cache = plan.constrain_dense_cache(cache)
+        logits = out.logits[0, -1]
+        if plan is not None:
+            logits = plan.rep(logits)
+        scores = row_scores(logits, row)
+        if plan is not None:
+            scores = plan.rep(scores)
         tok, margin = argmax_with_margin(scores[None])
         return tok[0], margin[0], cache
 
@@ -152,7 +183,7 @@ def make_slot_prefill_step(cfg: ModelConfig, use_pallas: bool = False):
 
 
 def make_paged_prefill_step(cfg: ModelConfig, use_pallas: bool = False,
-                            kernel: str = "xla"):
+                            kernel: str = "xla", plan=None):
     """Chunked prefill of one slot against the shared page pool.
 
     step(params, cache, slot, tokens, pos0, bt_row, reset, row)
@@ -171,10 +202,18 @@ def make_paged_prefill_step(cfg: ModelConfig, use_pallas: bool = False,
         sub = reset_paged_sub(cfg, sub, reset)
         full = dict(sub, pos=pos0, block_table=bt_row)
         out = T.forward(params, cfg, tokens, cache=full,
-                        use_pallas=use_pallas, paged_kernel=kernel)
+                        use_pallas=use_pallas, paged_kernel=kernel,
+                        shard=plan)
         new = {k: v for k, v in out.cache.items() if k != "pos"}
         cache = paged_slot_update(cfg, cache, slot, new)
-        scores = row_scores(out.logits[0, -1], row)
+        if plan is not None:
+            cache = plan.constrain_paged_cache(cache)
+        logits = out.logits[0, -1]
+        if plan is not None:
+            logits = plan.rep(logits)
+        scores = row_scores(logits, row)
+        if plan is not None:
+            scores = plan.rep(scores)
         tok, margin = argmax_with_margin(scores[None])
         return tok[0], margin[0], cache
 

@@ -1,0 +1,194 @@
+"""Mesh placement for the serving engines: the `ShardingPlan`.
+
+A plan binds one `jax.sharding.Mesh` (axis names drawn from
+``("pod", "data", "model")``, as built by launch/mesh.py) to one model
+config and answers every placement question an engine has:
+
+- **params** — tensor-parallel over ``"model"`` via the same logical-axis
+  rules training uses (models/params.py: vocab / mlp / heads / kv /
+  experts / inner dims), replicated over the data axes.  GQA-aware: when
+  ``n_heads`` or ``n_kv_heads`` does not divide the model-axis size, the
+  corresponding *logical axis* is forced to replicate — the flat ``q_dim``
+  / ``kv_dim`` columns of wq/wk/wv may be divisible even when the head
+  count is not, and sharding them would leave the (B, S, H, hd) activations
+  unshardable on the same axis.
+- **decode state** — slot/batch dims shard over the data axes (each data
+  shard owns a contiguous slot group), attention KV-head dims over
+  ``"model"``; see kvcache.dense_cache_shardings / paged_cache_shardings
+  for the per-leaf trees.  The paged pool's page axis replicates over data
+  (any slot's block table may point at any page).
+- **per-dispatch host arrays** — `rows()` (slot-major: tokens, masks,
+  positions, block tables, SlotSampling batches) and `replicated()`
+  (prefill scalars and (1, S) blocks) are the pytree-prefix shardings the
+  engines pin as jit ``in_shardings``/``out_shardings``.
+- **activations** — `act(x, batch=, heads=)` applies a
+  with_sharding_constraint with per-dim divisibility fallback, and is a
+  strict no-op on a single-device mesh (and when no dim divides), so a
+  ``(1, 1)`` mesh traces the same program as ``mesh=None``.
+
+``mesh=None`` everywhere means "no plan": engines skip device_put and jit
+sharding arguments entirely, preserving single-device behavior
+bit-for-bit.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.serving import kvcache as KV
+
+_KNOWN_AXES = ("pod", "data", "model")
+
+
+def param_logical_axes(cfg: ModelConfig):
+    """Logical-axis pytree of init_params(cfg) without allocating params
+    (eval_shape; the axes tree is captured through a closure box)."""
+    from repro.models import params as Pm
+
+    box = {}
+
+    def build(key):
+        params, axes = Pm.init_params(key, cfg)
+        box["axes"] = axes
+        return params
+
+    jax.eval_shape(build, jax.random.PRNGKey(0))
+    return box["axes"]
+
+
+def tree_device_nbytes(tree) -> int:
+    """Max over devices of the addressable bytes a pytree of jax arrays
+    places on any one device.  A replicated leaf counts fully on every
+    device; a sharded leaf counts one shard per device.  On a single
+    device (or mesh=None state) this equals the tree's total nbytes."""
+    per: dict = {}
+    for leaf in jax.tree.leaves(tree):
+        shards = getattr(leaf, "addressable_shards", None)
+        if shards is None:
+            continue
+        for sh in shards:
+            per[sh.device] = per.get(sh.device, 0) + sh.data.nbytes
+    return max(per.values(), default=0)
+
+
+class ShardingPlan:
+    """Placement policy for one engine on one mesh (see module doc)."""
+
+    def __init__(self, mesh, cfg: ModelConfig, *, model_axis: str = "model"):
+        unknown = [a for a in mesh.axis_names if a not in _KNOWN_AXES]
+        if unknown:
+            raise ValueError(
+                f"mesh axes {unknown} are not serving axes — use "
+                f"{_KNOWN_AXES} (launch/mesh.py builds these)")
+        self.mesh = mesh
+        self.cfg = cfg
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        self.model_axis = model_axis if model_axis in sizes else None
+        self.data_axes = tuple(a for a in mesh.axis_names
+                               if a != model_axis)
+        self.data_size = math.prod(sizes[a] for a in self.data_axes)
+        self.model_size = sizes.get(model_axis, 1)
+
+    @property
+    def trivial(self) -> bool:
+        """True on a 1-device mesh: constraints would be pure trace noise,
+        so act()/constrain_* skip themselves and the traced program is
+        identical to the mesh=None one."""
+        return self.mesh.devices.size == 1
+
+    # ---------------------------------------------------- shardings (trees)
+
+    def replicated(self) -> NamedSharding:
+        """Fully-replicated sharding (prefill scalars, (1, S) blocks,
+        scalar-leaf SlotSampling rows) — usable as a pytree prefix."""
+        return NamedSharding(self.mesh, P())
+
+    def rows(self) -> NamedSharding:
+        """Slot-major sharding: leading dim over the data axes, the rest
+        replicated (tokens, masks, positions, block tables, batched
+        SlotSampling leaves) — usable as a pytree prefix."""
+        if self.data_size == 1:
+            return self.replicated()
+        return NamedSharding(self.mesh, P(self.data_axes))
+
+    def param_shardings(self, params):
+        """NamedSharding tree for the parameter pytree (GQA-aware)."""
+        from repro.models import params as Pm
+
+        rules = {}
+        if self.model_size > 1:
+            if self.cfg.n_heads % self.model_size:
+                rules["heads"] = None
+            if self.cfg.n_kv_heads % self.model_size:
+                rules["kv"] = None
+        axes = param_logical_axes(self.cfg)
+        return Pm.param_shardings(params, axes, self.mesh, rules=rules)
+
+    def dense_cache_shardings(self, cache):
+        return KV.dense_cache_shardings(
+            self.cfg, cache, self.mesh, data_axes=self.data_axes,
+            model_axis=self.model_axis)
+
+    def paged_cache_shardings(self, cache):
+        return KV.paged_cache_shardings(
+            self.cfg, cache, self.mesh, data_axes=self.data_axes,
+            model_axis=self.model_axis)
+
+    # -------------------------------------------------- in-trace constraints
+
+    def act(self, x, batch: int | None = None, heads: int | None = None):
+        """Constrain an activation: dim `batch` over the data axes, dim
+        `heads` over the model axis — each only when evenly divisible
+        (GQA KV heads replicate when n_kv < model axis).  No-op when
+        nothing divides or the mesh is a single device."""
+        if self.trivial:
+            return x
+        spec = [None] * x.ndim
+        if (batch is not None and self.data_size > 1
+                and x.shape[batch] % self.data_size == 0):
+            spec[batch] = self.data_axes
+        if (heads is not None and self.model_axis is not None
+                and self.model_size > 1
+                and x.shape[heads] % self.model_size == 0):
+            spec[heads] = self.model_axis
+        if not any(s is not None for s in spec):
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    def rep(self, x):
+        """Pin a tensor fully replicated mid-trace.  The sampling scores
+        region REQUIRES this: with the legacy (non-partitionable) threefry
+        RNG, GSPMD sharding a random-bits computation changes the bits it
+        produces — pinning the logits into and the scores out of the
+        Gumbel-max region keeps noise generation replicated, so a sampled
+        request sees the same noise on a mesh as on one device."""
+        if self.trivial:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P()))
+
+    def constrain_dense_cache(self, cache):
+        """Re-pin a dense pool cache mid-trace (after reset_slots /
+        slot writes) so GSPMD keeps slot and KV axes partitioned."""
+        if self.trivial:
+            return cache
+        return KV.constrain_cache(cache, self.dense_cache_shardings(cache))
+
+    def constrain_paged_cache(self, cache):
+        if self.trivial:
+            return cache
+        return KV.constrain_cache(cache, self.paged_cache_shardings(cache))
+
+
+def as_plan(mesh, cfg: ModelConfig) -> ShardingPlan | None:
+    """None | Mesh | ShardingPlan -> ShardingPlan | None (engine ctor
+    convenience: `mesh=` accepts either a bare mesh or a prebuilt plan)."""
+    if mesh is None:
+        return None
+    if isinstance(mesh, ShardingPlan):
+        return mesh
+    return ShardingPlan(mesh, cfg)

@@ -3,8 +3,9 @@ loop at n_slots in {1, 4, 8, 16}, the paged KV pool vs the dense cache
 layout on a skewed prompt-length mix, the Pallas paged-attention decode
 kernel vs the XLA ring gather on that same mix, sampled
 (temperature=0.8 / top_k=40) vs greedy decode on the same prompts and
-slots, and lazy page allocation (+ preemption) vs worst-case reservation
-on an overloaded pool.
+slots, lazy page allocation (+ preemption) vs worst-case reservation
+on an overloaded pool, and best_of=n CoW-forked decoding (one prompt
+prefill shared by every branch) vs n independent branch-keyed requests.
 
 Reports decode tokens/sec, jitted device dispatches per engine tick (the
 fused engine issues exactly ONE decode dispatch per tick — greedy OR
@@ -271,6 +272,73 @@ def run(quick: bool = False):
         f";lazy_disp_per_tick={l_disp / max(1, l_ticks):.4f}"
         f";worstcase_disp_per_tick={w_disp / max(1, w_ticks):.4f}"
         f";pages={n_pages};lazy_ticks={l_ticks};worstcase_ticks={w_ticks}"))
+
+    # ---- best-of-n CoW fork: ONE prompt prefill fans out n branches
+    # whose block tables share every prompt page (a branch writing a
+    # shared page copies it inside the fused tick), vs n independent
+    # branch-keyed requests that each pay their own prefill.  CI gates
+    # fork_equiv == True (branch b of the forked run token-identical to
+    # an independent SamplingParams(seed, branch=b) request) and
+    # shared_pages > 0; fork_disp_per_tick rides the repo-wide <= 1.00
+    # fused-dispatch gate.
+    import dataclasses
+
+    from repro.serving.sampling import SamplingParams
+
+    n_best = 4
+    n_slots = 4 if quick else 8
+    prompt = list(range(3, 27))  # 24 tokens: one full shared page + tail
+    max_new = 8 if quick else 12
+    sp = SamplingParams(temperature=0.9, top_k=40, seed=17)
+    fork_eng = ContinuousBatcher(cfg, params, n_slots=n_slots, capacity=64,
+                                 cache_layout="paged")
+    solo_eng = ContinuousBatcher(cfg, params, n_slots=n_slots, capacity=64,
+                                 cache_layout="paged", share_prefix=False)
+    warm_prompt = list(range(60, 84))  # same shapes, different tokens
+    fork_eng.submit([Request(rid=-1, prompt=list(warm_prompt), max_new=2,
+                             sampling=sp, best_of=n_best)])
+    fork_eng.run()
+    solo_eng.submit([Request(rid=-(b + 1), prompt=list(warm_prompt),
+                             max_new=2,
+                             sampling=dataclasses.replace(sp, branch=b))
+                     for b in range(n_best)])
+    solo_eng.run()
+
+    fp0, sp0 = fork_eng.prefill_dispatches, solo_eng.prefill_dispatches
+    fd0 = fork_eng.decode_dispatches
+    fs0, cw0 = fork_eng.fork_shared_pages, fork_eng.cow_copies
+    fork_eng.submit([Request(rid=0, prompt=list(prompt), max_new=max_new,
+                             sampling=sp, best_of=n_best)])
+    start = time.time()
+    _, f_ticks = fork_eng.run()
+    f_s = time.time() - start
+    branches = fork_eng.group_results[0]
+
+    solo_eng.submit([Request(rid=b, prompt=list(prompt), max_new=max_new,
+                             sampling=dataclasses.replace(sp, branch=b))
+                     for b in range(n_best)])
+    start = time.time()
+    s_done, _ = solo_eng.run()
+    s_s = time.time() - start
+    want = {c.rid: c for c in s_done}
+    fork_equiv = all(
+        completions_equivalent([dataclasses.replace(branches[b], rid=0)],
+                               [dataclasses.replace(want[b], rid=0)])
+        for b in range(n_best))
+    f_tok = sum(len(c.tokens) for c in branches.values())
+    s_tok = sum(len(c.tokens) for c in s_done)
+    rows.append((
+        "serving_best_of_fork",
+        f_s / max(1, f_tok) * 1e6,
+        f"slots={n_slots};best_of={n_best};tok={f_tok}"
+        f";fork_equiv={fork_equiv}"
+        f";shared_pages={fork_eng.fork_shared_pages - fs0}"
+        f";cow_copies={fork_eng.cow_copies - cw0}"
+        f";fork_disp_per_tick="
+        f"{(fork_eng.decode_dispatches - fd0) / max(1, f_ticks):.4f}"
+        f";fork_tok_s={f_tok / f_s:.1f};solo_tok_s={s_tok / s_s:.1f}"
+        f";fork_prefill_disp={fork_eng.prefill_dispatches - fp0}"
+        f";solo_prefill_disp={solo_eng.prefill_dispatches - sp0}"))
 
     rows.append(_sharded_row(quick))
     return rows

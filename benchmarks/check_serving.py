@@ -13,6 +13,11 @@ fails on any of:
   buying concurrency over worst-case reservation on the overload mix
   (an artifact with NO overload occupancy row fails too: a renamed or
   dropped row must not silently disarm the gate);
+- the `serving_best_of_fork` row missing, its `fork_equiv` not True
+  (branch b of a CoW-forked best_of run diverging from an independent
+  `SamplingParams(seed, branch=b)` request), or its `shared_pages` not
+  positive (forked admission no longer sharing prompt pages — every
+  branch paying its own prefill defeats the point of forking);
 - any `*sharded_equiv` field not True — the mesh-sharded engines
   diverging from the single-device trajectory beyond argmax-tie
   tolerance on the (2, 2) debug mesh (an artifact with NO
@@ -128,6 +133,24 @@ def _check_sharded(rows: dict, bad: list) -> int:
     return seen
 
 
+def _check_fork(rows: dict, bad: list) -> int:
+    """The best-of fork row must be present, token-equivalent to its
+    independent-request oracle, and actually sharing pages."""
+    fields = rows.get("serving_best_of_fork")
+    if fields is None:
+        return 0
+    if str(fields.get("fork_equiv")) != "True":
+        bad.append(("serving_best_of_fork", "fork_equiv",
+                    f"{fields.get('fork_equiv')!r} — a forked branch "
+                    f"diverged from its independent branch-keyed oracle"))
+    shared = fields.get("shared_pages")
+    if not isinstance(shared, (int, float)) or shared <= 0:
+        bad.append(("serving_best_of_fork", "shared_pages",
+                    f"{shared!r} — forked admission is no longer sharing "
+                    f"prompt pages across branches"))
+    return 1
+
+
 def _check_baseline(quick, rows: dict, baseline_path: str, bad: list) -> int:
     """Compare every engine-throughput field (``*tok_s``, perslot baseline
     exempt) against the committed baseline; tolerate MAX_TOKS_DROP.
@@ -186,6 +209,7 @@ def check(path: str, baseline_path: str = BASELINE) -> int:
     n_ratio = _check_bytes_ratio(rows, bad)
     n_over = _check_overload(rows, bad)
     n_shard = _check_sharded(rows, bad)
+    n_fork = _check_fork(rows, bad)
     n_base = _check_baseline(quick, rows, baseline_path, bad)
     if not n_disp:
         print(f"check_serving: no fused disp_per_tick fields in {path} — "
@@ -199,6 +223,11 @@ def check(path: str, baseline_path: str = BASELINE) -> int:
     if not n_shard or "serving_sharded_vs_single" not in rows:
         print(f"check_serving: no sharded equivalence fields in {path} — "
               "the serving_sharded_vs_single row was renamed or dropped",
+              file=sys.stderr)
+        return 1
+    if not n_fork:
+        print(f"check_serving: no serving_best_of_fork row in {path} — "
+              "the best-of fork bench row was renamed or dropped",
               file=sys.stderr)
         return 1
     if n_base == 0 and os.path.exists(baseline_path):
@@ -220,7 +249,8 @@ def check(path: str, baseline_path: str = BASELINE) -> int:
           f"<= {MAX_DISP_PER_TICK}; {n_ratio} bytes_ratio fields all "
           f"<= {MAX_BYTES_RATIO}; {n_over} overload rows with "
           f"lazy_occupancy > worstcase_occupancy; {n_shard} sharded "
-          f"equivalence fields all True; {base_msg}")
+          f"equivalence fields all True; best-of fork row equivalent "
+          f"and sharing pages; {base_msg}")
     return 0
 
 

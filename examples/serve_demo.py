@@ -19,6 +19,11 @@ one request is cancelled mid-decode (its pages reclaimed on the spot),
 and an undersized pool forces preemption + resume while every surviving
 stream still delivers exactly its completion's tokens.
 
+Part 5 forks: one prompt is prefilled ONCE and `best_of=4` copy-on-write
+branches race under different sampling noise — prompt pages are shared
+(refcounted) until a branch writes one, and only the winner by
+cumulative logprob is recorded.
+
     PYTHONPATH=src python examples/serve_demo.py --gen 24
 """
 import argparse
@@ -165,6 +170,30 @@ def main():
               f"dispatch/tick")
 
     asyncio.run(lifecycle_demo())
+
+    print("\n== best-of-n copy-on-write forking (1 prefill, "
+          "4 branches) ==")
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(1, cfg.vocab_size, 24).tolist()
+    eng = ContinuousBatcher(cfg, params, n_slots=4, capacity=64,
+                            cache_layout="paged")
+    eng.submit([Request(rid=0, prompt=prompt, max_new=12,
+                        sampling=SamplingParams(temperature=0.9, top_k=40,
+                                                seed=42),
+                        best_of=4)])
+    done, steps = eng.run()
+    winner = done[0]
+    branches = eng.group_results[0]
+    for b in sorted(branches):
+        c = branches[b]
+        star = " <- winner" if c.tokens == winner.tokens else ""
+        print(f"  branch {b}: logprob {sum(c.logprobs):8.2f} "
+              f"tokens {c.tokens[:6]}...{star}")
+    print(f"  {eng.prefill_dispatches} prefill dispatches for 4 branches, "
+          f"{eng.fork_shared_pages} shared pages, "
+          f"{eng.cow_copies} CoW copies, "
+          f"{eng.decode_dispatches / max(1, eng.decode_ticks):.2f} "
+          f"dispatch/tick")
 
 
 if __name__ == "__main__":

@@ -7,6 +7,11 @@ sampling (temperature / top-k / top-p, seeded).
       --requests 6 --slots 4 --gen 24 --layout paged --allocation lazy \
       --pages 9 --temperature 0.8 --top-k 40 --stream
 
+``--best-of N`` races N copy-on-write branches per request off a single
+prefill (paged layout; sampled decode) and reports only each request's
+winner by cumulative logprob — shared prompt pages are forked, never
+copied, until a branch actually writes one.
+
 Mesh-sharded serving: ``--mesh DxM`` runs the engine on a
 (data=D, model=M) jax.sharding.Mesh — slots shard over "data", heads
 over "model" (requires D*M visible devices; set
@@ -43,6 +48,10 @@ async def _serve(args, cfg, params):
     from repro.serving import ContinuousBatcher, SamplingParams, ServingFrontend
 
     layout = args.layout
+    if args.best_of > 1 and layout != "paged":
+        print("--best-of > 1 forks shared KV pages: switching "
+              "--layout paged")
+        layout = "paged"
     if args.allocation == "lazy" and layout != "paged":
         print("--allocation lazy needs the paged pool: switching "
               "--layout paged")
@@ -77,7 +86,7 @@ async def _serve(args, cfg, params):
                 rng.integers(1, cfg.vocab_size,
                              args.prompt_len).tolist(),
                 args.gen, sampling=sp, priority=args.priority,
-                deadline_ms=args.deadline_ms))
+                deadline_ms=args.deadline_ms, best_of=args.best_of))
 
         async def consume(h):
             toks = []
@@ -100,6 +109,10 @@ async def _serve(args, cfg, params):
           f"slots={args.slots} requests={args.requests} "
           f"prompt={args.prompt_len} gen={args.gen} decode={mode} "
           f"kernel={args.kernel} mesh={stats['mesh']}")
+    if args.best_of > 1:
+        print(f"best_of={args.best_of}: {batcher.fork_shared_pages} pages "
+              f"shared across forks, {batcher.cow_copies} copy-on-write "
+              f"page copies (winner by cumulative logprob)")
     print(f"cache {stats['cache_bytes_global'] / 1e6:.2f} MB global, "
           f"{stats['cache_bytes_per_device'] / 1e6:.2f} MB/device over "
           f"{stats['slot_groups']} slot group(s)")
@@ -148,6 +161,10 @@ def main():
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="per-request deadline; sooner deadlines are "
                          "preempted later")
+    ap.add_argument("--best-of", type=int, default=1,
+                    help="race N copy-on-write branches per request off "
+                         "one prefill and keep the winner by cumulative "
+                         "logprob (paged layout; needs N free slots)")
     ap.add_argument("--max-pending", type=int, default=64,
                     help="bounded intake: submit() suspends beyond this")
     ap.add_argument("--stream", action="store_true",

@@ -11,31 +11,52 @@ Layer split (who may run vs who runs vs how it runs):
   immediate slot/page reclaim.  Intake is a bounded queue — `submit`
   suspends callers for backpressure instead of buffering unboundedly —
   and per-request ``priority=`` / ``deadline_ms=`` ride the scheduler's
-  `Request` into the preemption policy.
+  `Request` into the preemption policy.  Deadlines are also enforced:
+  between ticks the engine task auto-cancels every queued or running
+  request whose deadline passed and fails its handle with
+  `DeadlineExpired`.  ``best_of=n`` resolves the handle with the
+  winning branch only (the stream stays quiet while branches race).
 - ``scheduler`` — policy.  `Request` / `SamplingParams` intake and
-  validation, FIFO admission, per-request token budgets, page
-  reservation with refcounted prompt-prefix sharing (`PageAllocator`),
-  slot assignment/release, `preempt(rid)` / `cancel(rid)`, completion
-  records, utilization/occupancy metrics.  Touches no device buffers.
+  validation, FIFO admission, per-request token budgets, slot
+  assignment/release, `preempt(rid)` / `cancel(rid)` /
+  `expire_deadlines(now)`, completion records, utilization/occupancy
+  metrics.  Touches no device buffers.  Page OWNERSHIP lives here in
+  `PageAllocator` under one rule — a page is SHARED UNTIL WRITTEN:
+  `share` refcounts a live page, `fork` shares a whole block table at a
+  branch point, and `ensure_private` is the copy-on-write transition (a
+  holder about to write a page other holders still reference gives up
+  its reference and gets a private replacement; the engine copies the
+  page in-dispatch and only that holder's block-table entry is
+  repointed).  Prompt-prefix sharing and best-of-n forking are both
+  special cases of this rule; prefix pages are never written past the
+  prompt, so they never reach the CoW transition.  `Request.best_of=n`
+  prefills a prompt once, forks n-1 branches that share every prompt
+  page, decodes all n concurrently (branch b's noise keyed by
+  `branch_key(seed, b)`), and records only the winner by cumulative
+  token logprob (per-branch results in `group_results`).
   Paged admission has two modes (``allocation=``): "worst_case"
   (default) reserves a request's whole-sequence page budget up front and
   stalls the FIFO queue on exhaustion; "lazy" admits on the prompt's
   pages only, acquires each decode page on demand at page boundaries,
   and on pool exhaustion preempts the most preemptible running request
   (lowest priority, then latest/absent deadline, then most recent
-  admission) — its slot and non-shared pages are released and it is
+  admission; slots inside their ``min_quantum`` of decode ticks are
+  passed over while any riper victim exists) — its slot and non-shared
+  pages are released and it is
   requeued WITH its generated tokens, so the resume is a recompute
   prefill of prompt + emitted (never a re-sample) and completions are
   token-for-token what an unpreempted run produces; a resume is
   re-admitted at its remaining worst case, so a once-preempted request
   returns only when it can run to completion (anti-thrash).  A request whose
   worst case can NEVER fit the pool is still rejected at submit().
-  Preemption and lazy growth are host-side bookkeeping only: the fused
-  tick stays at exactly one dispatch.
+  Preemption, lazy growth and the CoW transition are host-side
+  bookkeeping only: the fused tick stays at exactly one dispatch.
 - ``engine`` — dispatch.  `DenseEngine` (stacked dense rings, device
   `pos` vector, in-dispatch slot reset), `PagedEngine` (ONE shared page
   pool per layer, host-owned block tables + positions, `set_page` for
-  lazy growth), `PerSlotEngine` (seed batch-1 baseline).  Each owns its
+  lazy growth, `fork_slot` to clone a block table at a branch point,
+  `queue_copy` to ride a CoW page copy into the next fused tick),
+  `PerSlotEngine` (seed batch-1 baseline).  Each owns its
   decode state and jitted step functions and advances the whole slot
   pool in ONE dispatch per tick.  `PagedEngine` takes a
   ``kernel="xla"|"pallas"`` knob (also on `ContinuousBatcher`): "xla" —
@@ -84,7 +105,14 @@ Sampling contract: a request's decode policy is `Request.sampling`
 token is always `argmax(scores)` where scores are raw fp32 logits
 (greedy) or Gumbel-perturbed filtered logits (sampled); the per-token
 top1-top2 score gap is recorded as the tie margin `completions_equivalent`
-uses to compare differently-compiled engines.
+uses to compare differently-compiled engines, and the per-token
+log-probability under the RAW distribution (`token_logprob`) rides every
+completion — best-of-n's ranking signal.
+
+Fork-parity contract: branch b of a `best_of=n` run is token-identical
+to an independent request submitted with
+``SamplingParams(seed=seed, branch=b)`` — forking changes WHERE K/V
+bytes live (shared pages + CoW copies), never WHAT any branch computes.
 """
 from repro.serving.kvcache import (  # noqa: F401
     DEFAULT_PAGE_SIZE,
@@ -92,6 +120,7 @@ from repro.serving.kvcache import (  # noqa: F401
     init_paged_cache,
     cache_bytes,
     constrain_cache,
+    cow_copy_pages,
     dense_cache_shardings,
     paged_attn_layout,
     paged_cache_bytes,
@@ -110,7 +139,9 @@ from repro.serving.sampling import (  # noqa: F401
     SlotSampling,
     argmax_with_margin,
     batched_scores,
+    branch_key,
     sampled_scores,
+    token_logprob,
 )
 from repro.serving.serve_step import (  # noqa: F401
     make_serve_step,
@@ -128,6 +159,7 @@ from repro.serving.engine import (  # noqa: F401
 )
 from repro.serving.scheduler import (  # noqa: F401
     ContinuousBatcher,
+    DeadlineExpired,
     PageAllocator,
     PerSlotBatcher,
     Request,

@@ -47,7 +47,7 @@ from repro.serving.kvcache import (DEFAULT_PAGE_SIZE, attn_cache_shape,
                                    init_cache, init_paged_cache,
                                    paged_attn_layout)
 from repro.serving.sampling import (SlotSampling, argmax_with_margin,
-                                    row_scores)
+                                    row_scores, token_logprob)
 from repro.serving.serve_step import (make_engine_step,
                                       make_paged_engine_step,
                                       make_paged_prefill_step,
@@ -120,12 +120,12 @@ class DenseEngine:
                 make_engine_step(cfg, use_pallas, plan=plan),
                 donate_argnums=1,
                 in_shardings=(psh, csh, row, row, row, rep),
-                out_shardings=(rep, rep, csh))
+                out_shardings=(rep, rep, rep, csh))
             self._prefill = jax.jit(
                 make_slot_prefill_step(cfg, use_pallas, plan=plan),
                 donate_argnums=1,
                 in_shardings=(psh, csh, rep, rep, rep, rep),
-                out_shardings=(rep, rep, csh))
+                out_shardings=(rep, rep, rep, csh))
         self._reset_mask = np.zeros((n_slots,), bool)
         self.decode_dispatches = 0
         self.prefill_dispatches = 0
@@ -150,21 +150,22 @@ class DenseEngine:
     def prefill_block(self, s: int, block, off: int, reset: bool,
                       row: SlotSampling):
         """Write a (1, S) prompt block into slot s's lanes in one call;
-        returns (token, margin) sampled from the block's last position."""
-        tok, margin, self.cache = self._prefill(
+        returns (token, margin, logprob) sampled from the block's last
+        position."""
+        tok, margin, logprob, self.cache = self._prefill(
             self.params, self.cache, s, jnp.asarray(block), reset, row)
         self.prefill_dispatches += 1
-        return int(tok), float(margin)
+        return int(tok), float(margin), float(logprob)
 
     def decode(self, toks, active_mask, sampling: SlotSampling):
         """One fused tick: every slot advances one token in ONE dispatch."""
-        nxt, margins, self.cache = self._decode(
+        nxt, margins, logps, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(toks),
             jnp.asarray(self._reset_mask), jnp.asarray(active_mask),
             sampling)
         self.decode_dispatches += 1
         self._reset_mask[:] = False
-        return np.asarray(nxt), np.asarray(margins)
+        return np.asarray(nxt), np.asarray(margins), np.asarray(logps)
 
     def cache_nbytes(self) -> int:
         """GLOBAL decode-state bytes, summed across every device."""
@@ -229,17 +230,24 @@ class PagedEngine:
             row, rep = plan.rows(), plan.replicated()
             self.params = jax.device_put(params, psh)
             self.cache = jax.device_put(self.cache, csh)
+            # the CoW copy arrays ride in replicated, like the sampling
+            # state: they index the page axis, which replicates over data
             self._decode = jax.jit(
                 make_paged_engine_step(cfg, use_pallas, kernel, plan=plan),
                 donate_argnums=1,
-                in_shardings=(psh, csh, row, row, row, row, rep),
-                out_shardings=(rep, rep, csh))
+                in_shardings=(psh, csh, row, row, row, row, rep, rep, rep),
+                out_shardings=(rep, rep, rep, csh))
             self._prefill = jax.jit(
                 make_paged_prefill_step(cfg, use_pallas, kernel, plan=plan),
                 donate_argnums=1,
                 in_shardings=(psh, csh, rep, rep, rep, rep, rep, rep),
-                out_shardings=(rep, rep, csh))
+                out_shardings=(rep, rep, rep, csh))
         self._reset_mask = np.zeros((n_slots,), bool)
+        # pending copy-on-write page copies, shipped with the next decode
+        # dispatch: slot s copies page _copy_src[s] -> _copy_dst[s] before
+        # its token scatter (dst 0 = no copy queued for that slot)
+        self._copy_src = np.zeros((n_slots,), np.int32)
+        self._copy_dst = np.zeros((n_slots,), np.int32)
         self.decode_dispatches = 0
         self.prefill_dispatches = 0
 
@@ -263,6 +271,25 @@ class PagedEngine:
         """Fall the row back to the null page so the idle lane's scatter
         lands nowhere live (the allocator reclaims the pages host-side)."""
         self.block_table[s, :] = 0
+        self._copy_src[s] = 0
+        self._copy_dst[s] = 0
+
+    def fork_slot(self, src: int, dst: int):
+        """Fork slot src's sequence into slot dst: block-table row and
+        position copied host-side — every page is now SHARED between the
+        two rows (the allocator refcounts them; a branch that writes into
+        a shared page goes through queue_copy first).  No device dispatch:
+        the next tick's block table simply carries the new row."""
+        self.block_table[dst, :] = self.block_table[src, :]
+        self.slot_pos[dst] = self.slot_pos[src]
+
+    def queue_copy(self, s: int, src: int, dst: int):
+        """Queue a copy-on-write page copy for slot s's next decode tick:
+        pool page dst becomes a copy of page src INSIDE the fused
+        dispatch, before slot s's token scatter lands on it."""
+        assert dst > 0, (s, src, dst)
+        self._copy_src[s] = src
+        self._copy_dst[s] = dst
 
     def set_page(self, s: int, idx: int, pid: int):
         """Lazy-allocation growth: point entry idx of slot s's block-table
@@ -277,21 +304,24 @@ class PagedEngine:
 
     def prefill_block(self, s: int, block, off: int, reset: bool,
                       row: SlotSampling):
-        tok, margin, self.cache = self._prefill(
+        tok, margin, logprob, self.cache = self._prefill(
             self.params, self.cache, s, jnp.asarray(block), np.int32(off),
             jnp.asarray(self.block_table[s:s + 1]), reset, row)
         self.prefill_dispatches += 1
-        return int(tok), float(margin)
+        return int(tok), float(margin), float(logprob)
 
     def decode(self, toks, active_mask, sampling: SlotSampling):
-        nxt, margins, self.cache = self._decode(
+        nxt, margins, logps, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(toks),
             jnp.asarray(self.slot_pos), jnp.asarray(self.block_table),
-            jnp.asarray(self._reset_mask), sampling)
+            jnp.asarray(self._reset_mask), jnp.asarray(self._copy_src),
+            jnp.asarray(self._copy_dst), sampling)
         self.decode_dispatches += 1
         self._reset_mask[:] = False
+        self._copy_src[:] = 0
+        self._copy_dst[:] = 0
         self.slot_pos[active_mask] += 1  # idle lanes stay pinned
-        return np.asarray(nxt), np.asarray(margins)
+        return np.asarray(nxt), np.asarray(margins), np.asarray(logps)
 
     def cache_nbytes(self) -> int:
         """GLOBAL decode-state bytes (every device summed), host block
@@ -328,9 +358,11 @@ class PerSlotEngine:
         def slot_step(params, cache, tok, row):
             out = T.forward(params, cfg, tok, cache=cache,
                             use_pallas=use_pallas)
-            scores = row_scores(out.logits[0, -1], row)
+            logits = out.logits[0, -1]
+            scores = row_scores(logits, row)
             tok_, margin = argmax_with_margin(scores[None])
-            return tok_[0], margin[0], out.cache
+            logprob = token_logprob(logits[None], tok_)
+            return tok_[0], margin[0], logprob[0], out.cache
 
         self._step = jax.jit(slot_step)
         self.decode_dispatches = 0
@@ -343,11 +375,11 @@ class PerSlotEngine:
 
     def step(self, s: int, tok: int, row: SlotSampling):
         """Advance one slot by one token (its own batch-1 dispatch)."""
-        t, m, self.caches[s] = self._step(
+        t, m, lp, self.caches[s] = self._step(
             self.params, self.caches[s], jnp.asarray([[tok]], jnp.int32),
             row)
         self.decode_dispatches += 1
-        return int(t), float(m)
+        return int(t), float(m), float(lp)
 
     def cache_nbytes(self) -> int:
         """Live device bytes of this engine's decode state."""

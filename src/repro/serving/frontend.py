@@ -31,7 +31,14 @@ Lifecycle semantics:
   the scheduler's `Request` and feed the lazy-allocation preemption
   policy (lowest priority, then latest/absent deadline, then most recent
   admission is preempted first).  Deadlines are converted to absolute
-  loop-clock milliseconds; only their ordering matters.
+  loop-clock milliseconds and are ENFORCED: between ticks the engine
+  task cancels every queued or running request whose deadline already
+  passed, reclaiming its slot and pages, and fails its handle with
+  `DeadlineExpired` — no tick is spent on tokens nobody will wait for.
+- **best-of-n**: ``best_of=n`` prefills the prompt once, forks n-1
+  copy-on-write branches in the paged engine, and streams ONLY the
+  winning branch (highest cumulative logprob) — the stream stays quiet
+  while branches race and delivers the winner's tokens at completion.
 - **status**: ``handle.status`` walks "queued" -> "running" -> "done"
   (or "cancelled" / "error"); a preempted request shows "queued" again
   until it is re-admitted.
@@ -45,7 +52,7 @@ from __future__ import annotations
 import asyncio
 
 from repro.serving.sampling import SamplingParams
-from repro.serving.scheduler import Completion, Request
+from repro.serving.scheduler import Completion, DeadlineExpired, Request
 
 _END = object()  # stream terminator sentinel
 
@@ -181,9 +188,12 @@ class ServingFrontend:
     async def submit(self, prompt, max_new: int, *,
                      sampling: SamplingParams | None = None,
                      priority: int = 0,
-                     deadline_ms: float | None = None) -> RequestHandle:
+                     deadline_ms: float | None = None,
+                     best_of: int = 1) -> RequestHandle:
         """Enqueue one request; suspends (backpressure) while
-        ``max_pending`` submissions are already waiting for the engine."""
+        ``max_pending`` submissions are already waiting for the engine.
+        ``best_of=n`` races n copy-on-write branches off one prefill and
+        resolves the handle with the winner (paged layouts only)."""
         rid = self._next_rid
         self._next_rid += 1
         deadline = None
@@ -191,7 +201,7 @@ class ServingFrontend:
             deadline = asyncio.get_running_loop().time() * 1e3 + deadline_ms
         req = Request(rid=rid, prompt=list(prompt), max_new=max_new,
                       sampling=sampling, priority=priority,
-                      deadline=deadline)
+                      deadline=deadline, best_of=best_of)
         handle = RequestHandle(self, rid, req)
         self._handles[rid] = handle
         try:
@@ -221,6 +231,20 @@ class ServingFrontend:
     def _apply_cancels(self):
         while self._cancels:
             self.batcher.cancel(self._cancels.pop())
+
+    def _expire_deadlines(self):
+        """Auto-cancel every queued or running request whose deadline has
+        passed and fail its handle with DeadlineExpired (slot + pages are
+        reclaimed by the batcher-side cancel)."""
+        expire = getattr(self.batcher, "expire_deadlines", None)
+        if expire is None:
+            return
+        now = asyncio.get_running_loop().time() * 1e3
+        for rid in expire(now):
+            handle = self._handles.pop(rid, None)
+            if handle is not None and not handle.done():
+                handle._fail(DeadlineExpired(
+                    f"request {rid}: deadline passed before completion"))
 
     def _admit(self, handle: RequestHandle) -> bool:
         if handle.done():
@@ -282,6 +306,7 @@ class ServingFrontend:
         try:
             while True:
                 self._apply_cancels()
+                self._expire_deadlines()
                 self._drain()
                 if not self._busy():
                     # idle: park until the next submission arrives
@@ -322,7 +347,10 @@ class ServingFrontend:
                 continue
             running.add(req.rid)
             handle.status = "running"
-            handle._push(st["emitted"])
+            if handle.request.best_of == 1:
+                # best-of handles stay quiet while branches race — only
+                # the winner streams, in one burst at completion
+                handle._push(st["emitted"])
         finished = []
         for c in b.done[self._done_seen:]:
             handle = self._handles.get(c.rid)

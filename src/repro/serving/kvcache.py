@@ -288,6 +288,39 @@ def reset_paged_slots(cfg: ModelConfig, cache, mask):
     return jax.tree.map(one, paged_cache_axes(cfg), cache)
 
 
+def cow_copy_pages(cfg: ModelConfig, cache, copy_src, copy_dst):
+    """Copy-on-write page copies INSIDE the fused dispatch: for every pair
+    (copy_src[i], copy_dst[i]) with dst > 0, page dst of each shared pool
+    becomes a copy of page src — the branch that is about to write into a
+    refcount-shared page gets its private copy and the token scatter that
+    follows in the same dispatch lands on it.  Rows with dst == 0 are
+    no-ops (page 0 is the null page: src is forced to 0 too, so the
+    gather/scatter is the identity on the null page).  A whole-batch
+    ``cond`` skips the copy compute entirely on ticks where no slot forked
+    — mirroring the all-greedy sampling skip — so non-forking workloads
+    compile and pay exactly the pre-CoW program body.
+
+    copy_src / copy_dst: (n_slots,) int32 page ids, one potential copy per
+    slot per tick (a slot crosses at most one page boundary per token)."""
+    src = jnp.where(copy_dst > 0, copy_src, 0)
+    dst = jnp.where(copy_dst > 0, copy_dst, 0)
+
+    def copy(cache):
+        def one(ax, a):
+            if ax >= 0:
+                return a  # per-slot dense lanes: never shared, never CoW'd
+            # pool leaves are (..., n_pages, page_size, KV, hd): page axis
+            # is -4.  Duplicate dst=0 rows all write page 0 with page 0's
+            # own contents, so scatter order does not matter.
+            moved = jnp.moveaxis(a, -4, 0)
+            moved = moved.at[dst].set(moved[src])
+            return jnp.moveaxis(moved, 0, -4)
+
+        return jax.tree.map(one, paged_cache_axes(cfg), cache)
+
+    return jax.lax.cond(jnp.any(copy_dst > 0), copy, lambda c: c, cache)
+
+
 def reset_paged_sub(cfg: ModelConfig, sub, reset):
     """Zero a batch-1 paged sub-cache's dense lanes where `reset` (traced
     bool) — the first prefill block of a refilled slot."""

@@ -44,12 +44,18 @@ class SamplingParams:
     scaled distribution.  top_k: keep only the k highest-probability
     tokens (0 = off).  top_p: keep the smallest set of tokens whose
     cumulative probability reaches top_p (1.0 = off).  seed: derives the
-    request's PRNG key — same seed, same tokens, on every engine."""
+    request's PRNG key — same seed, same tokens, on every engine.
+    branch: best-of-n branch index — branch b keys its noise off
+    ``branch_key(seed, b)``, so an independent request with (seed, b) is
+    token-identical to branch b of a forked best_of run (the fork-parity
+    oracle).  branch 0 keys off the plain seed key, preserving every
+    pre-fork trajectory bit-for-bit."""
 
     temperature: float = 0.0
     top_k: int = 0
     top_p: float = 1.0
     seed: int = 0
+    branch: int = 0
 
     def __post_init__(self):
         if self.temperature < 0:
@@ -58,6 +64,8 @@ class SamplingParams:
             raise ValueError(f"top_k must be >= 0 (0 = off): {self.top_k}")
         if not 0 < self.top_p <= 1.0:
             raise ValueError(f"top_p must be in (0, 1]: {self.top_p}")
+        if self.branch < 0:
+            raise ValueError(f"branch must be >= 0: {self.branch}")
 
 
 GREEDY = SamplingParams()
@@ -68,6 +76,19 @@ _KEY0 = None
 def request_key(seed: int) -> np.ndarray:
     """Host-side base key for a request (uint32 key data, np array)."""
     return np.asarray(jax.random.PRNGKey(seed), np.uint32)
+
+
+def branch_key(seed: int, branch: int) -> np.ndarray:
+    """Host-side base key for branch `branch` of a best-of-n request:
+    ``fold_in(seed_key, branch)`` for branch > 0, the plain seed key for
+    branch 0 (so a non-forked request's trajectory is untouched).  An
+    independent request with ``SamplingParams(seed=seed, branch=b)`` is
+    therefore token-identical to branch b of a forked run — the parity
+    oracle the fork tests drive."""
+    if branch == 0:
+        return request_key(seed)
+    return np.asarray(
+        jax.random.fold_in(jax.random.PRNGKey(seed), branch), np.uint32)
 
 
 def key_zeros() -> np.ndarray:
@@ -184,6 +205,17 @@ def argmax_with_margin(scores):
     """(B, V) -> (argmax (B,), top1-top2 margin (B,) in fp32)."""
     top2 = jax.lax.top_k(scores.astype(jnp.float32), 2)[0]
     return jnp.argmax(scores, axis=-1), top2[:, 0] - top2[:, 1]
+
+
+def token_logprob(logits, tok):
+    """(B, V) raw logits + (B,) chosen tokens -> (B,) fp32 log-probability
+    of each chosen token under the UNSCALED model distribution.  Best-of-n
+    ranks branches by the sum of these (the model's own likelihood of the
+    branch), independent of the temperature/filter policy that sampled
+    it."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.take_along_axis(lp, tok[:, None].astype(jnp.int32),
+                               axis=-1)[:, 0]
 
 
 def lockstep_scores(logits, base_key, step, sp: SamplingParams):

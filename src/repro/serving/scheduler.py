@@ -3,10 +3,11 @@
 The serving stack is split in two:
 
 - this module decides WHO runs: `Request` intake and validation, FIFO
-  admission, per-request token budgets, worst-case page reservation and
-  refcounted prompt-prefix sharing (`PageAllocator`), slot assignment and
-  release, completion records and utilization metrics.  Nothing here
-  touches a device buffer.
+  admission, per-request token budgets, and shared-until-written page
+  ownership (`PageAllocator`: refcounted sharing, block-table forking,
+  the copy-on-write transition — prompt-prefix sharing is one special
+  case of it), slot assignment and release, completion records and
+  utilization metrics.  Nothing here touches a device buffer.
 - serving/engine.py decides HOW: each engine owns the device-resident
   decode state (stacked dense rings, the shared page pool + block tables,
   or the seed per-slot caches) and the jitted step functions, and
@@ -43,12 +44,17 @@ Cache layouts (`cache_layout=` on the fused engine):
     per-slot block tables of page ids (vLLM-style).  A `PageAllocator`
     owns page lifetime host-side; a request whose worst case can NEVER
     fit the pool is rejected at submit() instead of stalling the queue
-    head forever.  Requests sharing a common prompt prefix refcount the
-    same pages (with chunked prefill on pure-attention archs the sharer
-    also SKIPS prefilling the shared tokens).  Prefix sharing turns
-    itself off when the logical ring can wrap (a wrapped ring overwrites
-    prefix entries).  Recurrent archs (mamba2 / rwkv6) keep O(1) dense
-    state; hybrid pages only its shared attention leaves.
+    head forever.  Pages are SHARED UNTIL WRITTEN: requests sharing a
+    common prompt prefix refcount the same pages (with chunked prefill
+    on pure-attention archs the sharer also SKIPS prefilling the shared
+    tokens), and `Request.best_of=n` forks n-1 branches off one prefill
+    whose block tables reference every prompt page — a slot about to
+    write a page other holders still reference first copies it
+    (in-dispatch, fused with the token scatter) and repoints only its
+    own block-table entry.  Sharing turns itself off when the logical
+    ring can wrap (a wrapped ring overwrites shared entries).  Recurrent
+    archs (mamba2 / rwkv6) keep O(1) dense state; hybrid pages only its
+    shared attention leaves.
     `kernel="pallas"` swaps the paged decode attention read for the
     Pallas paged-attention kernel (page tiles streamed through the block
     table in-kernel instead of an XLA ring gather); "xla" stays the
@@ -99,7 +105,13 @@ from repro.models.config import ModelConfig
 from repro.serving.engine import DenseEngine, PagedEngine, PerSlotEngine
 from repro.serving.kvcache import DEFAULT_PAGE_SIZE
 from repro.serving.sampling import (GREEDY, SamplingParams, SlotSampling,
-                                    key_zeros, request_key)
+                                    branch_key, key_zeros)
+
+
+class DeadlineExpired(Exception):
+    """A queued or running request's deadline passed before it finished:
+    the scheduler cancelled it (slot + pages reclaimed) instead of
+    burning ticks on tokens nobody will wait for."""
 
 
 @dataclasses.dataclass
@@ -117,6 +129,13 @@ class Request:
     # milliseconds derived from deadline_ms)
     priority: int = 0
     deadline: float | None = None
+    # best-of-n decoding (paged pure-attention layouts only): prefill the
+    # prompt ONCE, fork n-1 extra branches that share every prompt page
+    # (copy-on-write on divergence), decode all n, and record only the
+    # winner by cumulative token logprob.  Branch b's sampling noise is
+    # keyed by branch_key(seed, b), so each branch is token-identical to
+    # an independent request with SamplingParams(seed=seed, branch=b)
+    best_of: int = 1
 
 
 @dataclasses.dataclass
@@ -129,6 +148,9 @@ class Completion:
     # numerical ties, where differently-compiled variants of the same
     # math may legitimately emit different tokens
     margins: list = dataclasses.field(default_factory=list)
+    # per-token log-probability of the emitted token under the RAW
+    # (unscaled) model distribution; best-of-n ranks branches by its sum
+    logprobs: list = dataclasses.field(default_factory=list)
 
 
 def completions_equivalent(a, b, tie_tol: float = 1e-3) -> bool:
@@ -160,15 +182,24 @@ def completions_equivalent(a, b, tie_tol: float = 1e-3) -> bool:
 class PageAllocator:
     """Host-side manager of the shared KV page pool.
 
-    Pages are refcounted so prompt-prefix pages can be shared between
-    requests: full prompt pages are registered under a rolling prefix key
-    (a chain of per-page token tuples), and a later request whose prompt
-    starts with the same pages `acquire`s them instead of allocating
-    copies.  A page returns to the free list when its refcount reaches
-    zero — a prefix page therefore survives any one sharer finishing as
-    long as another still holds it — and its prefix registration is
-    dropped at the same moment, so a later lookup can never hand out a
-    reclaimed page id.  Page 0 is the reserved null page (idle lanes and
+    Ownership model: a page is SHARED until written.  `share` takes one
+    more reference on a live page; `fork` shares a whole block table's
+    worth at a branch point (best-of-n forking); `ensure_private` is the
+    copy-on-write transition — a holder about to WRITE into a page checks
+    it, and if other holders remain it gives up its reference and gets a
+    private replacement page instead (the engine then copies the page's
+    contents in-dispatch and repoints only that holder's block-table
+    entry).  Prompt-prefix sharing is the same path: full prompt pages
+    are registered under a rolling prefix key (a chain of per-page token
+    tuples) and a later request whose prompt starts with the same pages
+    `share`s them instead of allocating copies — prefix pages are never
+    written past the prompt, so they never reach the CoW transition.
+
+    A page returns to the free list when its refcount reaches zero — a
+    shared page therefore survives any one holder finishing as long as
+    another still holds it — and its prefix registration is dropped at
+    the same moment, so a later lookup can never hand out a reclaimed
+    page id.  Page 0 is the reserved null page (idle lanes and
     unallocated block-table entries point at it) and is permanently
     pinned.
 
@@ -207,10 +238,35 @@ class PageAllocator:
         self.peak_in_use = max(self.peak_in_use, self.in_use)
         return pid
 
-    def acquire(self, pid: int):
-        """Take another reference on a live (shared-prefix) page."""
+    def share(self, pid: int):
+        """Take another reference on a live page (prefix sharing and
+        block-table forking both route through here)."""
         assert self.refcount[pid] > 0, f"page {pid} is not live"
         self.refcount[pid] += 1
+
+    def fork(self, pages):
+        """Share every page of a block table at a branch point: the new
+        branch holds one reference on each, and a write into any of them
+        while other holders remain goes through `ensure_private` first."""
+        for pid in pages:
+            self.share(pid)
+
+    def ensure_private(self, pid: int, reserved: int | None = None):
+        """Copy-on-write transition for a holder about to WRITE page
+        `pid`: returns ``(page, copied)``.  Sole holder -> (pid, False),
+        write in place.  Other holders remain -> this holder gives up its
+        reference (the page stays live for them, so no dereg/free edge
+        can fire) and receives a private replacement — `reserved` if the
+        caller pre-allocated one (worst-case admission), else a fresh
+        page — and (new_pid, True) tells the caller to queue the
+        in-dispatch page copy and repoint its own block-table entry."""
+        assert pid != 0, "the null page is never written"
+        assert self.refcount[pid] > 0, f"page {pid} is not live"
+        if self.refcount[pid] == 1:
+            return pid, False
+        new = reserved if reserved is not None else self.alloc()
+        self.refcount[pid] -= 1
+        return new, True
 
     def release(self, pid: int):
         if pid == 0:
@@ -318,6 +374,8 @@ class _BatcherBase:
                     f"{self.capacity}")
             if req.max_new < 1:
                 raise ValueError(f"request {req.rid}: max_new must be >= 1")
+            if req.best_of < 1:
+                raise ValueError(f"request {req.rid}: best_of must be >= 1")
             self._admission_check(req)
             accepted.append(req)
         # atomic: a batch with an invalid request enqueues nothing
@@ -334,12 +392,16 @@ class _BatcherBase:
     def _new_slot_state(self, req: Request, fed0: int = 0) -> dict:
         sp = req.sampling or self.default_sampling
         self._admit_seq += 1
-        return {"emitted": [], "fed": fed0, "margins": [], "sp": sp,
-                "admit_seq": self._admit_seq,
-                # base PRNG key, derived once per request from its seed;
+        return {"emitted": [], "fed": fed0, "margins": [], "logps": [],
+                "sp": sp, "admit_seq": self._admit_seq,
+                # decode ticks run since this (re)admission — a slot is
+                # preemption-eligible only past min_quantum of them
+                "ran": 0,
+                # base PRNG key, derived once per request from its seed
+                # and branch index (branch 0 == the plain seed key);
                 # greedy requests never consume randomness
-                "key": request_key(sp.seed) if sp.temperature > 0
-                else key_zeros()}
+                "key": branch_key(sp.seed, sp.branch)
+                if sp.temperature > 0 else key_zeros()}
 
     # ----------------------------------------------------- sampling state
 
@@ -382,13 +444,19 @@ class _BatcherBase:
     def _finish_if_done(self, s: int):
         req, st = self.slot_req[s], self.slot_state[s]
         if len(st["emitted"]) >= self._budget(req):
-            self.done.append(Completion(
+            self._complete(req, Completion(
                 rid=req.rid, tokens=list(st["emitted"]),
                 prompt_len=len(req.prompt),
-                margins=list(st["margins"])))
+                margins=list(st["margins"]),
+                logprobs=list(st["logps"])))
             self._release_slot(s)
             self.slot_req[s] = None
             self.slot_state[s] = None
+
+    def _complete(self, req: Request, c: Completion):
+        """Hook: record a finished sequence (best-of-n group members are
+        intercepted by the paged batcher's winner selection)."""
+        self.done.append(c)
 
     def _release_slot(self, s: int):
         """Hook: layout-specific reclaim when slot s's sequence finishes."""
@@ -397,21 +465,51 @@ class _BatcherBase:
         """Drop request `rid` at whatever lifecycle stage it is in —
         queued (including preempted-and-requeued), mid-prefill or
         mid-decode.  Its slot and pages are reclaimed immediately and no
-        Completion is recorded.  Returns False when the rid is unknown
-        (never submitted, already finished, or already cancelled)."""
-        for i, req in enumerate(self.queue):
+        Completion is recorded.  A best-of-n request drops EVERY live
+        branch (queued and running members share the rid).  Returns False
+        when the rid is unknown (never submitted, already finished, or
+        already cancelled)."""
+        hit = False
+        for i in range(len(self.queue) - 1, -1, -1):
+            req = self.queue[i]
             if req.rid == rid:
                 self.queue.pop(i)
                 self._resume.pop(id(req), None)
-                return True
+                hit = True
         for s in range(self.n_slots):
             req = self.slot_req[s]
             if req is not None and req.rid == rid:
                 self._release_slot(s)
                 self.slot_req[s] = None
                 self.slot_state[s] = None
-                return True
-        return False
+                hit = True
+        if hit:
+            self._drop_group(rid)
+        return hit
+
+    def _drop_group(self, rid: int):
+        """Hook: forget a cancelled best-of-n group's partial results."""
+
+    def expire_deadlines(self, now: float) -> list:
+        """Cancel every queued or running request whose deadline has
+        already passed (deadlines and `now` are on the same opaque clock
+        — the async frontend uses absolute loop milliseconds).  Slots and
+        pages are reclaimed immediately and no Completion is recorded;
+        the caller fails the expired handles (DeadlineExpired).  Returns
+        the expired rids."""
+        expired = []
+        for req in list(self.queue):
+            if req.deadline is not None and req.deadline <= now \
+                    and req.rid not in expired:
+                expired.append(req.rid)
+        for s in range(self.n_slots):
+            req = self.slot_req[s]
+            if req is not None and req.deadline is not None \
+                    and req.deadline <= now and req.rid not in expired:
+                expired.append(req.rid)
+        for rid in expired:
+            self.cancel(rid)
+        return expired
 
     # --------------------------------------------------------------- loop
 
@@ -465,7 +563,7 @@ class ContinuousBatcher(_BatcherBase):
                  n_pages: int | None = None, share_prefix: bool = True,
                  kernel: str = "xla", allocation: str = "worst_case",
                  default_sampling: SamplingParams | None = None,
-                 mesh=None):
+                 min_quantum: int = 0, mesh=None):
         super().__init__(cfg, params, n_slots=n_slots, capacity=capacity,
                          bos_token=bos_token,
                          default_sampling=default_sampling)
@@ -487,6 +585,18 @@ class ContinuousBatcher(_BatcherBase):
         self.allocation = allocation
         self.prefill_mode = prefill_mode
         self.prefill_chunk = max(1, prefill_chunk)
+        # minimum-run quantum: a freshly admitted/resumed request cannot
+        # be chosen as a preemption victim until it has run this many
+        # decode ticks (0 = off) — high-priority arrival bursts can't
+        # starve a victim before its first page of progress
+        self.min_quantum = max(0, min_quantum)
+        # best-of-n fork bookkeeping: live groups by parent rid, archived
+        # per-branch completions (group_results), page-sharing counters
+        self._groups: dict = {}
+        self.group_results: dict = {}
+        self._cow_reserve: list = [[] for _ in range(n_slots)]
+        self.cow_copies = 0         # in-dispatch CoW page copies queued
+        self.fork_shared_pages = 0  # pages shared across all forks
         if cache_layout == "dense":
             self.engine = DenseEngine(cfg, params, n_slots=n_slots,
                                       capacity=capacity,
@@ -547,13 +657,65 @@ class ContinuousBatcher(_BatcherBase):
         total = min(len(req.prompt) + self._budget(req), self._ring_cap)
         return -(-total // self.engine.page_size)
 
+    def _fork_page(self, req: Request) -> int:
+        """Block-table index of the fork page: the page holding the last
+        prompt token, which every forked branch re-writes on its first
+        tick (re-feeding prompt[-1] to sample its own first token) and
+        therefore always copies-on-write; pages before it stay shared for
+        the group's whole lifetime."""
+        return (len(req.prompt) - 1) // self.engine.page_size
+
+    def _group_pages(self, req: Request) -> int:
+        """Worst-case pages of a whole best_of=n group: the primary's W,
+        plus per branch its private tail past the fork page and one CoW
+        reserve for the fork page itself, plus the primary's own CoW
+        reserve when its first decode write lands in the (shared) fork
+        page (p % page_size != 0)."""
+        W = self._worst_case_pages(req)
+        lw = self._fork_page(req)
+        rsv = 1 if len(req.prompt) % self.engine.page_size else 0
+        return W + (req.best_of - 1) * (W - lw) + rsv
+
     def _admission_check(self, req: Request):
         """Reject at submit() a request whose worst-case page budget can
         NEVER fit the pool — queued, it would stall the FIFO head forever
-        and run() would spin to max_steps completing nothing."""
+        and run() would spin to max_steps completing nothing.  best_of>1
+        additionally requires a forkable layout: shared pages are the
+        fork substrate, so dense rings and O(1) recurrent state are
+        rejected here rather than silently degraded."""
+        if req.best_of > 1:
+            if self.cache_layout != "paged" \
+                    or self.cfg.block_kind != "attention":
+                raise ValueError(
+                    f"request {req.rid}: best_of={req.best_of} needs the "
+                    f"paged pure-attention layout — dense rings and "
+                    f"recurrent O(1) state cannot fork pages")
+            if self._ring_cap < self.capacity:
+                raise ValueError(
+                    f"request {req.rid}: best_of>1 is unsupported when "
+                    f"the logical ring ({self._ring_cap}) can wrap within "
+                    f"capacity {self.capacity} — a wrapped ring would "
+                    f"overwrite the shared fork pages")
+            if self.prefill_mode != "chunked":
+                raise ValueError(
+                    f"request {req.rid}: best_of>1 needs "
+                    f"prefill_mode='chunked' (the fork point is the end "
+                    f"of the primary's prefill)")
+            if req.best_of > self.n_slots:
+                raise ValueError(
+                    f"request {req.rid}: best_of={req.best_of} exceeds "
+                    f"the {self.n_slots}-slot pool — branches decode "
+                    f"concurrently, one slot each")
+            sp = req.sampling or self.default_sampling
+            if sp.branch != 0:
+                raise ValueError(
+                    f"request {req.rid}: best_of>1 derives branch keys "
+                    f"itself — submit with sampling.branch=0")
         if self.cache_layout != "paged":
             return
-        need = self._worst_case_pages(req)
+        need = self._group_pages(req) if req.best_of > 1 \
+            and self.allocation == "worst_case" else \
+            self._worst_case_pages(req)
         if need > self.engine.n_pages - 1:
             raise ValueError(
                 f"request {req.rid}: needs {need} pages but the pool holds "
@@ -571,30 +733,112 @@ class ContinuousBatcher(_BatcherBase):
         return list(req.prompt) + rs[0][:-1]
 
     def _fill_slots(self):
-        for s in range(self.n_slots):
-            if self.slot_req[s] is None and self.queue:
-                fed0 = 0
-                if self.cache_layout == "paged":
-                    admitted = self._admit_paged(s)
-                    if admitted is None:
-                        break  # pool exhausted: FIFO stall until reclaim
-                    req, fed0 = admitted
-                else:
-                    req = self.queue.pop(0)
-                feed = self._feed_tokens(req)
-                rs = self._resume.pop(id(req), None)
-                self.slot_req[s] = req
-                st = self._new_slot_state(req, fed0)
-                if rs is not None:
-                    st["emitted"], st["margins"] = rs
-                self.slot_state[s] = st
-                if self.prefill_mode == "chunked":
-                    self._prefill_slot(s, feed, fresh=rs is None)
-                else:
-                    # prompt (and, on resume, the replayed generated
-                    # tokens) will be fed through decode ticks; zero the
-                    # slot's lanes inside the next fused dispatch
-                    self.engine.mark_reset(s)
+        while self.queue:
+            if self.queue[0].best_of > 1:
+                if not self._admit_group(self.queue[0]):
+                    break  # not enough slots/pages yet: FIFO stall
+                continue
+            s = next((i for i in range(self.n_slots)
+                      if self.slot_req[i] is None), None)
+            if s is None:
+                break
+            fed0 = 0
+            if self.cache_layout == "paged":
+                admitted = self._admit_paged(s)
+                if admitted is None:
+                    break  # pool exhausted: FIFO stall until reclaim
+                req, fed0 = admitted
+            else:
+                req = self.queue.pop(0)
+            self._place(s, req, fed0)
+
+    def _place(self, s: int, req: Request, fed0: int):
+        """Install an admitted request in slot s and run its prefill."""
+        feed = self._feed_tokens(req)
+        rs = self._resume.pop(id(req), None)
+        self.slot_req[s] = req
+        st = self._new_slot_state(req, fed0)
+        if rs is not None:
+            st["emitted"], st["margins"], st["logps"] = rs
+        self.slot_state[s] = st
+        if self.prefill_mode == "chunked":
+            self._prefill_slot(s, feed, fresh=rs is None)
+        else:
+            # prompt (and, on resume, the replayed generated
+            # tokens) will be fed through decode ticks; zero the
+            # slot's lanes inside the next fused dispatch
+            self.engine.mark_reset(s)
+
+    def _admit_group(self, head: Request) -> bool:
+        """Admit a best_of=n request: prefill the prompt ONCE into a
+        primary slot, then fork n-1 branch slots whose block tables share
+        every prompt page.  Each member is a best_of=1 clone with its own
+        branch-folded sampling key, so downstream lifecycle — decode,
+        preemption, recompute-resume, completion — treats branches as
+        ordinary requests; only completion recording regroups them
+        (winner by cumulative logprob).  Returns False (FIFO stall) while
+        fewer than n slots are free or, under worst-case allocation, the
+        pool cannot yet hold the whole group's page budget."""
+        n = head.best_of
+        free = [s for s in range(self.n_slots) if self.slot_req[s] is None]
+        if len(free) < n:
+            return False
+        p = len(head.prompt)
+        ps = self.engine.page_size
+        W = self._worst_case_pages(head)
+        lw = self._fork_page(head)
+        if self.allocation == "worst_case":
+            # atomic: the whole group's worst case must be free up front
+            # (prefix sharing may make the primary cheaper — this check
+            # is conservative, never unsafe)
+            if self.allocator.n_free < self._group_pages(head):
+                return False
+        sp = head.sampling or self.default_sampling
+        members = [dataclasses.replace(
+            head, best_of=1, sampling=dataclasses.replace(sp, branch=b))
+            for b in range(n)]
+        self._groups[head.rid] = {"n": n, "members": members,
+                                  "completions": {}}
+        self.queue[0] = members[0]
+        admitted = self._admit_paged(free[0])
+        if admitted is None:  # lazy pool can't hold the prompt pages yet
+            self.queue[0] = head
+            del self._groups[head.rid]
+            return False
+        s0 = free[0]
+        prim, fed0 = admitted
+        # fork BEFORE the primary's prefill: branches only take page
+        # REFERENCES here — the prefill below writes the shared pages'
+        # contents before any branch's first tick reads them.  (This also
+        # keeps a budget-1 primary sound: it may finish during prefill,
+        # but the branches' refcounts already pin the shared pages.)
+        shared = list(self.slot_pages[s0][:lw + 1])
+        if self.allocation == "worst_case" and p % ps:
+            # the primary's first decode write lands in the shared fork
+            # page: pre-allocate its CoW replacement
+            self._cow_reserve[s0] = [self.allocator.alloc()]
+        for b in range(1, n):
+            sb = free[b]
+            self.allocator.fork(shared)
+            self.fork_shared_pages += len(shared)
+            tail = [self.allocator.alloc() for _ in range(W - 1 - lw)] \
+                if self.allocation == "worst_case" else []
+            self._cow_reserve[sb] = [self.allocator.alloc()] \
+                if self.allocation == "worst_case" else []
+            self.slot_pages[sb] = shared + tail
+            self.engine.fork_slot(s0, sb)
+            for i, pid in enumerate(tail):
+                self.engine.set_page(sb, lw + 1 + i, pid)
+            # the branch re-feeds the last prompt token at position p-1:
+            # its first tick recomputes the fork logits and samples its
+            # OWN first token (branch key) inside the fused dispatch —
+            # writing the fork page, which triggers the CoW copy
+            self.engine.set_pos(sb, p - 1)
+            self.slot_req[sb] = members[b]
+            self.slot_state[sb] = self._new_slot_state(members[b],
+                                                       fed0=p - 1)
+        self._place(s0, prim, fed0)
+        return True
 
     # ------------------------------------------------- paged-pool admission
 
@@ -647,7 +891,7 @@ class ContinuousBatcher(_BatcherBase):
             return None
         self.queue.pop(0)
         for pid in shared:
-            self.allocator.acquire(pid)
+            self.allocator.share(pid)
         pages = shared + [self.allocator.alloc()
                           for _ in range(need - len(shared))]
         self.slot_pages[s] = pages
@@ -663,12 +907,39 @@ class ContinuousBatcher(_BatcherBase):
         if self.cache_layout != "paged":
             return
         # reclaim is fused with slot release: one refcount sweep frees
-        # every non-shared page; the block-table row falls back to the
-        # null page so the idle lane's scatter lands nowhere live
+        # every non-shared page (an unused CoW reserve included); the
+        # block-table row falls back to the null page so the idle lane's
+        # scatter lands nowhere live
         for pid in self.slot_pages[s]:
             self.allocator.release(pid)
+        for pid in self._cow_reserve[s]:
+            self.allocator.release(pid)
         self.slot_pages[s] = []
+        self._cow_reserve[s] = []
         self.engine.release(s)
+
+    # -------------------------------------------------- best-of-n groups
+
+    def _complete(self, req: Request, c: Completion):
+        """Group members detour through their group's collector; when the
+        last branch finishes, the winner by cumulative logprob (ties to
+        the lowest branch index) is recorded under the parent rid and the
+        per-branch completions archived in `group_results`."""
+        g = self._groups.get(c.rid)
+        if g is None or not any(m is req for m in g["members"]):
+            self.done.append(c)
+            return
+        g["completions"][req.sampling.branch] = c
+        if len(g["completions"]) == g["n"]:
+            by_branch = dict(g["completions"])
+            winner = min(by_branch.items(),
+                         key=lambda kv: (-sum(kv[1].logprobs), kv[0]))[1]
+            self.group_results[c.rid] = by_branch
+            del self._groups[c.rid]
+            self.done.append(winner)
+
+    def _drop_group(self, rid: int):
+        self._groups.pop(rid, None)
 
     # ------------------------------------------------------- preemption
 
@@ -691,7 +962,8 @@ class ContinuousBatcher(_BatcherBase):
         self.preemptions += 1
         if st["emitted"]:
             self._resume[id(req)] = (list(st["emitted"]),
-                                     list(st["margins"]))
+                                     list(st["margins"]),
+                                     list(st["logps"]))
         self._release_slot(s)
         self.slot_req[s] = None
         self.slot_state[s] = None
@@ -705,14 +977,45 @@ class ContinuousBatcher(_BatcherBase):
         dl = req.deadline if req.deadline is not None else float("inf")
         return (req.priority, -dl, -st["admit_seq"])
 
-    def _grow_decode_pages(self):
-        """Lazy allocation: before the fused tick, make sure every live
-        slot owns the page its next token lands in, acquiring pages at
-        page boundaries and preempting the most preemptible running
-        request (possibly the grower itself, which then simply leaves the
-        tick) when the pool is exhausted.  Pure host-side bookkeeping —
-        the dispatch count never moves."""
-        if self.cache_layout != "paged" or self.allocation != "lazy":
+    def _alloc_with_preemption(self, s: int) -> bool:
+        """Make sure the pool has a free page for slot s, preempting the
+        most preemptible running request (possibly slot s itself, which
+        then simply leaves the tick) while it is exhausted.  Slots inside
+        their minimum-run quantum are skipped as victims unless EVERY
+        live slot is (liveness: the pool must yield a page).  Returns
+        False when slot s yielded itself."""
+        while self.allocator.n_free == 0:
+            live = [v for v in range(self.n_slots)
+                    if self.slot_req[v] is not None]
+            ripe = [v for v in live
+                    if self.slot_state[v]["ran"] >= self.min_quantum]
+            victim = min(ripe or live, key=self._victim_order)
+            self._preempt(victim)
+            if victim == s:
+                return False  # the grower was the weakest: it yielded
+        return self.slot_req[s] is not None
+
+    def _secure_slot_pages(self):
+        """Before the fused tick, make sure every live slot PRIVATELY
+        owns the page its next token's K/V lands in:
+
+        - lazy growth (PR 5): at a page boundary, append a fresh page,
+          preempting the most preemptible running request on pool
+          exhaustion;
+        - copy-on-write (the fork path): a slot about to write into a
+          page other holders still reference trades its reference for a
+          private replacement (allocator.ensure_private — drawn from the
+          slot's fork-time reserve under worst-case allocation, from the
+          free list with the same preemption escape under lazy), queues
+          an in-dispatch page-to-page copy on the engine, and repoints
+          only its OWN block-table entry.  Prefix-shared prompt pages
+          never reach this transition: decode writes always land past
+          the full prompt pages.
+
+        Pure host-side bookkeeping either way — the fused tick stays at
+        exactly one dispatch (fork-free ticks queue no copies and the
+        step's whole-batch cond skips the copy compute)."""
+        if self.cache_layout != "paged":
             return
         ps = self.engine.page_size
         for s in range(self.n_slots):
@@ -720,21 +1023,30 @@ class ContinuousBatcher(_BatcherBase):
                 continue
             pos = int(self.engine.slot_pos[s])
             idx = (pos % self._ring_cap) // ps
-            if idx < len(self.slot_pages[s]):
-                continue  # page already owned (or the ring wrapped)
-            assert idx == len(self.slot_pages[s]), (s, pos, idx)
-            while self.allocator.n_free == 0:
-                victim = min((v for v in range(self.n_slots)
-                              if self.slot_req[v] is not None),
-                             key=self._victim_order)
-                self._preempt(victim)
-                if victim == s:
-                    break  # the grower was the weakest: it yielded
-            if self.slot_req[s] is None:
+            if idx >= len(self.slot_pages[s]):
+                if self.allocation != "lazy":
+                    continue  # worst case owns every page up front
+                assert idx == len(self.slot_pages[s]), (s, pos, idx)
+                if not self._alloc_with_preemption(s):
+                    continue
+                pid = self.allocator.alloc()
+                self.slot_pages[s].append(pid)
+                self.engine.set_page(s, idx, pid)
                 continue
-            pid = self.allocator.alloc()
-            self.slot_pages[s].append(pid)
-            self.engine.set_page(s, idx, pid)
+            pid = self.slot_pages[s][idx]
+            if pid == 0 or self.allocator.refcount[pid] <= 1:
+                continue  # sole holder (or ring-wrap don't-care): write
+            reserved = None
+            if self._cow_reserve[s]:
+                reserved = self._cow_reserve[s].pop()
+            elif not self._alloc_with_preemption(s):
+                continue  # the writer itself yielded mid-reclaim
+            new, copied = self.allocator.ensure_private(pid, reserved)
+            assert copied, (s, pid)
+            self.slot_pages[s][idx] = new
+            self.engine.set_page(s, idx, new)
+            self.engine.queue_copy(s, pid, new)
+            self.cow_copies += 1
 
     # ------------------------------------------------------------ prefill
 
@@ -764,10 +1076,10 @@ class ContinuousBatcher(_BatcherBase):
         tokens = np.asarray(feed, np.int32)
         n, off, reset = len(tokens), st["fed"], True
         row = self._sampling_row(s)
-        tok = margin = None
+        tok = margin = logp = None
         while off < n:
             size = self._chunk_size(off, n - off)
-            tok, margin = self.engine.prefill_block(
+            tok, margin, logp = self.engine.prefill_block(
                 s, tokens[None, off:off + size], off, reset, row)
             reset = False
             off += size
@@ -781,6 +1093,7 @@ class ContinuousBatcher(_BatcherBase):
         if fresh:
             st["emitted"].append(tok)
             st["margins"].append(margin)
+            st["logps"].append(logp)
             self._finish_if_done(s)
 
     # --------------------------------------------------------------- step
@@ -789,11 +1102,12 @@ class ContinuousBatcher(_BatcherBase):
         """One engine tick: a SINGLE fused dispatch advances every active
         slot by one token (prompt feed in decode prefill mode, replayed
         tokens on a decode-mode resume, or generated — sampled or greedy
-        per the slot's SamplingParams).  Under lazy allocation the tick
-        first secures each live slot's next page (preempting on
-        exhaustion) — still exactly one device dispatch."""
+        per the slot's SamplingParams).  The tick first secures private
+        ownership of each live slot's write page — lazy growth and
+        copy-on-write reclaim, preempting on exhaustion — still exactly
+        one device dispatch."""
         self._fill_slots()
-        self._grow_decode_pages()
+        self._secure_slot_pages()
         active = [s for s in range(self.n_slots)
                   if self.slot_req[s] is not None]
         if not active:
@@ -813,8 +1127,8 @@ class ContinuousBatcher(_BatcherBase):
             emit[s] = st["fed"] == p + len(st["emitted"]) - 1
         active_mask = np.zeros((self.n_slots,), bool)
         active_mask[active] = True
-        nxt, margins = self.engine.decode(toks, active_mask,
-                                          self._sampling_batch())
+        nxt, margins, logps = self.engine.decode(toks, active_mask,
+                                                 self._sampling_batch())
         self.decode_ticks += 1
         self.decode_active_slots += len(active)
         spg = max(1, self.n_slots // self.n_slot_groups)
@@ -825,9 +1139,11 @@ class ContinuousBatcher(_BatcherBase):
         for s in active:
             st = self.slot_state[s]
             st["fed"] += 1
+            st["ran"] += 1
             if emit[s]:
                 st["emitted"].append(int(nxt[s]))
                 st["margins"].append(float(margins[s]))
+                st["logps"].append(float(logps[s]))
                 self._finish_if_done(s)
         return True
 
@@ -850,6 +1166,12 @@ class PerSlotBatcher(_BatcherBase):
     @property
     def caches(self):
         return self.engine.caches
+
+    def _admission_check(self, req: Request):
+        if req.best_of > 1:
+            raise ValueError(
+                f"request {req.rid}: best_of={req.best_of} needs the paged "
+                f"engine's shared page pool — per-slot caches cannot fork")
 
     def _fill_slots(self):
         for s in range(self.n_slots):
@@ -875,11 +1197,13 @@ class PerSlotBatcher(_BatcherBase):
                 tok = int(req.prompt[st["fed"]])
             else:
                 tok = st["emitted"][-1]
-            nxt, margin = self.engine.step(s, tok, self._sampling_row(s))
+            nxt, margin, logp = self.engine.step(s, tok,
+                                                 self._sampling_row(s))
             st["fed"] += 1
             if st["fed"] >= len(req.prompt):
                 st["emitted"].append(nxt)
                 st["margins"].append(margin)
+                st["logps"].append(logp)
                 self._finish_if_done(s)
             self.decode_active_slots += 1
             self.group_active[0] += 1

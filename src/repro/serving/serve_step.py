@@ -16,12 +16,13 @@ import jax.numpy as jnp
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
-from repro.serving.kvcache import (paged_slot_slice, paged_slot_update,
-                                   reset_paged_slots, reset_paged_sub,
-                                   reset_slots, slot_slice, slot_update)
+from repro.serving.kvcache import (cow_copy_pages, paged_slot_slice,
+                                   paged_slot_update, reset_paged_slots,
+                                   reset_paged_sub, reset_slots, slot_slice,
+                                   slot_update)
 from repro.serving.sampling import (SamplingParams, argmax_with_margin,
                                     batched_scores, lockstep_scores,
-                                    row_scores)
+                                    row_scores, token_logprob)
 
 
 def make_serve_step(cfg: ModelConfig, use_pallas: bool = False):
@@ -56,7 +57,7 @@ def make_engine_step(cfg: ModelConfig, use_pallas: bool = False,
     the pool by one token.
 
     step(params, cache, tokens, reset_mask, active_mask, sampling)
-        -> (next_tok, margin, cache)
+        -> (next_tok, margin, logprob, cache)
 
     cache: a stacked pool cache (batch == n_slots) with a (n_slots,) vector
     "pos" — every slot decodes at its own position.  tokens: (n_slots, 1)
@@ -72,7 +73,9 @@ def make_engine_step(cfg: ModelConfig, use_pallas: bool = False,
     argmax of the raw logits.  next_tok: (n_slots,) chosen token per slot;
     margin: (n_slots,) top1-top2 score gap (a near-zero margin marks a
     numerical tie where compiled variants of the same math may legitimately
-    pick different tokens).
+    pick different tokens); logprob: (n_slots,) fp32 log-probability of the
+    chosen token under the RAW (unscaled) distribution — best-of-n ranks
+    branches by its cumulative sum.
 
     plan: optional ShardingPlan — re-pins the cache's slot/KV-head
     partitioning after the in-trace reset and threads activation
@@ -95,9 +98,10 @@ def make_engine_step(cfg: ModelConfig, use_pallas: bool = False,
         if plan is not None:
             scores = plan.rep(scores)
         next_tok, margin = argmax_with_margin(scores)
+        logprob = token_logprob(logits, next_tok)
         new_cache = dict(out.cache,
                          pos=jnp.where(active_mask, out.cache["pos"], pos0))
-        return next_tok, margin, new_cache
+        return next_tok, margin, logprob, new_cache
 
     return step
 
@@ -106,8 +110,8 @@ def make_paged_engine_step(cfg: ModelConfig, use_pallas: bool = False,
                            kernel: str = "xla", plan=None):
     """Fused slot-batched decode against the shared page pool.
 
-    step(params, cache, tokens, pos, block_table, reset_mask, sampling)
-        -> (next_tok, margin, cache)
+    step(params, cache, tokens, pos, block_table, reset_mask,
+         copy_src, copy_dst, sampling) -> (next_tok, margin, logprob, cache)
 
     kernel: how decode attention reads the pool — "xla" gathers each
     lane's logical ring, "pallas" streams page tiles through the block
@@ -123,11 +127,18 @@ def make_paged_engine_step(cfg: ModelConfig, use_pallas: bool = False,
     page 0, so their dead-lane scatter never touches a live page.
     reset_mask: (n_slots,) bool — zeroes refilled slots' dense recurrent
     lanes; pool pages are never zeroed (stale entries are masked by
-    position validity).  sampling: per-slot SlotSampling, fused exactly as
-    in make_engine_step."""
+    position validity).  copy_src / copy_dst: (n_slots,) int32 page ids —
+    copy-on-write pairs resolved host-side by the allocator (a branch
+    about to write into a refcount-shared page): page dst becomes a copy
+    of page src INSIDE this dispatch, before the token scatter that lands
+    on it; rows with dst == 0 are no-ops and a whole-batch cond skips the
+    copy compute on fork-free ticks.  sampling: per-slot SlotSampling,
+    fused exactly as in make_engine_step."""
 
-    def step(params, cache, tokens, pos, block_table, reset_mask, sampling):
+    def step(params, cache, tokens, pos, block_table, reset_mask,
+             copy_src, copy_dst, sampling):
         cache = reset_paged_slots(cfg, cache, reset_mask)
+        cache = cow_copy_pages(cfg, cache, copy_src, copy_dst)
         if plan is not None:
             cache = plan.constrain_paged_cache(cache)
         full = dict(cache, pos=pos, block_table=block_table)
@@ -141,8 +152,9 @@ def make_paged_engine_step(cfg: ModelConfig, use_pallas: bool = False,
         if plan is not None:
             scores = plan.rep(scores)
         next_tok, margin = argmax_with_margin(scores)
+        logprob = token_logprob(logits, next_tok)
         new_cache = {k: v for k, v in out.cache.items() if k != "pos"}
-        return next_tok, margin, new_cache
+        return next_tok, margin, logprob, new_cache
 
     return step
 
@@ -151,7 +163,8 @@ def make_slot_prefill_step(cfg: ModelConfig, use_pallas: bool = False,
                            plan=None):
     """Chunked prefill into one slot of a stacked pool cache.
 
-    step(params, cache, slot, tokens, reset, row) -> (next_tok, margin, cache)
+    step(params, cache, slot, tokens, reset, row)
+        -> (next_tok, margin, logprob, cache)
 
     tokens: (1, S) int32 — a block of prompt tokens written into slot
     `slot`'s cache lanes in ONE device call (instead of S decode steps).
@@ -177,7 +190,8 @@ def make_slot_prefill_step(cfg: ModelConfig, use_pallas: bool = False,
         if plan is not None:
             scores = plan.rep(scores)
         tok, margin = argmax_with_margin(scores[None])
-        return tok[0], margin[0], cache
+        logprob = token_logprob(logits[None], tok)
+        return tok[0], margin[0], logprob[0], cache
 
     return step
 
@@ -187,7 +201,7 @@ def make_paged_prefill_step(cfg: ModelConfig, use_pallas: bool = False,
     """Chunked prefill of one slot against the shared page pool.
 
     step(params, cache, slot, tokens, pos0, bt_row, reset, row)
-        -> (next_tok, margin, cache)
+        -> (next_tok, margin, logprob, cache)
 
     tokens: (1, S) int32 prompt block, written at positions pos0..pos0+S-1
     through `bt_row` ((1, P) block-table row) into the pool.  pos0 > 0 on
@@ -215,7 +229,8 @@ def make_paged_prefill_step(cfg: ModelConfig, use_pallas: bool = False,
         if plan is not None:
             scores = plan.rep(scores)
         tok, margin = argmax_with_margin(scores[None])
-        return tok[0], margin[0], cache
+        logprob = token_logprob(logits[None], tok)
+        return tok[0], margin[0], logprob[0], cache
 
     return step
 

@@ -253,3 +253,97 @@ def test_preempted_request_restreams_nothing(setup):
     for toks, c in zip(streams, comps):
         assert toks == c.tokens and len(toks) == 20
     assert eng.allocator.in_use == 0
+
+
+def test_deadline_expiry_fails_handle_and_reclaims_pages(setup):
+    """A request whose deadline passes mid-flight is auto-cancelled by
+    the engine task: its stream terminates, result() raises
+    DeadlineExpired, its pages are reclaimed, and traffic with a live (or
+    no) deadline still completes."""
+    from repro.serving.scheduler import DeadlineExpired
+
+    cfg, params = setup
+
+    async def go():
+        eng = ContinuousBatcher(cfg, params, n_slots=2, capacity=64,
+                                cache_layout="paged", allocation="lazy")
+        free0 = eng.allocator.n_free
+        async with ServingFrontend(eng, max_pending=8) as fe:
+            # a huge budget with a ~0 deadline: can't finish in time
+            doomed = await fe.submit([1, 2, 3, 4], 40, deadline_ms=1e-6)
+            ok = await fe.submit([5, 6, 7, 8], 6)
+            with pytest.raises(DeadlineExpired):
+                await doomed.result()
+            streamed = [tok async for tok in doomed]
+            comp = await ok.result()
+        return eng, free0, doomed.status, streamed, comp
+
+    eng, free0, status, streamed, comp = asyncio.run(go())
+    assert status == "error"
+    # expiry is enforced between ticks: at most a few tokens streamed
+    # before the cancel, and the stream terminated far short of budget
+    assert len(streamed) < 40
+    assert len(comp.tokens) == 6
+    assert eng.allocator.n_free == free0
+    # the expired rid recorded no Completion
+    assert {c.rid for c in eng.done} == {comp.rid}
+
+
+def test_generous_deadline_expires_nothing(setup):
+    cfg, params = setup
+
+    async def go():
+        eng = ContinuousBatcher(cfg, params, n_slots=2, capacity=64)
+        async with ServingFrontend(eng) as fe:
+            h = await fe.submit([1, 2, 3], 5, deadline_ms=1e9)
+            return await h.result()
+
+    assert len(asyncio.run(go()).tokens) == 5
+
+
+def test_best_of_streams_only_the_winner(setup):
+    """best_of=n on the frontend: the handle stays quiet while branches
+    race, then streams exactly the winning completion's tokens; the
+    result matches a frontend-free forked run token-for-token."""
+    from repro.serving.sampling import SamplingParams
+
+    cfg, params = setup
+    sp = SamplingParams(temperature=0.9, top_k=40, seed=77)
+    prompt = [2, 7, 1, 8, 2, 8]
+
+    async def go():
+        eng = ContinuousBatcher(cfg, params, n_slots=4, capacity=64,
+                                cache_layout="paged")
+        async with ServingFrontend(eng, max_pending=8) as fe:
+            h = await fe.submit(prompt, 8, sampling=sp, best_of=3)
+            streamed = [tok async for tok in h]
+            comp = await h.result()
+        return eng, streamed, comp
+
+    eng, streamed, comp = asyncio.run(go())
+    assert streamed == comp.tokens and len(streamed) == 8
+    assert eng.fork_shared_pages > 0 and eng.cow_copies > 0
+
+    ref = ContinuousBatcher(cfg, params, n_slots=4, capacity=64,
+                            cache_layout="paged")
+    ref.submit([Request(rid=0, prompt=list(prompt), max_new=8,
+                        sampling=sp, best_of=3)])
+    want = ref.run()[0][0]
+    assert comp.tokens == want.tokens
+
+
+def test_best_of_rejected_on_dense_fails_own_handle(setup):
+    cfg, params = setup
+
+    async def go():
+        eng = ContinuousBatcher(cfg, params, n_slots=2, capacity=64)
+        async with ServingFrontend(eng) as fe:
+            bad = await fe.submit([1, 2, 3], 4, best_of=2)
+            good = await fe.submit([1, 2], 3)
+            with pytest.raises(ValueError, match="best_of"):
+                await bad.result()
+            comp = await good.result()
+        return bad.status, comp
+
+    status, comp = asyncio.run(go())
+    assert status == "error" and len(comp.tokens) == 3

@@ -256,3 +256,120 @@ def test_lazy_with_shared_prefix_and_cancel(setup):
     done = _drain(eng)
     assert [c.rid for c in done] == [1] and len(done[0].tokens) == 8
     assert eng.allocator.n_free == free0
+
+
+# ----------------------------------------------------- deadline expiry
+
+
+def test_expire_deadlines_cancels_queued_and_running(setup):
+    """expire_deadlines(now) must auto-cancel every queued AND running
+    request whose deadline passed — slot and pages reclaimed, no
+    Completion — and leave later-deadline traffic untouched."""
+    cfg, params = setup
+    eng = ContinuousBatcher(cfg, params, n_slots=2, capacity=64,
+                            cache_layout="paged", allocation="lazy")
+    free0 = eng.allocator.n_free
+    eng.submit([Request(rid=0, prompt=[1, 2, 3, 4], max_new=24,
+                        deadline=50.0),      # running, expires
+                Request(rid=1, prompt=[5, 6, 7, 8], max_new=8,
+                        deadline=9e9),       # running, survives
+                Request(rid=2, prompt=[9, 10, 11, 12], max_new=8,
+                        deadline=50.0)])     # queued, expires
+    eng.step()
+    assert all(r is not None for r in eng.slot_req) and eng.queue
+    assert eng.expire_deadlines(now=10.0) == []  # nothing due yet
+    assert sorted(eng.expire_deadlines(now=100.0)) == [0, 2]
+    assert eng.queue == [] and eng.slot_req[0] is None
+    done = _drain(eng)
+    assert [c.rid for c in done] == [1] and len(done[0].tokens) == 8
+    assert eng.allocator.n_free == free0  # nothing leaked
+
+
+def test_expired_best_of_group_drops_every_branch(setup):
+    """A forked group whose deadline passes must drop ALL branches (they
+    share the rid) and archive no group result."""
+    cfg, params = setup
+    eng = ContinuousBatcher(cfg, params, n_slots=4, capacity=64,
+                            cache_layout="paged")
+    free0 = eng.allocator.n_free
+    eng.submit([Request(rid=0, prompt=[1, 2, 3, 4], max_new=24,
+                        deadline=50.0,
+                        sampling=SamplingParams(temperature=0.9, seed=1),
+                        best_of=3)])
+    eng.step()
+    assert sum(r is not None for r in eng.slot_req) == 3
+    assert eng.expire_deadlines(now=100.0) == [0]
+    assert all(r is None for r in eng.slot_req)
+    assert eng.allocator.n_free == free0
+    assert not eng._groups and not eng.group_results and not eng.done
+
+
+# --------------------------------------------------- minimum-run quantum
+
+
+def test_min_quantum_blocks_fresh_victims(setup):
+    """With min_quantum on, a just-admitted request cannot be preempted
+    until it has run its quantum of decode ticks — the victim must be a
+    slot that already made progress, even when the fresh slot is the
+    cheaper choice by priority."""
+    cfg, params = setup
+    eng = ContinuousBatcher(cfg, params, n_slots=2, capacity=64,
+                            cache_layout="paged", n_pages=4,
+                            allocation="lazy", min_quantum=6)
+    # rid 0 admits first and runs past its quantum; rid 1 arrives with
+    # LOWER priority (the default victim) and a 14-token prompt, so it
+    # crosses its first page boundary — exhausting the pool — after only
+    # 2 decode ticks, still inside its quantum: rid 0 must yield instead
+    eng.submit([Request(rid=0, prompt=[7, 8, 9, 10], max_new=24,
+                        priority=5)])
+    for _ in range(8):
+        eng.step()
+    eng.submit([Request(rid=1, prompt=list(range(3, 17)), max_new=24,
+                        priority=0)])
+    assert _drive_until_preempted(eng) == 0
+    done = _drain(eng)
+    assert sorted(c.rid for c in done) == [0, 1]
+
+
+def test_min_quantum_no_thrash_on_overload_mix(setup):
+    """The PR 5 overload mix with a quantum: every request must still
+    complete with the same tokens as the unconstrained run, and no slot
+    may be preempted before running its quantum of ticks."""
+    cfg, params = setup
+    ref_eng = ContinuousBatcher(cfg, params, n_slots=2, capacity=64)
+    ref_eng.submit(_reqs(cfg))
+    ref = _drain(ref_eng)
+
+    quantum = 4
+    eng = ContinuousBatcher(cfg, params, n_slots=2, capacity=64,
+                            cache_layout="paged", n_pages=4,
+                            allocation="lazy", min_quantum=quantum)
+
+    orig = eng._preempt
+    runs = []
+
+    def spy(s):
+        runs.append(eng.slot_state[s]["ran"])
+        orig(s)
+
+    eng._preempt = spy
+    eng.submit(_reqs(cfg))
+    out = _drain(eng)
+    assert eng.preemptions > 0
+    # no-thrash: every victim had at least its quantum of decode ticks
+    assert runs and all(r >= quantum for r in runs), runs
+    assert completions_equivalent(out, ref)
+    assert eng.allocator.in_use == 0
+
+
+def test_min_quantum_liveness_when_all_slots_fresh(setup):
+    """Liveness fallback: when EVERY live slot is inside its quantum the
+    pool must still yield a victim rather than deadlock."""
+    cfg, params = setup
+    eng = ContinuousBatcher(cfg, params, n_slots=2, capacity=64,
+                            cache_layout="paged", n_pages=4,
+                            allocation="lazy", min_quantum=10_000)
+    eng.submit(_reqs(cfg))
+    done = _drain(eng)
+    assert eng.preemptions > 0  # fallback fired
+    assert sorted(c.rid for c in done) == [0, 1, 2]

@@ -8,6 +8,7 @@ from repro.configs import get_smoke_config
 from repro.models import params as Pm
 from repro.serving.kvcache import (DEFAULT_PAGE_SIZE, cache_bytes,
                                    paged_attn_layout, paged_cache_bytes)
+from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import (ContinuousBatcher, PageAllocator,
                                      Request, completions_equivalent)
 
@@ -40,7 +41,7 @@ def test_allocator_refcounted_prefix_pages():
     pid = al.alloc()
     al.register_prefix(key, pid)
     assert al.lookup_prefix(key) == pid
-    al.acquire(pid)          # a second sharer
+    al.share(pid)          # a second sharer
     al.release(pid)          # first sharer finishes
     # the page survives and stays shareable while one sharer holds it
     assert al.refcount[pid] == 1 and al.lookup_prefix(key) == pid
@@ -101,7 +102,7 @@ def test_allocator_over_release_asserts():
         al.release(pid)
     # acquiring a dead page is refused too (it is no longer shareable)
     with pytest.raises(AssertionError, match="not live"):
-        al.acquire(pid)
+        al.share(pid)
 
 
 def test_prefix_registry_never_hands_out_reclaimed_pages():
@@ -112,7 +113,7 @@ def test_prefix_registry_never_hands_out_reclaimed_pages():
     key = ((), (1, 2, 3, 4))
     pid = al.alloc()
     al.register_prefix(key, pid)
-    al.acquire(pid)          # second sharer
+    al.share(pid)          # second sharer
     al.release(pid)          # first sharer done — page must stay indexed
     assert al.lookup_prefix(key) == pid
     al.release(pid)          # last sharer done — entry must die
@@ -320,3 +321,95 @@ def test_paged_engine_equivalent_on_skewed_mix(setup):
     assert completions_equivalent(outs["paged"], outs["dense"])
     assert paged.cache_nbytes() < dense.cache_nbytes()
     assert DEFAULT_PAGE_SIZE == paged.page_size
+
+
+# -------------------------------------------------- copy-on-write forking
+
+
+def test_allocator_fork_and_ensure_private():
+    """The CoW ownership rule at the allocator: fork refcounts a block
+    table's worth of pages; ensure_private is identity for a sole holder
+    and swaps reference-for-replacement when other holders remain."""
+    al = PageAllocator(n_pages=8, page_size=16)
+    pages = [al.alloc(), al.alloc()]
+    al.fork(pages)  # a branch now shares both
+    assert all(al.refcount[p] == 2 for p in pages)
+    # shared write triggers the copy transition: the writer gives up its
+    # reference, the page stays live for the other holder
+    new, copied = al.ensure_private(pages[0])
+    assert copied and new not in pages
+    assert al.refcount[pages[0]] == 1 and al.refcount[new] == 1
+    # sole holder writes in place — no page churn
+    same, copied = al.ensure_private(pages[0])
+    assert same == pages[0] and not copied
+    # a caller-reserved replacement page is honored (worst-case admission
+    # pre-allocates the CoW reserve)
+    al.fork([pages[1]])
+    rsv = al.alloc()
+    got, copied = al.ensure_private(pages[1], reserved=rsv)
+    assert copied and got == rsv
+    # the null page is never written
+    with pytest.raises(AssertionError, match="never written"):
+        al.ensure_private(0)
+
+
+def test_fork_shares_pages_and_leaks_nothing(setup):
+    """A best_of group must share all full prompt pages (one physical
+    copy, n references), copy only on write, and return the pool to empty
+    when the group finishes."""
+    cfg, params = setup
+    ps = DEFAULT_PAGE_SIZE
+    prompt = list(range(1, 2 * ps + 4))  # 2 full pages + a partial
+    eng = ContinuousBatcher(cfg, params, n_slots=4, capacity=64,
+                            cache_layout="paged")
+    free0 = eng.allocator.n_free
+    eng.submit([Request(rid=0, prompt=prompt, max_new=6,
+                        sampling=SamplingParams(temperature=0.9, seed=9),
+                        best_of=3)])
+    eng.step()  # admit (prefill once, fork twice) + first decode tick
+    prim, b1, b2 = eng.slot_pages[0], eng.slot_pages[1], eng.slot_pages[2]
+    # the fork page (holding the last prompt token) is already re-written
+    # — and so copied — by the first tick; the FULL prompt pages before it
+    # stay physically shared for the group's whole lifetime
+    full = len(prompt) // ps
+    shared = prim[:full]
+    assert b1[:full] == shared == b2[:full]
+    for p in shared:
+        assert eng.allocator.refcount[p] == 3
+    # past the fork point every branch owns a private page
+    assert len({prim[full], b1[full], b2[full]}) == 3
+    assert eng.prefill_dispatches > 0
+    pre = eng.prefill_dispatches
+    eng.run()
+    assert eng.prefill_dispatches == pre  # branches never re-prefilled
+    # full prefix pages stayed shared for the whole run: only the fork
+    # page (and decode-growth pages) were ever copied
+    assert eng.cow_copies >= 2
+    assert eng.allocator.in_use == 0 and eng.allocator.n_free == free0
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.9])
+def test_fork_parity_oracle(setup, temperature):
+    """Greedy AND sampled: every branch of a forked run token-matches an
+    independent request carrying that branch's key (see
+    test_serving_batched.py for the cross-allocation variant)."""
+    import dataclasses
+    cfg, params = setup
+    sp = SamplingParams(temperature=temperature, top_k=8, seed=321)
+    prompt = list(range(2, 22))
+    fork = ContinuousBatcher(cfg, params, n_slots=3, capacity=48,
+                             cache_layout="paged")
+    fork.submit([Request(rid=5, prompt=list(prompt), max_new=6,
+                         sampling=sp, best_of=3)])
+    fork.run()
+    branches = fork.group_results[5]
+    solo = ContinuousBatcher(cfg, params, n_slots=3, capacity=48,
+                             cache_layout="paged", share_prefix=False)
+    solo.submit([Request(rid=b, prompt=list(prompt), max_new=6,
+                         sampling=dataclasses.replace(sp, branch=b))
+                 for b in range(3)])
+    want = {c.rid: c for c in solo.run()[0]}
+    for b in range(3):
+        assert completions_equivalent(
+            [dataclasses.replace(branches[b], rid=0)],
+            [dataclasses.replace(want[b], rid=0)]), b

@@ -114,3 +114,114 @@ def test_malicious1_marks_exact_fraction(seed, L, frac):
     models = {"W": jax.random.normal(key, (L, 4))}
     _, bad = corrupt_malicious1(key, models, frac)
     assert int(bad.sum()) == int(round(frac * L))
+
+
+# ----------------------------------------------- page-ownership invariants
+
+
+_OPS = st.lists(
+    st.tuples(st.sampled_from(["alloc", "share", "fork", "ensure_private",
+                               "ensure_reserved", "release", "register",
+                               "lookup"]),
+              st.integers(0, 10_000)),
+    min_size=1, max_size=60)
+
+
+@given(n_pages=st.integers(2, 12), ops=_OPS)
+@settings(**_settings)
+def test_page_allocator_invariants(n_pages, ops):
+    """Random interleavings of the allocator's whole surface (alloc /
+    share / fork / ensure_private — reserved and not — / release /
+    prefix register+lookup) must preserve the ownership invariants:
+
+    - conservation: free + live == n_pages - 1, where live counts pages
+      with refcount > 0 (null page excluded);
+    - exclusivity: alloc/ensure_private never hand out a page that is
+      still live, and every live page id is unique on the free list's
+      complement;
+    - the null page 0 keeps refcount 1 forever and is never granted;
+    - the prefix registry never serves a page whose refcount is 0."""
+    from repro.serving.scheduler import PageAllocator
+
+    al = PageAllocator(n_pages=n_pages, page_size=4)
+    live = {}          # pid -> expected refcount
+    registered = {}    # key -> pid we registered
+
+    def check():
+        assert al.refcount[0] == 1
+        assert 0 not in live
+        assert len(al._free) + len(live) == n_pages - 1
+        assert set(al._free).isdisjoint(live)
+        for pid, rc in live.items():
+            assert al.refcount[pid] == rc, pid
+        for key, pid in list(registered.items()):
+            got = al.lookup_prefix(key)
+            if got is not None:
+                assert al.refcount[got] > 0  # never a reclaimed page
+
+    for op, arg in ops:
+        pids = sorted(live)
+        pid = pids[arg % len(pids)] if pids else None
+        if op == "alloc":
+            if al.n_free:
+                new = al.alloc()
+                assert new not in live and new != 0
+                live[new] = 1
+        elif op == "share" and pid is not None:
+            al.share(pid)
+            live[pid] += 1
+        elif op == "fork" and pids:
+            take = pids[:1 + arg % len(pids)]
+            al.fork(take)
+            for p in take:
+                live[p] += 1
+        elif op == "ensure_private" and pid is not None:
+            if live[pid] > 1 and al.n_free == 0:
+                continue  # a real caller secures a free page first
+            new, copied = al.ensure_private(pid)
+            assert copied == (live[pid] > 1)
+            if copied:
+                assert new not in live and new != 0
+                live[pid] -= 1
+                live[new] = 1
+            else:
+                assert new == pid
+        elif op == "ensure_reserved" and pid is not None and al.n_free:
+            rsv = al.alloc()
+            live[rsv] = 1
+            new, copied = al.ensure_private(pid, reserved=rsv)
+            if copied:
+                assert new == rsv
+                live[pid] -= 1
+                if live[pid] == 0:
+                    del live[pid]
+                    registered = {k: v for k, v in registered.items()
+                                  if v != pid}
+            else:
+                assert new == pid and live[pid] == 1
+                al.release(rsv)  # caller returns the unused reserve
+                del live[rsv]
+        elif op == "release" and pid is not None:
+            al.release(pid)
+            live[pid] -= 1
+            if live[pid] == 0:
+                del live[pid]
+                registered = {k: v for k, v in registered.items()
+                              if v != pid}
+        elif op == "register" and pid is not None:
+            key = ((), (arg,))
+            al.register_prefix(key, pid)
+            if al.lookup_prefix(key) == pid:
+                registered[key] = pid
+        elif op == "lookup":
+            al.lookup_prefix(((), (arg,)))
+        check()
+
+    # drain: releasing every remaining reference empties the pool exactly
+    for pid, rc in list(live.items()):
+        for _ in range(rc):
+            al.release(pid)
+    assert al.in_use == 0 and al.n_free == n_pages - 1
+    for key in registered:
+        got = al.lookup_prefix(key)
+        assert got is None or al.refcount[got] > 0

@@ -349,3 +349,107 @@ def test_slot_reset_isolates_sequences():
                             max_new=probe.max_new)])
     got = {c.rid: c.tokens for c in churn.run()[0]}[99]
     assert got == want
+
+
+# --------------------------------------------------- best-of-n fork parity
+
+
+def _branch_clones(prompt, max_new, sp, n):
+    """n independent requests, one per branch key — the fork oracle."""
+    import dataclasses
+    return [Request(rid=b, prompt=list(prompt), max_new=max_new,
+                    sampling=dataclasses.replace(sp, branch=b))
+            for b in range(n)]
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.9])
+@pytest.mark.parametrize("allocation", ["worst_case", "lazy"])
+def test_best_of_fork_parity(temperature, allocation):
+    """Branch b of a best_of=n forked run must be token-identical to an
+    independent request with SamplingParams(seed, branch=b): forking
+    changes where K/V bytes live (shared pages + CoW copies), never what
+    any branch computes.  Greedy (all branches identical) and sampled
+    (branches diverge at the first emitted token), both allocation
+    modes."""
+    import dataclasses
+    cfg, params = _setup("qwen3_0_6b", {})
+    sp = SamplingParams(temperature=temperature, top_k=40, seed=123)
+    prompt = [3, 1, 4, 1, 5, 9, 2, 6]
+    n = 3
+
+    fork = ContinuousBatcher(cfg, params, n_slots=4, capacity=48,
+                             cache_layout="paged", allocation=allocation)
+    fork.submit([Request(rid=0, prompt=list(prompt), max_new=8,
+                         sampling=sp, best_of=n)])
+    done, _ = fork.run()
+    assert len(done) == 1  # only the winner is recorded
+    branches = fork.group_results[0]
+    assert sorted(branches) == list(range(n))
+    assert fork.fork_shared_pages > 0
+    assert fork.cow_copies > 0  # every fork rewrites the fork page
+
+    solo = ContinuousBatcher(cfg, params, n_slots=4, capacity=48,
+                             cache_layout="paged", share_prefix=False)
+    solo.submit(_branch_clones(prompt, 8, sp, n))
+    want = {c.rid: c for c in solo.run()[0]}
+    for b in range(n):
+        assert completions_equivalent(
+            [dataclasses.replace(branches[b], rid=0)],
+            [dataclasses.replace(want[b], rid=0)]), \
+            (b, branches[b].tokens, want[b].tokens)
+    if temperature == 0:
+        # greedy branches are identical; ties resolve to branch 0
+        assert all(branches[b].tokens == branches[0].tokens
+                   for b in range(n))
+    else:
+        assert len({tuple(branches[b].tokens) for b in range(n)}) > 1
+
+
+def test_best_of_winner_has_max_cumulative_logprob():
+    cfg, params = _setup("qwen3_0_6b", {})
+    eng = ContinuousBatcher(cfg, params, n_slots=4, capacity=48,
+                            cache_layout="paged")
+    eng.submit([Request(rid=0, prompt=[5, 2, 8, 1], max_new=6,
+                        sampling=SamplingParams(temperature=1.2, seed=7),
+                        best_of=4)])
+    done, _ = eng.run()
+    branches = eng.group_results[0]
+    best = max(sum(c.logprobs) for c in branches.values())
+    assert sum(done[0].logprobs) == best
+
+
+def test_best_of_single_dispatch_per_tick():
+    """Forking must not un-fuse the engine: CoW copies ride inside the
+    decode dispatch, so dispatch/tick stays exactly 1.00 with a forked
+    group racing ordinary traffic."""
+    cfg, params = _setup("qwen3_0_6b", {})
+    eng = ContinuousBatcher(cfg, params, n_slots=4, capacity=32,
+                            cache_layout="paged")
+    eng.submit([Request(rid=0, prompt=[3, 1, 4, 1, 5], max_new=6,
+                        sampling=SamplingParams(temperature=0.9, seed=3),
+                        best_of=3)]
+               + _workload(cfg, n=3, seed=4))
+    done, steps = eng.run()
+    assert len(done) == 4  # winner + 3 ordinary completions
+    assert eng.cow_copies > 0
+    assert eng.decode_dispatches == steps
+
+
+def test_best_of_rejected_off_the_paged_attention_path():
+    """Dense rings, recurrent O(1) state and the per-slot baseline cannot
+    fork pages: best_of>1 must be rejected at submit()."""
+    req = lambda: Request(rid=0, prompt=[1, 2, 3], max_new=4, best_of=2)
+    cfg, params = _setup("qwen3_0_6b", {})
+    dense = ContinuousBatcher(cfg, params, n_slots=2, capacity=32)
+    with pytest.raises(ValueError, match="best_of"):
+        dense.submit([req()])
+    perslot = PerSlotBatcher(cfg, params, n_slots=2, capacity=32)
+    with pytest.raises(ValueError, match="best_of"):
+        perslot.submit([req()])
+    rcfg, rparams = _setup("rwkv6_7b", {})
+    recur = ContinuousBatcher(rcfg, rparams, n_slots=2, capacity=32,
+                              cache_layout="paged")  # falls back to dense
+    with pytest.raises(ValueError, match="best_of"):
+        recur.submit([req()])
+    # a rejected batch is atomic: nothing was enqueued
+    assert not dense.queue and not perslot.queue and not recur.queue

@@ -75,4 +75,52 @@ def run(quick: bool = False):
     us_k = _timeit(lambda c, d, s: gs_ops.scores_argmax(c, d, s, 0.5)[0],
                    corr, diag, sel)
     rows.append(("kernel_greedy_scores_1024", us_k, "fused scoring+argmax"))
+
+    # paged attention v2: tile-factor sweep and pages-per-slot scaling,
+    # each point vs the jitted XLA ring-gather oracle (ref.py) — kernel
+    # perf tracked independently of end-to-end serving noise
+    from repro.kernels.paged_attention import ops as pa_ops, ref as pa_ref
+
+    B, H, KV, hd, psz = 4, 8, 2, 64, 16
+    import numpy as np
+    for P in ((4,) if quick else (4, 16)):
+        n_pages = 1 + B * P
+        ks = jax.random.split(jax.random.fold_in(key, P), 3)
+        q = jax.random.normal(ks[0], (B, 1, H, hd))
+        kp = jax.random.normal(ks[1], (n_pages, psz, KV, hd))
+        vp = jax.random.normal(ks[2], (n_pages, psz, KV, hd))
+        bt = jnp.asarray(np.random.default_rng(P).permutation(
+            np.arange(1, n_pages)).reshape(B, P), jnp.int32)
+        last = jnp.asarray(np.random.default_rng(P + 1).integers(
+            psz, P * psz, B), jnp.int32)
+        ref_fn = jax.jit(lambda q, kp, vp: pa_ref.reference_paged_attention(
+            q[:, 0], kp, vp, bt, last))
+        us_r = _timeit(ref_fn, q, kp, vp)
+        want = ref_fn(q, kp, vp)
+        for tk in (1, 2, 4):
+            fn = lambda q, kp, vp: pa_ops.paged_attention(
+                q, kp, vp, bt, last, tile_k=tk)
+            us_k = _timeit(fn, q, kp, vp)
+            err = float(jnp.max(jnp.abs(fn(q, kp, vp)[:, 0] - want)))
+            rows.append((f"kernel_paged_attn_p{P}_k{tk}", us_k,
+                         f"ref_us={us_r:.0f};ratio={us_r / us_k:.2f}x;"
+                         f"max_err={err:.1e}"))
+        # fused in-kernel scatter vs the XLA scatter-then-attend oracle
+        S = 4
+        ks = jax.random.split(jax.random.fold_in(key, 100 + P), 3)
+        qb = jax.random.normal(ks[0], (B, S, H, hd))
+        kn = jax.random.normal(ks[1], (B, S, KV, hd))
+        vn = jax.random.normal(ks[2], (B, S, KV, hd))
+        upd = lambda qb, kn, vn, kp, vp: pa_ops.paged_attention_update(
+            qb, kn, vn, kp, vp, bt, last)[0]
+        ref_upd = jax.jit(lambda qb, kn, vn, kp, vp:
+                          pa_ref.reference_paged_update(
+                              qb, kn, vn, kp, vp, bt, last)[0])
+        us_k = _timeit(upd, qb, kn, vn, kp, vp)
+        us_r = _timeit(ref_upd, qb, kn, vn, kp, vp)
+        err = float(jnp.max(jnp.abs(upd(qb, kn, vn, kp, vp)
+                                    - ref_upd(qb, kn, vn, kp, vp))))
+        rows.append((f"kernel_paged_attn_update_p{P}_s{S}", us_k,
+                     f"ref_us={us_r:.0f};ratio={us_r / us_k:.2f}x;"
+                     f"max_err={err:.1e}"))
     return rows

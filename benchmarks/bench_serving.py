@@ -4,8 +4,11 @@ layout on a skewed prompt-length mix, the Pallas paged-attention decode
 kernel vs the XLA ring gather on that same mix, sampled
 (temperature=0.8 / top_k=40) vs greedy decode on the same prompts and
 slots, lazy page allocation (+ preemption) vs worst-case reservation
-on an overloaded pool, and best_of=n CoW-forked decoding (one prompt
-prefill shared by every branch) vs n independent branch-keyed requests.
+on an overloaded pool, best_of=n CoW-forked decoding (one prompt
+prefill shared by every branch) vs n independent branch-keyed requests,
+and the Pallas kernel ladder (serving_pallas_ladder: fused in-kernel
+K/V scatter, multi-page tiles, S>1 chunked-prefill blocks — greedy,
+sampled, and direct-kernel equivalence vs the XLA path and ref.py).
 
 Reports decode tokens/sec, jitted device dispatches per engine tick (the
 fused engine issues exactly ONE decode dispatch per tick — greedy OR
@@ -339,6 +342,76 @@ def run(quick: bool = False):
         f";fork_tok_s={f_tok / f_s:.1f};solo_tok_s={s_tok / s_s:.1f}"
         f";fork_prefill_disp={fork_eng.prefill_dispatches - fp0}"
         f";solo_prefill_disp={solo_eng.prefill_dispatches - sp0}"))
+
+    # ---- Pallas paged-attention v2 ladder: one gated row per rung.
+    # Rung 1 (fused scatter): pallas decode issues NO separate XLA pool
+    # scatter — token parity with the XLA path on the skewed mix, greedy
+    # and sampled, at 1.00 decode dispatch/tick.  Rung 2 (multi-page
+    # tiles): direct kernel timing tile_k=4 vs tile_k=1 on the same page
+    # geometry, equivalence vs ref.reference_paged_attention.  Rung 3
+    # (S>1 blocks): chunked prefill runs through the kernel — pallas
+    # chunked prefill vs XLA chunked prefill token parity.  Off-TPU the
+    # kernel interprets, so tok/s ratios are trajectory traces; the gated
+    # fields are the equivalence flags and disp/tick (check_serving.py).
+    from repro.kernels.paged_attention import ops as pa_ops, ref as pa_ref
+
+    n_slots, capacity = (4, 128) if quick else (8, 128)
+    pages_per_slot, _ = paged_attn_layout(cfg, capacity)
+    n_pages = 1 + n_slots * pages_per_slot // 4
+    lad_kw = dict(n_slots=n_slots, capacity=capacity, cache_layout="paged",
+                  n_pages=n_pages, prefill_mode="chunked")
+    lx = ContinuousBatcher(cfg, params, kernel="xla", **lad_kw)
+    lp = ContinuousBatcher(cfg, params, kernel="pallas", **lad_kw)
+    warm = _skewed_workload(cfg.vocab_size, max(4, n_slots), seed=99)
+    for eng in (lx, lp):
+        _drive(eng, _clone(warm))
+    mix = _skewed_workload(cfg.vocab_size, n_skew)
+    x_done, x_tok, x_s, _, _ = _drive(lx, _clone(mix))
+    p_done, p_tok, p_s, p_ticks, p_disp = _drive(lp, _clone(mix))
+    greedy_equiv = completions_equivalent(p_done, x_done)
+    sx_done, _, _, _, _ = _drive(lx, _sampled(_clone(mix)))
+    sp_done, _, _, _, _ = _drive(lp, _sampled(_clone(mix)))
+    sampled_equiv = completions_equivalent(sp_done, sx_done)
+
+    # rung 2: direct kernel point — tile_k sweep on the engine's page
+    # geometry, checked against the jnp ring-gather oracle
+    psz = lp.page_size
+    P, B, KV = 4, 4, cfg.n_kv_heads
+    hd, H = cfg.head_dim, cfg.n_heads
+    kp = 1 + B * P
+    rng = np.random.default_rng(5)
+    import jax.numpy as jnp
+    qk = jax.random.normal(jax.random.PRNGKey(5), (B, 1, H, hd))
+    kpool = jax.random.normal(jax.random.PRNGKey(6), (kp, psz, KV, hd))
+    vpool = jax.random.normal(jax.random.PRNGKey(7), (kp, psz, KV, hd))
+    bt = jnp.asarray(rng.permutation(np.arange(1, kp)).reshape(B, P),
+                     jnp.int32)
+    last = jnp.asarray(rng.integers(psz, P * psz, B), jnp.int32)
+    want = pa_ref.reference_paged_attention(qk[:, 0], kpool, vpool, bt, last)
+    tile_us = {}
+    for tk in (1, 4):
+        fn = lambda: pa_ops.paged_attention(qk, kpool, vpool, bt, last,
+                                            tile_k=tk)
+        jax.block_until_ready(fn())  # compile
+        t0 = time.time()
+        for _ in range(3):
+            out = fn()
+        jax.block_until_ready(out)
+        tile_us[tk] = (time.time() - t0) / 3 * 1e6
+    kernel_err = float(jnp.max(jnp.abs(out[:, 0] - want)))
+    kernel_equiv = kernel_err < 2e-3
+
+    rows.append((
+        "serving_pallas_ladder",
+        p_s / max(1, p_tok) * 1e6,
+        f"slots={n_slots};tok={p_tok};greedy_equiv={greedy_equiv}"
+        f";sampled_equiv={sampled_equiv};kernel_ref_equiv={kernel_equiv}"
+        f";kernel_ref_max_err={kernel_err:.1e}"
+        f";pallas_tok_s={p_tok / p_s:.1f};xla_tok_s={x_tok / x_s:.1f}"
+        f";pallas_over_xla={(p_tok / p_s) / (x_tok / x_s):.2f}x"
+        f";tile4_over_tile1={tile_us[1] / tile_us[4]:.2f}x"
+        f";pallas_disp_per_tick={p_disp / max(1, p_ticks):.4f}"
+        f";prefill=chunked;backend={jax.default_backend()}"))
 
     rows.append(_sharded_row(quick))
     return rows

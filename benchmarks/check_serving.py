@@ -18,6 +18,11 @@ fails on any of:
   `SamplingParams(seed, branch=b)` request), or its `shared_pages` not
   positive (forked admission no longer sharing prompt pages — every
   branch paying its own prefill defeats the point of forking);
+- the `serving_pallas_ladder` row missing, or any of its `*equiv`
+  fields not True — a Pallas kernel-ladder rung (fused in-kernel K/V
+  scatter, multi-page tiles, S>1 block prefill) diverging from the XLA
+  path or from ref.reference_paged_attention; its `pallas_disp_per_tick`
+  rides the fused-dispatch gate like every other row;
 - any `*sharded_equiv` field not True — the mesh-sharded engines
   diverging from the single-device trajectory beyond argmax-tie
   tolerance on the (2, 2) debug mesh (an artifact with NO
@@ -151,6 +156,26 @@ def _check_fork(rows: dict, bad: list) -> int:
     return 1
 
 
+def _check_ladder(rows: dict, bad: list) -> int:
+    """The Pallas kernel-ladder row must be present and every rung's
+    equivalence flag True: greedy and sampled token parity with the XLA
+    path (fused in-kernel scatter producing the same trajectory), and the
+    direct kernel point agreeing with ref.reference_paged_attention.  Its
+    pallas_disp_per_tick rides the repo-wide <= 1.00 fused-dispatch
+    gate."""
+    fields = rows.get("serving_pallas_ladder")
+    if fields is None:
+        return 0
+    for key, val in fields.items():
+        if not key.endswith("equiv"):
+            continue
+        if str(val) != "True":
+            bad.append(("serving_pallas_ladder", key,
+                        f"{val!r} — a Pallas ladder rung diverged from "
+                        f"its XLA / reference oracle"))
+    return 1
+
+
 def _check_baseline(quick, rows: dict, baseline_path: str, bad: list) -> int:
     """Compare every engine-throughput field (``*tok_s``, perslot baseline
     exempt) against the committed baseline; tolerate MAX_TOKS_DROP.
@@ -210,6 +235,7 @@ def check(path: str, baseline_path: str = BASELINE) -> int:
     n_over = _check_overload(rows, bad)
     n_shard = _check_sharded(rows, bad)
     n_fork = _check_fork(rows, bad)
+    n_ladder = _check_ladder(rows, bad)
     n_base = _check_baseline(quick, rows, baseline_path, bad)
     if not n_disp:
         print(f"check_serving: no fused disp_per_tick fields in {path} — "
@@ -228,6 +254,11 @@ def check(path: str, baseline_path: str = BASELINE) -> int:
     if not n_fork:
         print(f"check_serving: no serving_best_of_fork row in {path} — "
               "the best-of fork bench row was renamed or dropped",
+              file=sys.stderr)
+        return 1
+    if not n_ladder:
+        print(f"check_serving: no serving_pallas_ladder row in {path} — "
+              "the Pallas kernel-ladder bench row was renamed or dropped",
               file=sys.stderr)
         return 1
     if n_base == 0 and os.path.exists(baseline_path):
@@ -250,7 +281,8 @@ def check(path: str, baseline_path: str = BASELINE) -> int:
           f"<= {MAX_BYTES_RATIO}; {n_over} overload rows with "
           f"lazy_occupancy > worstcase_occupancy; {n_shard} sharded "
           f"equivalence fields all True; best-of fork row equivalent "
-          f"and sharing pages; {base_msg}")
+          f"and sharing pages; pallas ladder rungs all equivalent; "
+          f"{base_msg}")
     return 0
 
 

@@ -175,13 +175,15 @@ def attention_block(p, x, cfg: ModelConfig, *, positions=None, cache=None,
     (B,) vector of per-sequence positions (the slot-batched serving engine);
     decode accepts S >= 1 tokens (chunked prefill writes a whole block).
 
-    paged_kernel: "xla" (default) reads the paged pool by gathering each
-    lane's logical ring into a (B, T, KV, hd) tensor; "pallas" runs the
-    paged-attention decode kernel (kernels/paged_attention) on eligible
-    dispatches — single-token, default positions, no M-RoPE/chunked-local
-    masking — streaming page tiles through the block table instead.
-    Ineligible shapes (multi-token prefill blocks) fall back to "xla", so
-    both settings are token-equivalent end to end.
+    paged_kernel: "xla" (default) scatters the S new K/V rows into the
+    pool and reads it back by gathering each lane's logical ring into a
+    (B, T, KV, hd) tensor; "pallas" runs the v2 paged-attention kernel
+    (kernels/paged_attention) — the scatter is FUSED into the kernel's
+    page-streaming pass (no separate pool write) and any S >= 1 block
+    with 1-D positions is eligible, so decode, chunked prefill, and
+    resume-recompute all go through it.  Still XLA-only: M-RoPE (3-D
+    positions), chunked-local masking, mesh sharding, S > ring length —
+    those fall back, so both settings stay token-equivalent end to end.
 
     shard: optional serving.sharding.ShardingPlan — pins q/k/v, the cache
     writes, and the attention output with with_sharding_constraint (batch
@@ -264,44 +266,51 @@ def attention_block(p, x, cfg: ModelConfig, *, positions=None, cache=None,
         b_idx = jnp.arange(B)[:, None]
         out = None
         if paged:
-            # paged pool: scatter the S new tokens through the block table
-            # into the shared flat pool, then read the pool back for
-            # attention — either the Pallas decode kernel (page tiles
-            # streamed through the block table inside the kernel) or an
-            # XLA gather of this lane's whole logical ring.  Unallocated
-            # table entries point at the null page 0; its (garbage)
-            # entries sit at ring indices past `last` and are cut by the
-            # validity mask.
+            # paged pool: the S new tokens land in the shared pool through
+            # the block table, then attention reads the pool back.  Two
+            # paths: the Pallas v2 kernel fuses the scatter INTO the same
+            # grid pass that streams page tiles through the block table
+            # (no separate pool scatter, no (B, T, KV, hd) gather); the
+            # XLA path scatters into the flat pool and gathers each lane's
+            # whole logical ring.  Unallocated table entries point at the
+            # null page 0; its (garbage) entries sit at ring indices past
+            # `last` and are cut by the validity mask either way.
             bt = cache["block_table"]  # (B, P) page ids
             psz = cache["k"].shape[1]
             T = bt.shape[1] * psz
-            slots = abs_pos % T
-            flat = (-1,) + cache["k"].shape[2:]
-            w_idx = bt[b_idx, slots // psz] * psz + slots % psz  # (B, S)
-            store_k = cache["k"].reshape(flat).at[w_idx].set(
-                k.astype(kv_dtype))
-            store_v = cache["v"].reshape(flat).at[w_idx].set(
-                v.astype(kv_dtype))
-            pool_k = store_k.reshape(cache["k"].shape)
-            pool_v = store_v.reshape(cache["v"].shape)
-            if shard is not None:  # pool: (n_pages, psz, KV, hd)
-                pool_k = shard.act(pool_k, heads=2)
-                pool_v = shard.act(pool_v, heads=2)
-            if (paged_kernel == "pallas" and S == 1 and default_pos
-                    and not cfg.mrope and not cfg.chunked_attention):
+            if (paged_kernel == "pallas" and shard is None
+                    and not cfg.mrope and not cfg.chunked_attention
+                    and positions.ndim == 2 and S <= T):
+                # eligible for the kernel: any S block (decode, chunked
+                # prefill, resume-recompute), default or per-row 1-D
+                # positions.  Still XLA-only: M-RoPE (3-D positions),
+                # chunked-local masking, mesh sharding (the kernel is a
+                # single-device program), S > ring.
                 from repro.kernels.paged_attention import ops as pa_ops
 
-                out = pa_ops.paged_attention(
-                    q, pool_k, pool_v, bt, abs_pos[:, -1],
-                    window=cfg.sliding_window)
+                out, store_k, store_v = pa_ops.paged_attention_update(
+                    q, k, v, cache["k"], cache["v"], bt, abs_pos[:, -1],
+                    window=cfg.sliding_window,
+                    q_positions=None if default_pos else positions)
             else:
+                slots = abs_pos % T
+                flat = (-1,) + cache["k"].shape[2:]
+                w_idx = bt[b_idx, slots // psz] * psz + slots % psz  # (B, S)
+                fk = cache["k"].reshape(flat).at[w_idx].set(
+                    k.astype(kv_dtype))
+                fv = cache["v"].reshape(flat).at[w_idx].set(
+                    v.astype(kv_dtype))
+                store_k = fk.reshape(cache["k"].shape)
+                store_v = fv.reshape(cache["v"].shape)
+                if shard is not None:  # pool: (n_pages, psz, KV, hd)
+                    store_k = shard.act(store_k, heads=2)
+                    store_v = shard.act(store_v, heads=2)
                 ring = jnp.arange(T)
                 g_idx = bt[:, ring // psz] * psz + ring % psz  # (B, T)
-                ck, cv = store_k[g_idx], store_v[g_idx]  # (B, T, KV, hd)
+                ck, cv = fk[g_idx], fv[g_idx]  # (B, T, KV, hd)
                 if shard is not None:
                     ck = shard.act(ck, batch=0, heads=2)
                     cv = shard.act(cv, batch=0, heads=2)
-            store_k, store_v = pool_k, pool_v
         else:
             T = cache["k"].shape[1]
             slots = abs_pos % T  # ring writes; capacity == window when windowed

@@ -163,9 +163,12 @@ def forward(params, cfg: ModelConfig, tokens, *, patch_embeds=None,
             paged_kernel: str = "xla", shard=None) -> ForwardOut:
     """Training (cache=None, full sequence) or decode (cache set, S>=1).
 
-    paged_kernel: paged-pool decode attention implementation — "xla"
-    (ring gather) or "pallas" (kernels/paged_attention); only consulted
-    when the cache carries a block table (see layers.attention_block).
+    paged_kernel: paged-pool attention implementation — "xla" (pool
+    scatter + ring gather) or "pallas" (kernels/paged_attention v2: the
+    S new K/V rows are written in-kernel and any S>=1 block with 1-D
+    positions runs through it — decode AND chunked prefill); only
+    consulted when the cache carries a block table (eligibility and the
+    XLA fallback rules live in layers.attention_block).
 
     shard: optional serving.sharding.ShardingPlan — constrains the
     residual stream's batch dim to the data axes and the attention head

@@ -61,11 +61,23 @@ Layer split (who may run vs who runs vs how it runs):
   pool in ONE dispatch per tick.  `PagedEngine` takes a
   ``kernel="xla"|"pallas"`` knob (also on `ContinuousBatcher`): "xla" —
   the default and the equivalence oracle — gathers each lane's logical
-  ring; "pallas" runs the paged-attention decode kernel
-  (repro.kernels.paged_attention), streaming K/V page tiles through the
-  block table in-kernel (scalar-prefetch index maps, flash-style online
-  softmax, GQA grouping, position-validity masking).  Both stay inside
-  the same single fused dispatch per tick and are token-equivalent.
+  ring and scatters the new K/V rows with an XLA `.at[].set`; "pallas"
+  runs the paged-attention v2 kernel (repro.kernels.paged_attention),
+  which streams K/V page tiles through the block table in-kernel
+  (scalar-prefetch index maps, flash-style online softmax, GQA grouping,
+  position-validity masking) AND fuses the new rows' pool scatter into
+  the same pass (`paged_attention_update` aliases the pools in-place —
+  no separate scatter dispatch, verified by an HLO oracle in tests).
+  The kernel takes S>=1 query blocks with per-row causal/window masking,
+  so chunked prefill and preemption resume-recompute run through it too;
+  it falls back to the XLA path only for M-RoPE, chunked-local
+  attention masking, mesh sharding, or blocks longer than the ring.
+  Ordering contract with CoW: `cow_copy_pages` runs BEFORE the forward
+  inside the same fused tick, and `ensure_private` guarantees every
+  page written in a tick is private to one slot — so the in-kernel
+  write never races a copy or another slot's read.  Both kernels stay
+  inside the same single fused dispatch per tick and are
+  token-equivalent (greedy, sampled, and best-of fork trajectories).
 - ``sampling`` — the decode-policy kernel.  Per-slot temperature /
   top-k / top-p sampling expressed as Gumbel-max over filtered scaled
   logits, fused INSIDE the engine dispatch: per-slot base PRNG keys and

@@ -184,11 +184,15 @@ class PagedEngine:
     layer's PageAllocator; this engine owns the device pool and the block
     table the dispatches scatter through.
 
-    kernel: decode-attention pool read — "xla" (default, the equivalence
-    oracle: gather each lane's logical ring) or "pallas" (the
-    kernels/paged_attention decode kernel: page tiles streamed through
-    the block table in-kernel).  Both run inside the same single fused
-    dispatch per tick and are token-equivalent."""
+    kernel: decode-attention pool read and write — "xla" (default, the
+    equivalence oracle: gather each lane's logical ring, scatter the new
+    rows with `.at[].set`) or "pallas" (the kernels/paged_attention v2
+    kernel: page tiles streamed through the block table in-kernel with
+    the new rows' pool scatter fused into the same pass; decode ticks
+    AND chunked-prefill / resume blocks run through it).  Both run
+    inside the same single fused dispatch per tick and are
+    token-equivalent.  Block tables and positions are int32 at
+    construction — dispatch-side code assumes it and never casts."""
 
     layout = "paged"
 

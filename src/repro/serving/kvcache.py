@@ -293,7 +293,10 @@ def cow_copy_pages(cfg: ModelConfig, cache, copy_src, copy_dst):
     (copy_src[i], copy_dst[i]) with dst > 0, page dst of each shared pool
     becomes a copy of page src — the branch that is about to write into a
     refcount-shared page gets its private copy and the token scatter that
-    follows in the same dispatch lands on it.  Rows with dst == 0 are
+    follows in the same dispatch lands on it (on both kernels: the XLA
+    `.at[].set` scatter and the Pallas in-kernel fused write each run
+    AFTER this copy in the forward, so ordering holds regardless of
+    which path writes the pool).  Rows with dst == 0 are
     no-ops (page 0 is the null page: src is forced to 0 too, so the
     gather/scatter is the identity on the null page).  A whole-batch
     ``cond`` skips the copy compute entirely on ticks where no slot forked

@@ -113,10 +113,15 @@ def make_paged_engine_step(cfg: ModelConfig, use_pallas: bool = False,
     step(params, cache, tokens, pos, block_table, reset_mask,
          copy_src, copy_dst, sampling) -> (next_tok, margin, logprob, cache)
 
-    kernel: how decode attention reads the pool — "xla" gathers each
-    lane's logical ring, "pallas" streams page tiles through the block
-    table inside kernels/paged_attention (one fused dispatch either way;
-    the XLA path is the default and the equivalence oracle).
+    kernel: how decode attention reads AND writes the pool — "xla"
+    gathers each lane's logical ring and scatters the new K/V rows with
+    `.at[].set`; "pallas" streams page tiles through the block table
+    inside kernels/paged_attention with the new rows' scatter fused
+    into the same kernel pass (in-place pool aliasing — no separate
+    scatter op in the forward).  One fused dispatch either way; the XLA
+    path is the default and the equivalence oracle.  The CoW copy below
+    runs BEFORE the forward, so an in-kernel write always lands on the
+    branch's private page.
 
     cache: a paged pool cache (kvcache.init_paged_cache) — attention K/V in
     shared (n_pages, page_size, KV, hd) pools, hybrid recurrent state in
@@ -206,7 +211,11 @@ def make_paged_prefill_step(cfg: ModelConfig, use_pallas: bool = False,
     tokens: (1, S) int32 prompt block, written at positions pos0..pos0+S-1
     through `bt_row` ((1, P) block-table row) into the pool.  pos0 > 0 on
     the first block resumes behind a refcount-shared prompt prefix whose
-    pages an earlier request already wrote.  reset: traced bool — zero the
+    pages an earlier request already wrote.  kernel="pallas" runs the
+    whole S-token block through the paged-attention kernel (S>1 query
+    block, write fused) instead of the XLA scatter+gather — so chunked
+    prefill and preemption resume-recompute take the same code path the
+    decode tick does.  reset: traced bool — zero the
     slot's dense recurrent lanes (hybrid) on a request's first block; pool
     pages need no zeroing.  row: scalar-leaf SlotSampling, as in
     make_slot_prefill_step."""

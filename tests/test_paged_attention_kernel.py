@@ -151,3 +151,237 @@ def test_matches_layers_xla_gather_path():
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(want, np.float32),
                                rtol=2e-6, atol=1e-5)
+
+
+# ------------------------------------------------------ v2: S>1 query blocks
+
+
+def _block_setup(key, B, S, H, KV, hd, n_pages, psz=PSZ):
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k_pool = jax.random.normal(ks[1], (n_pages, psz, KV, hd))
+    v_pool = jax.random.normal(ks[2], (n_pages, psz, KV, hd))
+    k_new = jax.random.normal(ks[3], (B, S, KV, hd))
+    v_new = jax.random.normal(ks[4], (B, S, KV, hd))
+    return q, k_pool, v_pool, k_new, v_new
+
+
+@pytest.mark.parametrize("S", [2, 5, 16])
+@pytest.mark.parametrize("window", [0, 20])
+def test_s_block_parity(S, window):
+    """S>1 query blocks (chunked prefill / resume-recompute shapes) match
+    the block oracle, per-row causal masking included."""
+    B, H, KV, hd, P = 3, 4, 2, 64, 3
+    q, kp, vp, _, _ = _block_setup(jax.random.PRNGKey(10), B, S, H, KV,
+                                   hd, 10)
+    bt = jnp.asarray(np.random.default_rng(1).permutation(
+        np.arange(1, 10)).reshape(B, P), jnp.int32)
+    last = jnp.array([S - 1, S + 3, 60], jnp.int32)
+    out = pa_ops.paged_attention(q, kp, vp, bt, last, window=window)
+    want = pa_ref.reference_paged_attention_block(q, kp, vp, bt, last,
+                                                  window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-6, atol=1e-5)
+
+
+def test_intra_block_causality():
+    """Row s of an S-token fused block must equal token s of S sequential
+    single-token fused calls — the strongest intra-block causality oracle
+    (later rows see earlier rows' K/V, never the reverse).  Scenarios obey
+    the engine's block contract — a block's writes never evict ring
+    entries its own earlier rows still attend (no-wrap, and wrap under a
+    window that already excludes the evicted positions); outside that
+    contract scatter-then-attend (XLA and kernel alike) legitimately
+    differs from sequential decode."""
+    B, S, H, KV, hd, P = 2, 4, 4, 2, 64, 3
+    window = 8  # < T - S: wrapped-over positions are already out of window
+    q, kp, vp, kn, vn = _block_setup(jax.random.PRNGKey(11), B, S, H, KV,
+                                     hd, 8)
+    bt = jnp.array([[1, 2, 3], [4, 5, 6]], jnp.int32)
+    last = jnp.array([S + 6, 3 * P * PSZ + S - 1], jnp.int32)
+    out, okp, ovp = pa_ops.paged_attention_update(q, kn, vn, kp, vp, bt,
+                                                  last, window=window)
+    skp, svp = kp, vp
+    for s in range(S):
+        step_out, skp, svp = pa_ops.paged_attention_update(
+            q[:, s:s + 1], kn[:, s:s + 1], vn[:, s:s + 1], skp, svp, bt,
+            last - (S - 1 - s), window=window)
+        np.testing.assert_allclose(np.asarray(out[:, s], np.float32),
+                                   np.asarray(step_out[:, 0], np.float32),
+                                   rtol=2e-6, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(okp), np.asarray(skp))
+    np.testing.assert_array_equal(np.asarray(ovp), np.asarray(svp))
+
+
+def test_nondefault_q_positions():
+    """Explicit per-row query positions (the non-default-pos path that v1
+    forced onto XLA) mask against the same block table."""
+    B, S, H, KV, hd, P = 2, 3, 4, 2, 64, 3
+    q, kp, vp, _, _ = _block_setup(jax.random.PRNGKey(12), B, S, H, KV,
+                                   hd, 8)
+    bt = jnp.array([[1, 2, 3], [4, 5, 6]], jnp.int32)
+    last = jnp.array([30, 9], jnp.int32)
+    qpos = jnp.array([[5, 17, 30], [0, 4, 9]], jnp.int32)
+    out = pa_ops.paged_attention(q, kp, vp, bt, last, window=12,
+                                 q_positions=qpos)
+    want = pa_ref.reference_paged_attention_block(
+        q, kp, vp, bt, last, window=12, q_positions=qpos)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-6, atol=1e-5)
+
+
+# ------------------------------------------------- v2: fused K/V scatter
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_scatter_pool_exact(dtype):
+    """paged_attention_update must return pools BYTE-EQUAL to the XLA
+    scatter (`.at[w_idx].set`) models/layers.py used to pay as a separate
+    dispatch, and attention over them must match the oracle — including
+    the narrower-kv-dtype round trip."""
+    B, S, H, KV, hd, P = 3, 6, 4, 2, 64, 3
+    q, kp, vp, kn, vn = _block_setup(jax.random.PRNGKey(13), B, S, H, KV,
+                                     hd, 10)
+    kp, vp = kp.astype(dtype), vp.astype(dtype)
+    bt = jnp.asarray(np.random.default_rng(2).permutation(
+        np.arange(1, 10)).reshape(B, P), jnp.int32)
+    last = jnp.array([S - 1, 40, 2 * P * PSZ + 3], jnp.int32)
+    out, okp, ovp = pa_ops.paged_attention_update(q, kn, vn, kp, vp, bt,
+                                                  last, window=10)
+    want, wkp, wvp = pa_ref.reference_paged_update(q, kn, vn, kp, vp, bt,
+                                                   last, window=10)
+    np.testing.assert_array_equal(np.asarray(okp), np.asarray(wkp))
+    np.testing.assert_array_equal(np.asarray(ovp), np.asarray(wvp))
+    tol = 2e-6 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 5)
+
+
+def test_fused_scatter_never_touches_unwritten_pages():
+    """Pages outside the write window — shared prompt-prefix pages under
+    CoW — must come back bit-identical: the in-kernel scatter's write
+    mask is what keeps copy-on-write sound."""
+    B, S, H, KV, hd, P = 2, 2, 4, 2, 64, 3
+    q, kp, vp, kn, vn = _block_setup(jax.random.PRNGKey(14), B, S, H, KV,
+                                     hd, 8)
+    # both slots share page 7 as their (read-only) first page
+    bt = jnp.array([[7, 2, 3], [7, 4, 5]], jnp.int32)
+    last = jnp.array([PSZ + 3, PSZ + 8], jnp.int32)  # writes land on page 2/4
+    _, okp, ovp = pa_ops.paged_attention_update(q, kn, vn, kp, vp, bt, last)
+    for page in (0, 1, 6, 7):  # null, unreferenced, shared prefix
+        np.testing.assert_array_equal(np.asarray(okp[page]),
+                                      np.asarray(kp[page]))
+        np.testing.assert_array_equal(np.asarray(ovp[page]),
+                                      np.asarray(vp[page]))
+
+
+# ---------------------------------------------- v2: multi-page tile masking
+
+
+@pytest.mark.parametrize("tile_k", [1, 2, 3, 4])
+def test_tile_factor_sweep_ragged_tail(tile_k):
+    """Every tile factor agrees with the oracle on a page count that does
+    NOT divide it (P=3): the padded null-page tail rows must mask out."""
+    B, H, KV, hd, P = 3, 4, 2, 64, 3
+    q, kp, vp = _pool_setup(jax.random.PRNGKey(15), B, H, KV, hd, P, 10)
+    kp = kp.at[0].set(1e4)  # poison the null page the padding points at
+    vp = vp.at[0].set(1e4)
+    bt = jnp.asarray(np.random.default_rng(3).permutation(
+        np.arange(1, 10)).reshape(B, P), jnp.int32)
+    last = jnp.array([7, 29, 47], jnp.int32)
+    out = pa_ops.paged_attention(q, kp, vp, bt, last, tile_k=tile_k)
+    want = pa_ref.reference_paged_attention(q[:, 0], kp, vp, bt, last)
+    assert np.abs(np.asarray(out)).max() < 1e3
+    np.testing.assert_allclose(np.asarray(out[:, 0], np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-6, atol=1e-5)
+
+
+def test_ring_wrap_mid_tile():
+    """The ring-wrap boundary (oldest-live vs overwritten entries) landing
+    strictly inside a multi-page tile, not on a tile edge."""
+    B, H, KV, hd, P = 2, 4, 2, 64, 4
+    T = P * PSZ
+    q, kp, vp = _pool_setup(jax.random.PRNGKey(16), B, H, KV, hd, P, 9)
+    bt = jnp.array([[1, 2, 3, 4], [5, 6, 7, 8]], jnp.int32)
+    # last % T = 20 and 57: the validity cut falls at ring index 21 / 58,
+    # mid-tile for tile_k=2 (tiles span rings [0,32) and [32,64))
+    last = jnp.array([T + 20, 2 * T + 57], jnp.int32)
+    out = pa_ops.paged_attention(q, kp, vp, bt, last, tile_k=2)
+    want = pa_ref.reference_paged_attention(q[:, 0], kp, vp, bt, last)
+    np.testing.assert_allclose(np.asarray(out[:, 0], np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-6, atol=1e-5)
+
+
+@pytest.mark.parametrize("window", [24, 40])
+def test_window_straddles_tile_boundary(window):
+    """A sliding window whose lower edge crosses a multi-page tile
+    boundary (tile span 32 for tile_k=2): in-tile masking must cut rows
+    of a tile whose other rows stay live."""
+    B, H, KV, hd, P = 2, 4, 2, 64, 4
+    q, kp, vp = _pool_setup(jax.random.PRNGKey(17), B, H, KV, hd, P, 9)
+    bt = jnp.array([[1, 2, 3, 4], [5, 6, 7, 8]], jnp.int32)
+    last = jnp.array([45, 61], jnp.int32)
+    out = pa_ops.paged_attention(q, kp, vp, bt, last, window=window,
+                                 tile_k=2)
+    want = pa_ref.reference_paged_attention(q[:, 0], kp, vp, bt, last,
+                                            window=window)
+    np.testing.assert_allclose(np.asarray(out[:, 0], np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-6, atol=1e-5)
+
+
+def test_fully_masked_tail_tiles():
+    """A short sequence leaves whole multi-page tiles (and the padded
+    tail) fully masked — the online softmax must pass through them
+    without poisoning (no NaN, no null-page leakage)."""
+    B, H, KV, hd, P = 2, 4, 2, 64, 4
+    q, kp, vp = _pool_setup(jax.random.PRNGKey(18), B, H, KV, hd, P, 9)
+    kp = kp.at[0].set(1e4)
+    vp = vp.at[0].set(1e4)
+    bt = jnp.array([[1, 2, 0, 0], [3, 0, 0, 0]], jnp.int32)
+    last = jnp.array([3, 0], jnp.int32)  # tiles [2,3] / [1..3] all dead
+    out = pa_ops.paged_attention(q, kp, vp, bt, last, tile_k=2)
+    want = pa_ref.reference_paged_attention(q[:, 0], kp, vp, bt, last)
+    assert np.isfinite(np.asarray(out)).all()
+    assert np.abs(np.asarray(out)).max() < 1e3
+    np.testing.assert_allclose(np.asarray(out[:, 0], np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-6, atol=1e-5)
+
+
+# ----------------------------------------------------- loud ineligibility
+
+
+def test_non_int32_inputs_fail_loud():
+    """Engine-side block tables / positions are int32 at construction;
+    a float or int64 leaking in must raise, not silently cast per tick."""
+    B, H, KV, hd, P = 2, 4, 2, 64, 2
+    q, kp, vp = _pool_setup(jax.random.PRNGKey(19), B, H, KV, hd, P, 6)
+    bt = jnp.array([[1, 2], [3, 4]], jnp.int32)
+    last = jnp.array([5, 9], jnp.int32)
+    with pytest.raises(ValueError, match="int32"):
+        pa_ops.paged_attention(q, kp, vp, bt.astype(jnp.float32), last)
+    with pytest.raises(ValueError, match="int32"):
+        pa_ops.paged_attention(q, kp, vp, bt, last.astype(jnp.float32))
+    with pytest.raises(ValueError, match="int32"):
+        pa_ops.paged_attention(q, kp, vp, bt, last,
+                               q_positions=last[:, None].astype(jnp.float32)
+                               * jnp.ones((1, 1)))
+
+
+def test_oversized_block_fails_loud():
+    """S larger than the logical ring would overwrite its own tokens —
+    ineligible, and the ValueError must carry the rule."""
+    B, H, KV, hd, P = 1, 4, 2, 64, 2
+    S = P * PSZ + 1
+    q = jax.random.normal(jax.random.PRNGKey(20), (B, S, H, hd))
+    kp = jnp.zeros((4, PSZ, KV, hd))
+    bt = jnp.array([[1, 2]], jnp.int32)
+    last = jnp.array([S - 1], jnp.int32)
+    with pytest.raises(ValueError, match="ring"):
+        pa_ops.paged_attention(q, kp, kp, bt, last)

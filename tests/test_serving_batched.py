@@ -4,6 +4,7 @@ arrivals, slot churn), single-dispatch-per-tick accounting, the chunked
 prefill fast path, and the paged KV pool layout pinned against the dense
 layout on the same workloads."""
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -453,3 +454,121 @@ def test_best_of_rejected_off_the_paged_attention_path():
         recur.submit([req()])
     # a rejected batch is atomic: nothing was enqueued
     assert not dense.queue and not perslot.queue and not recur.queue
+
+
+def test_pallas_chunked_prefill_runs_in_kernel():
+    """Long prompts under kernel="pallas" + chunked prefill: the S>1
+    prefill blocks now run through the paged-attention kernel (v1 fell
+    back to the XLA gather) and must stay token-for-token with the XLA
+    and dense paths, at one fused dispatch per decode tick — including a
+    sliding-window arch whose window straddles chunk boundaries."""
+    for arch, over in [("qwen3_0_6b", {}),
+                       ("mistral_nemo_12b", {"sliding_window": 16})]:
+        cfg, params = _setup(arch, over)
+        rng = np.random.default_rng(23)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(1, cfg.vocab_size,
+                                            20 + 9 * i).tolist(),
+                        max_new=3)
+                for i in range(4)]
+        clone = lambda: [Request(r.rid, list(r.prompt), r.max_new)
+                         for r in reqs]
+        outs = {}
+        for tag, kw in [("pallas", dict(cache_layout="paged",
+                                        kernel="pallas")),
+                        ("xla", dict(cache_layout="paged")),
+                        ("dense", {})]:
+            eng = ContinuousBatcher(cfg, params, n_slots=2, capacity=64,
+                                    prefill_mode="chunked", **kw)
+            eng.submit(clone())
+            done, steps = eng.run()
+            assert eng.decode_dispatches == steps, (arch, tag)
+            outs[tag] = done
+        for tag in ("xla", "dense"):
+            assert completions_equivalent(outs["pallas"], outs[tag]), \
+                (arch, tag,
+                 [(c.rid, c.tokens, c.margins) for c in outs["pallas"]],
+                 [(c.rid, c.tokens) for c in outs[tag]])
+
+
+def test_pallas_preemption_resume_matches_xla():
+    """Lazy allocation on an undersized pool forces preemption; the
+    resume is a multi-token recompute prefill of prompt+emitted, which
+    now runs through the S>1 kernel path.  Completions must stay
+    token-for-token with the XLA path and preemption must actually
+    fire."""
+    cfg, params = _setup("qwen3_0_6b", {})
+    rng = np.random.default_rng(31)
+    # 3 usable pages, each request worst-cases 2 (prompt 4 + budget 24):
+    # lazy admission over-commits two slots and must preempt on exhaustion
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size, 4).tolist(),
+                    max_new=24)
+            for i in range(3)]
+    clone = lambda: [Request(r.rid, list(r.prompt), r.max_new)
+                     for r in reqs]
+    outs, preempts = {}, {}
+    for tag, kern in [("pallas", "pallas"), ("xla", "xla")]:
+        eng = ContinuousBatcher(cfg, params, n_slots=2, capacity=64,
+                                cache_layout="paged", kernel=kern,
+                                allocation="lazy", n_pages=4)
+        eng.submit(clone())
+        done, _ = eng.run()
+        outs[tag], preempts[tag] = done, eng.preemptions
+    assert preempts["pallas"] > 0, preempts  # the overload mix must bite
+    assert completions_equivalent(outs["pallas"], outs["xla"]), \
+        (preempts,
+         [(c.rid, c.tokens, c.margins) for c in outs["pallas"]],
+         [(c.rid, c.tokens) for c in outs["xla"]])
+
+
+def test_pallas_best_of_fork_parity():
+    """best_of under kernel="pallas": a branch writing a refcount-shared
+    page triggers a CoW copy INSIDE the same dispatch as the kernel's
+    fused in-kernel write — the copy must land first (serve_step runs
+    cow_copy_pages before the forward).  Winner and per-branch results
+    must match the XLA path token-for-token."""
+    cfg, params = _setup("qwen3_0_6b", {})
+    sp = SamplingParams(temperature=0.9, top_k=40, seed=11)
+    mk = lambda: [Request(rid=0, prompt=[5, 9, 2, 6, 1], max_new=6,
+                          sampling=sp, best_of=3)]
+    outs, groups = {}, {}
+    for tag, kern in [("pallas", "pallas"), ("xla", "xla")]:
+        eng = ContinuousBatcher(cfg, params, n_slots=3, capacity=64,
+                                cache_layout="paged", kernel=kern)
+        eng.submit(mk())
+        done, steps = eng.run()
+        assert eng.decode_dispatches == steps, tag
+        outs[tag] = done
+        groups[tag] = eng.group_results[0]
+    assert completions_equivalent(outs["pallas"], outs["xla"])
+    for b in groups["xla"]:
+        assert completions_equivalent([groups["pallas"][b]],
+                                      [groups["xla"][b]]), (b, groups)
+
+
+def test_pallas_forward_emits_no_pool_scatter():
+    """The fused-scatter acceptance oracle: lower the paged forward to
+    HLO and count scatter ops.  kernel="xla" pays 2 per step (the K and V
+    pool writes — the layer scan traces its body once); kernel="pallas"
+    must emit ZERO — the new rows land inside the kernel's page pass,
+    for single-token decode AND S>1 prefill blocks."""
+    from repro.models import transformer as T
+    from repro.serving.kvcache import init_paged_cache
+
+    cfg, params = _setup("qwen3_0_6b", {})
+    cache = init_paged_cache(cfg, 2, 32, 6)
+    bt = jnp.array([[1, 2], [3, 4]], jnp.int32)
+
+    def n_scatters(kern, S):
+        toks = jnp.zeros((2, S), jnp.int32)
+        full = dict(cache, pos=jnp.zeros((2,), jnp.int32), block_table=bt)
+        fn = jax.jit(lambda p, c, t: T.forward(
+            p, cfg, t, cache=c, paged_kernel=kern).logits)
+        txt = fn.lower(params, full, toks).as_text()
+        return sum('= "stablehlo.scatter"' in line
+                   for line in txt.splitlines())
+
+    for S in (1, 4):
+        assert n_scatters("xla", S) == 2, S
+        assert n_scatters("pallas", S) == 0, S

@@ -6,9 +6,13 @@ kernel vs the XLA ring gather on that same mix, sampled
 slots, lazy page allocation (+ preemption) vs worst-case reservation
 on an overloaded pool, best_of=n CoW-forked decoding (one prompt
 prefill shared by every branch) vs n independent branch-keyed requests,
-and the Pallas kernel ladder (serving_pallas_ladder: fused in-kernel
+the Pallas kernel ladder (serving_pallas_ladder: fused in-kernel
 K/V scatter, multi-page tiles, S>1 chunked-prefill blocks — greedy,
-sampled, and direct-kernel equivalence vs the XLA path and ref.py).
+sampled, and direct-kernel equivalence vs the XLA path and ref.py),
+and the replica router (serving_router_migration: two heterogeneous
+replicas behind one queue, mid-flight recompute-recipe migration +
+a fail_replica drain drill, token parity vs the unrouted run, and the
+recipe-vs-KV-page byte ledger).
 
 Reports decode tokens/sec, jitted device dispatches per engine tick (the
 fused engine issues exactly ONE decode dispatch per tick — greedy OR
@@ -17,8 +21,10 @@ one per active slot), the fused/seed speedup, decode-state bytes (the
 paged pool holds only the pages the mix actually touches; the dense
 layout pays worst-case capacity on every slot), and — on the overload
 mix — mean slot occupancy plus the preemption count.  CI gates on every
-fused `*disp_per_tick` field staying <= 1.00 and on lazy occupancy
-exceeding worst-case occupancy (benchmarks/check_serving.py).
+fused `*disp_per_tick` field staying <= 1.00, on lazy occupancy
+exceeding worst-case occupancy, and on the router row's migration
+parity / failover completion / recipe-vs-KV byte ratio
+(benchmarks/check_serving.py).
 
     PYTHONPATH=src python -m benchmarks.run --only serving
     PYTHONPATH=src python benchmarks/bench_serving.py
@@ -412,6 +418,92 @@ def run(quick: bool = False):
         f";tile4_over_tile1={tile_us[1] / tile_us[4]:.2f}x"
         f";pallas_disp_per_tick={p_disp / max(1, p_ticks):.4f}"
         f";prefill=chunked;backend={jax.default_backend()}"))
+
+    # ---- replica router: two heterogeneous replicas (a small lazy paged
+    # pool and a bigger dense one) behind one queue.  Drill 1 migrates
+    # two mid-flight requests (one greedy, one sampled) to the other
+    # replica by recompute recipe; drill 2 kills whichever replica holds
+    # a mid-flight request (fail_replica) and drains it onto the
+    # survivor.  Gated: migration_equiv (every stream token-identical to
+    # the unrouted same-seed run), failover_ok (100% completion),
+    # recipe_kv_ratio < 0.05 (recipes vs the counterfactual KV-page
+    # transfer), ttft_p95_ms presence, and router_disp_per_tick <= 1.00
+    # (each replica stays fused).  CPU wall clock includes per-replica
+    # compile; latency percentiles are a presence check, not a threshold.
+    import asyncio
+
+    from repro.serving.config import ServingConfig
+    from repro.serving.router import ReplicaRouter
+
+    n_rt = 8 if quick else 16
+    rt_mix = _skewed_workload(cfg.vocab_size, n_rt, long_every=4,
+                              long_len=40, max_new=(6, 12))
+
+    def _rt_sampling(i):
+        return (SamplingParams(temperature=0.8, top_k=40, seed=1000 + i)
+                if i % 2 else None)
+
+    base_reqs = [dataclasses.replace(r, sampling=_rt_sampling(r.rid))
+                 for r in rt_mix]
+    base_eng = ContinuousBatcher(cfg, params,
+                                 ServingConfig(n_slots=4, capacity=96))
+    base_done, _, _, _, _ = _drive(base_eng, _clone(base_reqs))
+
+    async def _router_run():
+        configs = [ServingConfig(n_slots=2, capacity=96,
+                                 cache_layout="paged", n_pages=9,
+                                 allocation="lazy"),
+                   ServingConfig(n_slots=4, capacity=96)]
+        async with ReplicaRouter(cfg, params, configs) as router:
+            t0 = time.time()
+            handles = [await router.submit(list(r.prompt), r.max_new,
+                                           sampling=r.sampling)
+                       for r in base_reqs]
+            for h in handles[:2]:  # drill 1: rid 0 greedy, rid 1 sampled
+                while h._delivered < 2 and not h.done():
+                    await asyncio.sleep(0)
+                if not h.done():
+                    await router.migrate(h.rid, 1 - h.replica)
+            victim = None  # drill 2: kill a replica holding live work
+            while victim is None and not all(h.done() for h in handles):
+                for h in handles:
+                    if (not h.done() and h.replica is not None
+                            and h._delivered >= 1):
+                        victim = h.replica
+                        break
+                else:
+                    await asyncio.sleep(0)
+            drained = await router.fail_replica(victim) \
+                if victim is not None else 0
+            results, errs = [], 0
+            for h in handles:
+                try:
+                    results.append(await h.result())
+                except Exception:
+                    errs += 1
+            return results, errs, drained, router, time.time() - t0
+
+    results, errs, drained, router, rt_wall = asyncio.run(_router_run())
+    ov = router.router_overhead_bytes()
+    st = router.stats()
+    rt_tok = sum(len(c.tokens) for c in results)
+    mig_equiv = errs == 0 and completions_equivalent(results, base_done)
+    failover_ok = errs == 0 and len(results) == n_rt
+    rt_disp = max(
+        rep.batcher.decode_dispatches / max(1, rep.batcher.decode_ticks)
+        for rep in router.replicas)
+    rows.append((
+        "serving_router_migration",
+        rt_wall / max(1, rt_tok) * 1e6,
+        f"replicas=2;tok={rt_tok};migration_equiv={mig_equiv}"
+        f";migrations={ov['migrations']};failovers={ov['failovers']}"
+        f";failover_drained={drained};failover_ok={failover_ok}"
+        f";recipe_bytes={ov['recipe_bytes']}"
+        f";kv_page_bytes={ov['kv_page_bytes']}"
+        f";recipe_kv_ratio={ov['ratio_vs_kv']:.4f}"
+        f";ttft_p95_ms={st['ttft_p95_ms']:.1f}"
+        f";tpot_p95_ms={st['tpot_p95_ms']:.2f}"
+        f";router_disp_per_tick={rt_disp:.4f}"))
 
     rows.append(_sharded_row(quick))
     return rows

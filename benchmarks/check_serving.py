@@ -23,6 +23,16 @@ fails on any of:
   scatter, multi-page tiles, S>1 block prefill) diverging from the XLA
   path or from ref.reference_paged_attention; its `pallas_disp_per_tick`
   rides the fused-dispatch gate like every other row;
+- the `serving_router_migration` row missing, its `migration_equiv` not
+  True (a stream migrated between replicas by recompute recipe — or the
+  fail_replica drain — diverging from the unrouted same-seed run), its
+  `failover_ok` not True (the drain drill losing requests), zero
+  `migrations` (the drill silently not exercising the recipe path), its
+  `recipe_kv_ratio` at or above 0.05 (recipes no longer orders of
+  magnitude below the counterfactual KV-page transfer), or its
+  `ttft_p95_ms` missing/non-numeric (the latency export dropped — a
+  presence check, not a threshold: CPU wall clock includes compile);
+  its `router_disp_per_tick` rides the fused-dispatch gate;
 - any `*sharded_equiv` field not True — the mesh-sharded engines
   diverging from the single-device trajectory beyond argmax-tie
   tolerance on the (2, 2) debug mesh (an artifact with NO
@@ -50,6 +60,7 @@ import sys
 MAX_DISP_PER_TICK = 1.00
 MAX_BYTES_RATIO = 0.35
 MAX_TOKS_DROP = 0.20  # fresh tok/s may drop at most 20% vs baseline
+MAX_RECIPE_KV_RATIO = 0.05  # recipe migration bytes vs KV-page shipping
 
 BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         "baseline_serving.json")
@@ -176,6 +187,46 @@ def _check_ladder(rows: dict, bad: list) -> int:
     return 1
 
 
+def _check_router(rows: dict, bad: list) -> int:
+    """The replica-router row must be present, token-equivalent to the
+    unrouted same-seed run across migration and failover, complete 100%
+    of the drained requests, actually exercise the recipe path, keep
+    recipe bytes well under the counterfactual KV-page transfer, and
+    export a TTFT p95 (presence only — no latency threshold on CPU)."""
+    fields = rows.get("serving_router_migration")
+    if fields is None:
+        return 0
+    if str(fields.get("migration_equiv")) != "True":
+        bad.append(("serving_router_migration", "migration_equiv",
+                    f"{fields.get('migration_equiv')!r} — a migrated or "
+                    f"drained stream diverged from the unrouted same-seed "
+                    f"run"))
+    if str(fields.get("failover_ok")) != "True":
+        bad.append(("serving_router_migration", "failover_ok",
+                    f"{fields.get('failover_ok')!r} — the fail_replica "
+                    f"drill did not complete every request on survivors"))
+    migs = fields.get("migrations")
+    if not isinstance(migs, (int, float)) or migs <= 0:
+        bad.append(("serving_router_migration", "migrations",
+                    f"{migs!r} — the drill never exercised the "
+                    f"recompute-recipe migration path"))
+    ratio = fields.get("recipe_kv_ratio")
+    if not isinstance(ratio, (int, float)):
+        bad.append(("serving_router_migration", "recipe_kv_ratio",
+                    f"non-numeric value {ratio!r} — the bench artifact "
+                    f"format changed"))
+    elif ratio >= MAX_RECIPE_KV_RATIO:
+        bad.append(("serving_router_migration", "recipe_kv_ratio",
+                    f"{ratio} is not below {MAX_RECIPE_KV_RATIO} — "
+                    f"recipe migration no longer beats shipping KV pages"))
+    ttft = fields.get("ttft_p95_ms")
+    if not isinstance(ttft, (int, float)):
+        bad.append(("serving_router_migration", "ttft_p95_ms",
+                    f"{ttft!r} — the router stopped exporting TTFT "
+                    f"percentiles"))
+    return 1
+
+
 def _check_baseline(quick, rows: dict, baseline_path: str, bad: list) -> int:
     """Compare every engine-throughput field (``*tok_s``, perslot baseline
     exempt) against the committed baseline; tolerate MAX_TOKS_DROP.
@@ -236,6 +287,7 @@ def check(path: str, baseline_path: str = BASELINE) -> int:
     n_shard = _check_sharded(rows, bad)
     n_fork = _check_fork(rows, bad)
     n_ladder = _check_ladder(rows, bad)
+    n_router = _check_router(rows, bad)
     n_base = _check_baseline(quick, rows, baseline_path, bad)
     if not n_disp:
         print(f"check_serving: no fused disp_per_tick fields in {path} — "
@@ -261,6 +313,11 @@ def check(path: str, baseline_path: str = BASELINE) -> int:
               "the Pallas kernel-ladder bench row was renamed or dropped",
               file=sys.stderr)
         return 1
+    if not n_router:
+        print(f"check_serving: no serving_router_migration row in {path} — "
+              "the replica-router bench row was renamed or dropped",
+              file=sys.stderr)
+        return 1
     if n_base == 0 and os.path.exists(baseline_path):
         # the gate must fail loud, not silently disarm, when a rename
         # leaves nothing to compare (mode mismatch returns -1 instead)
@@ -282,7 +339,8 @@ def check(path: str, baseline_path: str = BASELINE) -> int:
           f"lazy_occupancy > worstcase_occupancy; {n_shard} sharded "
           f"equivalence fields all True; best-of fork row equivalent "
           f"and sharing pages; pallas ladder rungs all equivalent; "
-          f"{base_msg}")
+          f"router migration/failover equivalent with recipe_kv_ratio "
+          f"< {MAX_RECIPE_KV_RATIO}; {base_msg}")
     return 0
 
 

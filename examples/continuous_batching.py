@@ -77,7 +77,7 @@ def main():
     from repro.configs import get_smoke_config
     from repro.models import params as Pm
     from repro.serving import (ContinuousBatcher, PerSlotBatcher, Request,
-                               SamplingParams)
+                               SamplingParams, ServingConfig)
 
     cfg = get_smoke_config(args.arch)
     params, _ = Pm.init_params(jax.random.PRNGKey(0), cfg)
@@ -99,7 +99,8 @@ def main():
         print(f"decode: sampled T={args.temperature} top_k={args.top_k} "
               f"top_p={args.top_p} (request i seeded {args.seed}+i; same "
               f"seeds => same tokens on every engine)")
-    eng = ContinuousBatcher(cfg, params, n_slots=args.slots, capacity=96)
+    eng = ContinuousBatcher(cfg, params,
+                            ServingConfig(n_slots=args.slots, capacity=96))
     done = drive(eng, workload(), "fused")
     for c in sorted(done, key=lambda c: c.rid)[:5]:
         print(f"  rid={c.rid} prompt_len={c.prompt_len} "
@@ -123,11 +124,10 @@ def main():
                   "nothing to page (layout falls back to dense)")
         else:
             pps, _ = paged_attn_layout(cfg, 96)
-            paged = ContinuousBatcher(cfg, params, n_slots=args.slots,
-                                      capacity=96, cache_layout="paged",
-                                      n_pages=1 + args.slots * pps // 2,
-                                      kernel=args.kernel,
-                                      allocation=args.allocation)
+            paged = ContinuousBatcher(cfg, params, ServingConfig(
+                n_slots=args.slots, capacity=96, cache_layout="paged",
+                n_pages=1 + args.slots * pps // 2, kernel=args.kernel,
+                allocation=args.allocation))
             tag = f"paged[{args.kernel},{args.allocation}]"
             p_done = drive(paged, workload(), tag)
             same = completions_equivalent(done, p_done)

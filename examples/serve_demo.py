@@ -50,7 +50,7 @@ def main():
     from repro.configs import get_smoke_config
     from repro.models import params as Pm
     from repro.serving import (ContinuousBatcher, Request, SamplingParams,
-                               greedy_generate, init_cache)
+                               ServingConfig, greedy_generate, init_cache)
 
     cases = [
         ("qwen3_0_6b", {}, "dense KV cache"),
@@ -88,7 +88,8 @@ def main():
         cfg, params = all_params[arch]
         if cfg.num_codebooks > 1:
             continue  # the slot engine covers text archs
-        eng = ContinuousBatcher(cfg, params, n_slots=args.slots, capacity=64)
+        eng = ContinuousBatcher(
+            cfg, params, ServingConfig(n_slots=args.slots, capacity=64))
         reqs = [Request(rid=i,
                         prompt=rng.integers(1, cfg.vocab_size,
                                             rng.integers(2, 10)).tolist(),
@@ -118,8 +119,8 @@ def main():
             for i in range(args.requests)]
     runs = []
     for _ in range(2):  # same seeds twice: tokens must reproduce
-        eng = ContinuousBatcher(cfg, params, n_slots=args.slots,
-                                capacity=64)
+        eng = ContinuousBatcher(
+            cfg, params, ServingConfig(n_slots=args.slots, capacity=64))
         eng.submit([Request(r.rid, list(r.prompt), r.max_new, r.sampling)
                     for r in reqs])
         done, steps = eng.run()
@@ -135,9 +136,9 @@ def main():
     async def lifecycle_demo():
         # 3 usable pages for requests that worst-case 2 each: lazy
         # admission over-commits the pool and preemption keeps it busy
-        eng = ContinuousBatcher(cfg, params, n_slots=2, capacity=64,
-                                cache_layout="paged", n_pages=4,
-                                allocation="lazy")
+        eng = ContinuousBatcher(cfg, params, ServingConfig(
+            n_slots=2, capacity=64, cache_layout="paged", n_pages=4,
+            allocation="lazy"))
         free0 = eng.allocator.n_free
         async with ServingFrontend(eng, max_pending=8) as frontend:
             rng = np.random.default_rng(7)
@@ -175,8 +176,8 @@ def main():
           "4 branches) ==")
     rng = np.random.default_rng(11)
     prompt = rng.integers(1, cfg.vocab_size, 24).tolist()
-    eng = ContinuousBatcher(cfg, params, n_slots=4, capacity=64,
-                            cache_layout="paged")
+    eng = ContinuousBatcher(cfg, params, ServingConfig(
+        n_slots=4, capacity=64, cache_layout="paged"))
     eng.submit([Request(rid=0, prompt=prompt, max_new=12,
                         sampling=SamplingParams(temperature=0.9, top_k=40,
                                                 seed=42),

@@ -18,6 +18,11 @@ over "model" (requires D*M visible devices; set
 XLA_FLAGS=--xla_force_host_platform_device_count=N to debug on CPU).
 ``--kernel pallas`` selects the paged-attention decode kernel (single
 device only; needs --layout paged).
+
+``--replicas N`` fronts N independent replicas with a `ReplicaRouter`:
+requests place by load/prefix-affinity score and migrate between
+replicas as recompute recipes (never KV pages); the run reports the
+per-link byte ledger and fleet-wide TTFT/TPOT percentiles.
 """
 from __future__ import annotations
 
@@ -44,8 +49,8 @@ def _parse_mesh(spec: str):
     return jax.make_mesh((d, m), ("data", "model"))
 
 
-async def _serve(args, cfg, params):
-    from repro.serving import ContinuousBatcher, SamplingParams, ServingFrontend
+def _serving_config(args, cfg):
+    from repro.serving import ServingConfig
 
     layout = args.layout
     if args.best_of > 1 and layout != "paged":
@@ -66,10 +71,57 @@ async def _serve(args, cfg, params):
     kw = {}
     if layout == "paged" and args.pages:
         kw["n_pages"] = args.pages
-    batcher = ContinuousBatcher(
-        cfg, params, n_slots=args.slots, capacity=args.capacity,
-        cache_layout=layout, allocation=args.allocation,
-        kernel=args.kernel, mesh=mesh, **kw)
+    return ServingConfig(
+        n_slots=args.slots, capacity=args.capacity, cache_layout=layout,
+        allocation=args.allocation, kernel=args.kernel, mesh=mesh, **kw)
+
+
+async def _serve_router(args, cfg, params):
+    """--replicas N: one ReplicaRouter over N same-shaped replicas —
+    load-scored placement, recipe migration, per-link byte ledger."""
+    from repro.serving import ReplicaRouter, SamplingParams
+
+    configs = [_serving_config(args, cfg) for _ in range(args.replicas)]
+    rng = np.random.default_rng(args.seed)
+    sampled = args.temperature > 0
+
+    async with ReplicaRouter(cfg, params, configs,
+                             max_pending=args.max_pending) as router:
+        handles = []
+        t0 = time.time()
+        for i in range(args.requests):
+            sp = SamplingParams(temperature=args.temperature,
+                                top_k=args.top_k, top_p=args.top_p,
+                                seed=args.seed + i) if sampled else None
+            handles.append(await router.submit(
+                rng.integers(1, cfg.vocab_size,
+                             args.prompt_len).tolist(),
+                args.gen, sampling=sp, priority=args.priority,
+                deadline_ms=args.deadline_ms, best_of=args.best_of))
+        completions = await asyncio.gather(*(h.result() for h in handles))
+        wall = time.time() - t0
+        stats = router.stats()
+
+    toks = sum(len(c.tokens) for c in completions)
+    placed = [h.replica for h in handles]
+    ov = stats["overhead"]
+    print(f"arch={cfg.name} replicas={args.replicas} layout={args.layout} "
+          f"slots={args.slots}x{args.replicas} requests={args.requests} "
+          f"gen={args.gen}")
+    print(f"{toks} tokens in {wall:.2f}s ({toks / wall:.1f} tok/s); "
+          f"placement { {r: placed.count(r) for r in sorted(set(placed))} }")
+    print(f"migrations={ov['migrations']} recipe_bytes={ov['recipe_bytes']} "
+          f"vs kv_page_bytes={ov['kv_page_bytes']} "
+          f"(gain {ov['gain_vs_kv']:.2%})")
+    print(f"ttft p50/p95 = {stats['ttft_p50_ms']:.1f}/"
+          f"{stats['ttft_p95_ms']:.1f} ms, tpot p50/p95 = "
+          f"{stats['tpot_p50_ms']:.2f}/{stats['tpot_p95_ms']:.2f} ms")
+
+
+async def _serve(args, cfg, params):
+    from repro.serving import ContinuousBatcher, SamplingParams, ServingFrontend
+
+    batcher = ContinuousBatcher(cfg, params, _serving_config(args, cfg))
 
     rng = np.random.default_rng(args.seed)
     sampled = args.temperature > 0
@@ -105,7 +157,8 @@ async def _serve(args, cfg, params):
     mode = (f"sampled(T={args.temperature}, top_k={args.top_k}, "
             f"top_p={args.top_p}, seed={args.seed}+rid)"
             if sampled else "greedy")
-    print(f"arch={cfg.name} layout={layout} allocation={args.allocation} "
+    print(f"arch={cfg.name} layout={batcher.cache_layout} "
+          f"allocation={args.allocation} "
           f"slots={args.slots} requests={args.requests} "
           f"prompt={args.prompt_len} gen={args.gen} decode={mode} "
           f"kernel={args.kernel} mesh={stats['mesh']}")
@@ -167,6 +220,11 @@ def main():
                          "logprob (paged layout; needs N free slots)")
     ap.add_argument("--max-pending", type=int, default=64,
                     help="bounded intake: submit() suspends beyond this")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="front N independent replicas with a "
+                         "ReplicaRouter (load-scored placement, "
+                         "recompute-recipe migration, per-link byte "
+                         "accounting)")
     ap.add_argument("--stream", action="store_true",
                     help="print request 0's tokens as they stream")
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -184,7 +242,10 @@ def main():
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     params, _ = Pm.init_params(jax.random.PRNGKey(0), cfg)
-    asyncio.run(_serve(args, cfg, params))
+    if args.replicas > 1:
+        asyncio.run(_serve_router(args, cfg, params))
+    else:
+        asyncio.run(_serve(args, cfg, params))
 
 
 if __name__ == "__main__":

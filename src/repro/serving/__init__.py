@@ -1,8 +1,33 @@
-"""Serving stack: an async REQUEST-LIFECYCLE layer and a host-side POLICY
-layer over device-facing ENGINES.
+"""Serving stack: four layers — a fleet ROUTER over async
+REQUEST-LIFECYCLE frontends over a host-side POLICY scheduler over
+device-facing ENGINES.
 
-Layer split (who may run vs who runs vs how it runs):
+Construction contract: `ServingConfig` (``config``) is the single
+validated construction surface for a replica.  ALL cross-field rules —
+accepted enum values for prefill_mode/cache_layout/kernel/allocation,
+pallas-needs-paged, dense-forces-worst-case, and the model-dependent
+recurrent-forces-dense coercion (`resolve`) — live in its
+`__post_init__`/`resolve`, fail as `ValueError`s naming the accepted
+values, and fire at config time rather than deep inside an engine.
+`ContinuousBatcher(cfg, params, ServingConfig(...))` is the primary
+constructor; the historical loose kwargs survive one release behind a
+`DeprecationWarning` shim.
 
+Layer split (where requests go vs who may run vs who runs vs how it
+runs):
+
+- ``router`` — fleet placement.  `ReplicaRouter` fronts N independent
+  frontend+batcher replicas (a ``list[ServingConfig]`` — heterogeneous
+  pool sizes, layouts, kernels) behind one ``submit()`` queue.  It
+  scores replicas by load and prefix-cache affinity for admission,
+  MIGRATES queued/preempted requests between replicas by shipping the
+  recompute recipe (`RecomputeRecipe`: prompt + emitted tokens +
+  sampling seed/emit-index — the preempt/resume contract on the wire,
+  so migrated runs stay token-identical, greedy and sampled) instead of
+  raw KV pages, and drains a failed replica (`fail_replica`) onto
+  survivors through the same path.  Every inter-replica byte is
+  accounted per link (`router_overhead_bytes`, crosspod-style) against
+  the counterfactual KV-page transfer.
 - ``frontend`` — request lifecycle.  `ServingFrontend` is an asyncio
   service over a batcher: ``await submit(...)`` returns a
   `RequestHandle` that streams tokens per tick (``async for tok in
@@ -169,11 +194,15 @@ from repro.serving.engine import (  # noqa: F401
     PagedEngine,
     PerSlotEngine,
 )
+from repro.serving.config import (  # noqa: F401
+    ServingConfig,
+)
 from repro.serving.scheduler import (  # noqa: F401
     ContinuousBatcher,
     DeadlineExpired,
     PageAllocator,
     PerSlotBatcher,
+    RecomputeRecipe,
     Request,
     Completion,
     completions_equivalent,
@@ -181,4 +210,8 @@ from repro.serving.scheduler import (  # noqa: F401
 from repro.serving.frontend import (  # noqa: F401
     RequestHandle,
     ServingFrontend,
+)
+from repro.serving.router import (  # noqa: F401
+    ReplicaRouter,
+    RouterHandle,
 )

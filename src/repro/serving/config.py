@@ -1,0 +1,127 @@
+"""`ServingConfig`: the declarative construction surface of one serving
+replica.
+
+`ContinuousBatcher` grew fourteen loose keyword knobs across five PRs
+(slots, capacity, layout, pages, kernel, allocation, prefill, sharing,
+quantum, mesh, sampling, BOS).  This frozen dataclass consolidates them
+into one validated value object so that
+
+- cross-field rules live in ONE place (`__post_init__`), fail loud with
+  the accepted values, and fire at config construction instead of deep
+  inside an engine constructor;
+- a heterogeneous replica fleet is declarative: `ReplicaRouter` takes a
+  ``list[ServingConfig]`` — different pool sizes, layouts and kernels
+  behind one queue — instead of N hand-threaded kwarg bundles;
+- model-dependent coercions (recurrent archs keep O(1) dense state) are
+  explicit: `resolve(model_cfg)` returns the config the batcher actually
+  runs, and re-validates it.
+
+Construction rules owned here (moved out of `ContinuousBatcher`):
+
+- ``prefill_mode`` / ``cache_layout`` / ``kernel`` / ``allocation`` must
+  be one of their accepted values — `ValueError`, not a bare assert;
+- ``kernel="pallas"`` needs ``cache_layout="paged"`` (the Pallas kernel
+  reads the paged pool through block tables — there is no dense variant);
+- ``cache_layout="dense"`` forces ``allocation="worst_case"`` (dense
+  slots own worst-case lanes by construction; the coercion is silent,
+  matching the pre-redesign constructor);
+- `resolve(cfg)`: a recurrent arch (O(1) decode state) coerces the
+  layout to dense — and therefore rejects ``kernel="pallas"``.
+
+The legacy kwargs on `ContinuousBatcher` keep working for one release
+via a `DeprecationWarning` shim that builds a `ServingConfig` from them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.serving.kvcache import DEFAULT_PAGE_SIZE
+from repro.serving.sampling import SamplingParams
+
+_PREFILL_MODES = ("chunked", "decode")
+_CACHE_LAYOUTS = ("dense", "paged")
+_KERNELS = ("xla", "pallas")
+_ALLOCATIONS = ("worst_case", "lazy")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """Everything needed to construct one serving replica (engine shape,
+    admission policy, decode defaults).  Frozen: a config can be shared
+    across replicas, compared, and carried in a fleet list."""
+
+    # pool shape
+    n_slots: int = 4
+    capacity: int = 256
+    cache_layout: str = "dense"
+    page_size: int = DEFAULT_PAGE_SIZE
+    n_pages: int | None = None
+    # dispatch flavor
+    kernel: str = "xla"
+    use_pallas: bool = False        # legacy dense flash-attention flag
+    mesh: Any = None                # jax.sharding.Mesh | ShardingPlan | None
+    # admission / prefill policy
+    allocation: str = "worst_case"
+    prefill_mode: str = "chunked"
+    prefill_chunk: int = 16
+    share_prefix: bool = True
+    min_quantum: int = 0
+    # request defaults
+    default_sampling: SamplingParams | None = None
+    bos_token: int | None = None
+
+    def __post_init__(self):
+        if self.prefill_mode not in _PREFILL_MODES:
+            raise ValueError(
+                f"prefill_mode={self.prefill_mode!r}: accepted values are "
+                f"{_PREFILL_MODES}")
+        if self.cache_layout not in _CACHE_LAYOUTS:
+            raise ValueError(
+                f"cache_layout={self.cache_layout!r}: accepted values are "
+                f"{_CACHE_LAYOUTS}")
+        if self.kernel not in _KERNELS:
+            raise ValueError(
+                f"kernel={self.kernel!r}: accepted values are {_KERNELS}")
+        if self.allocation not in _ALLOCATIONS:
+            raise ValueError(
+                f"allocation={self.allocation!r}: accepted values are "
+                f"{_ALLOCATIONS}")
+        if self.n_slots < 1:
+            raise ValueError(f"n_slots={self.n_slots}: need >= 1 slot")
+        if self.capacity < 2:
+            raise ValueError(
+                f"capacity={self.capacity}: a sequence needs at least one "
+                f"prompt token and one generated token")
+        if self.page_size < 1:
+            raise ValueError(f"page_size={self.page_size}: need >= 1")
+        if self.n_pages is not None and self.n_pages < 2:
+            raise ValueError(
+                f"n_pages={self.n_pages}: need at least the null page "
+                f"plus one usable page")
+        if self.kernel == "pallas" and self.cache_layout != "paged":
+            raise ValueError(
+                "kernel='pallas' selects the paged-attention decode kernel"
+                " — it needs cache_layout='paged'")
+        if self.cache_layout == "dense" and self.allocation != "worst_case":
+            # dense slots own worst-case lanes by construction: there is
+            # nothing to allocate lazily (preempt()/cancel() still work)
+            object.__setattr__(self, "allocation", "worst_case")
+        if self.prefill_chunk < 1:
+            object.__setattr__(self, "prefill_chunk", 1)
+        if self.min_quantum < 0:
+            object.__setattr__(self, "min_quantum", 0)
+
+    def resolve(self, model_cfg) -> "ServingConfig":
+        """The config this model actually runs: recurrent archs (mamba2 /
+        rwkv6) keep O(1) dense decode state — there is nothing to page —
+        so the paged layout coerces to dense (and the Pallas paged kernel
+        becomes unsatisfiable).  Idempotent; re-runs full validation."""
+        if not model_cfg.is_recurrent or self.cache_layout == "dense":
+            return self
+        if self.kernel == "pallas":
+            raise ValueError(
+                "kernel='pallas' selects the paged-attention decode kernel"
+                " — it needs cache_layout='paged' on a non-recurrent arch")
+        return dataclasses.replace(self, cache_layout="dense",
+                                   allocation="worst_case")

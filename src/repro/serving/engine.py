@@ -200,7 +200,9 @@ class PagedEngine:
                  capacity: int, page_size: int = DEFAULT_PAGE_SIZE,
                  n_pages: int | None = None, use_pallas: bool = False,
                  kernel: str = "xla", mesh=None):
-        assert kernel in ("xla", "pallas"), kernel
+        if kernel not in ("xla", "pallas"):
+            raise ValueError(
+                f"kernel={kernel!r}: accepted values are ('xla', 'pallas')")
         self.plan = as_plan(mesh, cfg)
         self.mesh = None if self.plan is None else self.plan.mesh
         _check_mesh_kernel(self.plan, use_pallas, kernel)

@@ -40,8 +40,16 @@ Lifecycle semantics:
   winning branch (highest cumulative logprob) — the stream stays quiet
   while branches race and delivers the winner's tokens at completion.
 - **status**: ``handle.status`` walks "queued" -> "running" -> "done"
-  (or "cancelled" / "error"); a preempted request shows "queued" again
-  until it is re-admitted.
+  (or "cancelled" / "error" / "migrated"); a preempted request shows
+  "queued" again until it is re-admitted.
+- **migration**: `extract(rid)` pulls a live request out as a
+  `RecomputeRecipe` and `inject(recipe)` admits one — the
+  `ReplicaRouter`'s transport for moving requests between replicas
+  token-identically (see serving/router.py); a migrated-away handle
+  terminates with status "migrated".
+- **latency**: every completion books TTFT (arrival to first streamed
+  token) and TPOT (mean inter-token time) samples; `stats()` reports
+  their p50/p95.
 
 Invalid requests (empty prompt, prompt >= capacity, infeasible page
 budget, ...) fail their OWN handle — `result()` re-raises the
@@ -51,8 +59,11 @@ from __future__ import annotations
 
 import asyncio
 
+import numpy as np
+
 from repro.serving.sampling import SamplingParams
-from repro.serving.scheduler import Completion, DeadlineExpired, Request
+from repro.serving.scheduler import (Completion, DeadlineExpired,
+                                     RecomputeRecipe, Request)
 
 _END = object()  # stream terminator sentinel
 
@@ -60,6 +71,10 @@ _END = object()  # stream terminator sentinel
 class RequestHandle:
     """A live handle on one submitted request (created by
     `ServingFrontend.submit`, not directly)."""
+
+    # set by ServingFrontend.inject on a migrated-in handle: the recipe
+    # to admit through the recompute-resume path instead of plain submit
+    _recipe: RecomputeRecipe | None = None
 
     def __init__(self, frontend: "ServingFrontend", rid: int,
                  request: Request):
@@ -72,6 +87,8 @@ class RequestHandle:
         self._stream: asyncio.Queue = asyncio.Queue()
         self._finished = asyncio.Event()
         self._sent = 0  # tokens already pushed to the stream
+        self._t0 = asyncio.get_running_loop().time()  # arrival (loop clock)
+        self._t_first: float | None = None          # first streamed token
 
     # ------------------------------------------------------- consumer API
 
@@ -108,6 +125,8 @@ class RequestHandle:
     # ------------------------------------------------- frontend plumbing
 
     def _push(self, emitted: list):
+        if len(emitted) > self._sent and self._t_first is None:
+            self._t_first = asyncio.get_running_loop().time()
         for tok in emitted[self._sent:]:
             self._stream.put_nowait(tok)
         self._sent = max(self._sent, len(emitted))
@@ -116,6 +135,7 @@ class RequestHandle:
         self._push(completion.tokens)
         self.completion = completion
         self.status = "done"
+        self._frontend._record_latency(self, completion)
         self._finished.set()
         self._stream.put_nowait(_END)
 
@@ -130,13 +150,21 @@ class RequestHandle:
         self._finished.set()
         self._stream.put_nowait(_END)
 
+    def _detach(self):
+        """The request migrated to another replica: this handle's stream
+        ends (the router's wrapper handle keeps delivering from the
+        destination frontend) and its terminal status records why."""
+        self.status = "migrated"
+        self._finished.set()
+        self._stream.put_nowait(_END)
+
 
 class ServingFrontend:
     """Asyncio streaming frontend over a batcher (`ContinuousBatcher`;
     anything with submit/step/cancel/slot_req/slot_state/done works).
 
-        batcher = ContinuousBatcher(cfg, params, cache_layout="paged",
-                                    allocation="lazy")
+        batcher = ContinuousBatcher(cfg, params, ServingConfig(
+            cache_layout="paged", allocation="lazy"))
         async with ServingFrontend(batcher, max_pending=32) as fe:
             handle = await fe.submit(prompt, max_new=64, priority=1,
                                      deadline_ms=2000)
@@ -156,6 +184,11 @@ class ServingFrontend:
         self._next_rid = 0
         self._done_seen = len(batcher.done)
         self._task: asyncio.Task | None = None
+        # per-completed-request latency samples (loop-clock milliseconds):
+        # TTFT = arrival -> first streamed token; TPOT = mean inter-token
+        # time past the first (requests emitting 1 token record no TPOT)
+        self.ttft_ms: list = []
+        self.tpot_ms: list = []
 
     # ---------------------------------------------------------- lifecycle
 
@@ -214,6 +247,62 @@ class ServingFrontend:
             raise
         return handle
 
+    async def inject(self, recipe: RecomputeRecipe) -> RequestHandle:
+        """Admit a RecomputeRecipe (router migration/failover — or a
+        router's initial placement, which is just a recipe with no
+        emitted tokens).  The rid is the recipe's: the router keeps rids
+        globally unique across replicas.  Replayed tokens are never
+        re-streamed (`_sent` starts past them); admission goes through
+        the batcher's recompute-resume path, so the continuation is
+        token-identical to the unmigrated run.  Backpressure applies as
+        in `submit`."""
+        req = recipe.to_request()
+        handle = RequestHandle(self, recipe.rid, req)
+        handle._recipe = recipe
+        handle._sent = len(recipe.emitted)
+        self._handles[recipe.rid] = handle
+        # keep this frontend's own rid counter clear of injected rids
+        self._next_rid = max(self._next_rid, recipe.rid + 1)
+        try:
+            await self._intake.put(handle)
+        except asyncio.CancelledError:
+            self._handles.pop(recipe.rid, None)
+            handle._cancelled()
+            raise
+        return handle
+
+    def extract(self, rid: int) -> RecomputeRecipe | None:
+        """Pull a live request OUT of this frontend as a RecomputeRecipe
+        (the other half of `inject`).  The request leaves the batcher
+        entirely (running requests are host-side preempted first, so
+        their emitted tokens ride along); the local handle flushes any
+        not-yet-streamed tokens and terminates with status "migrated".
+        Returns None when the rid is not migratable here: unknown,
+        already terminal, or just completed (the completion is left for
+        `_pump` to resolve normally).  Must run on the event-loop thread
+        between ticks — the router calls it from its dispatcher task."""
+        handle = self._handles.get(rid)
+        if handle is None or handle.done():
+            return None
+        recipe = self.batcher.export_recipe(rid)
+        if recipe is None:
+            if any(c.rid == rid for c in self.batcher.done[self._done_seen:]):
+                return None  # raced completion: _pump will finish it
+            # still in intake, never admitted: recipe straight off the
+            # request (the detached handle is skipped at drain time)
+            recipe = RecomputeRecipe.from_request(
+                handle.request, self.batcher.default_sampling)
+        self._handles.pop(rid, None)
+        if recipe.emitted:
+            handle._push(list(recipe.emitted))
+        handle._detach()
+        return recipe
+
+    def resident(self) -> int:
+        """Open handles on this frontend (queued + running + in intake) —
+        the router's load signal."""
+        return len(self._handles)
+
     def _cancel(self, handle: RequestHandle) -> bool:
         if handle.done():
             return False
@@ -248,9 +337,13 @@ class ServingFrontend:
 
     def _admit(self, handle: RequestHandle) -> bool:
         if handle.done():
-            return False  # cancelled while still in intake
+            return False  # cancelled (or migrated) while still in intake
         try:
-            self.batcher.submit([handle.request])
+            if handle._recipe is not None and handle._recipe.emitted:
+                # migrated-in mid-generation: recompute-resume admission
+                self.batcher.submit_recipe(handle._recipe)
+            else:
+                self.batcher.submit([handle.request])
         except ValueError as e:
             # an invalid request fails its own handle only
             handle._fail(e)
@@ -275,11 +368,35 @@ class ServingFrontend:
 
     # ------------------------------------------------------------- status
 
+    def _record_latency(self, handle: RequestHandle,
+                        completion: Completion):
+        """Book TTFT/TPOT for a completed request (loop-clock ms).  A
+        handle that streamed no token on THIS frontend (a migrated-in
+        request whose replayed tokens covered everything it would ever
+        deliver here) records nothing — the samples describe tokens this
+        frontend actually surfaced."""
+        if handle._t_first is None:
+            return
+        now = asyncio.get_running_loop().time()
+        self.ttft_ms.append((handle._t_first - handle._t0) * 1e3)
+        n_after_first = handle._sent - (len(handle._recipe.emitted)
+                                        if handle._recipe else 0) - 1
+        if n_after_first > 0:
+            self.tpot_ms.append(
+                (now - handle._t_first) * 1e3 / n_after_first)
+
+    @staticmethod
+    def _pct(samples: list, q: float):
+        return float(np.percentile(samples, q)) if samples else None
+
     def stats(self) -> dict:
         """Operational snapshot of the batcher under this frontend —
         mesh-aware: cache bytes are reported globally AND per device, and
         occupancy per slot group (one group per data shard), so an
-        operator sees both total state and the per-chip HBM/skew picture."""
+        operator sees both total state and the per-chip HBM/skew picture.
+        Latency percentiles (TTFT = time to first streamed token, TPOT =
+        mean inter-token time) cover requests COMPLETED here; both are
+        None until the first completion."""
         b = self.batcher
         mesh = getattr(b, "mesh", None)
         return {
@@ -294,6 +411,11 @@ class ServingFrontend:
             "decode_dispatches": b.decode_dispatches,
             "preemptions": b.preemptions,
             "pending": len(b.queue),
+            "completed": len(self.ttft_ms),
+            "ttft_p50_ms": self._pct(self.ttft_ms, 50),
+            "ttft_p95_ms": self._pct(self.ttft_ms, 95),
+            "tpot_p50_ms": self._pct(self.tpot_ms, 50),
+            "tpot_p95_ms": self._pct(self.tpot_ms, 95),
         }
 
     # -------------------------------------------------------------- loop

@@ -1,0 +1,517 @@
+"""Edge replica router: N independent serving replicas behind one queue,
+with recompute-recipe migration between them.
+
+`ReplicaRouter` fronts a fleet of `ServingFrontend`+`ContinuousBatcher`
+replicas — heterogeneous on purpose (different pool sizes, cache
+layouts, kernels: a ``list[ServingConfig]`` declares the fleet) — and
+owns three request-placement decisions:
+
+- **admission**: each `submit()` scores every alive replica by load and
+  locality (open handles per slot, free page fraction, and prefix-cache
+  affinity via the replica's shared-prefix registry) and places the
+  request on the best one;
+- **migration**: a queued or preempted request moves between replicas by
+  shipping its *recompute recipe* — prompt + emitted tokens + sampling
+  seed/emit-index, the PR 5 preempt/resume contract — NOT its KV pages.
+  The destination recompute-prefills and continues token-identically:
+  greedy streams lose nothing, sampled streams stay seed-reproducible,
+  because the emit index never rewinds and every token's noise key is
+  position-keyed.  `migrate_auto` runs a work-stealing pass (an idle
+  replica pulls the youngest queued request off a saturated one);
+- **failover**: `fail_replica(i)` (test hook / ops drill) stops a
+  replica and drains every one of its in-flight requests through the
+  SAME recipe path onto survivors — 100% completion, no token loss.
+
+This is the source paper's communication story applied to serving: edge
+nodes exchange compact recipes (a few bytes per token) instead of raw
+state (KV pages run 2·n_layers·n_kv_heads·head_dim·dtype bytes per
+token), and every inter-replica byte is accounted per link.
+`router_overhead_bytes()` follows `crosspod_overhead_bytes`'s
+conventions: actual recipe traffic vs the counterfactual KV-page
+transfer for the same migrations, and the resulting gain.
+
+Consumers see one `RouterHandle` per request with the same surface as
+`RequestHandle` (async iteration, `result()`, `cancel()`); a per-request
+pump task follows the request across placements and dedups the replayed
+prefix, so the delivered stream is seamless across any number of
+migrations.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+
+import numpy as np
+
+from repro.serving.config import ServingConfig
+from repro.serving.frontend import RequestHandle, ServingFrontend
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import (Completion, ContinuousBatcher,
+                                     RecomputeRecipe, Request)
+
+_END = object()       # RouterHandle stream terminator
+_TERMINAL = object()  # placement-queue terminator (handle reached an end)
+
+
+@dataclasses.dataclass
+class _Replica:
+    idx: int
+    batcher: ContinuousBatcher
+    frontend: ServingFrontend
+    alive: bool = True
+
+    @property
+    def config(self) -> ServingConfig:
+        return self.batcher.config
+
+
+class RouterHandle:
+    """A live handle on one routed request.  Mirrors `RequestHandle`'s
+    consumer API; internally it survives any number of replica hops —
+    each placement hands the pump task a fresh frontend handle plus the
+    count of replayed tokens, and only tokens past the high-water mark
+    are delivered."""
+
+    def __init__(self, router: "ReplicaRouter", rid: int,
+                 recipe: RecomputeRecipe):
+        self.rid = rid
+        self.status = "queued"
+        self.completion: Completion | None = None
+        self.error: Exception | None = None
+        self.replica: int | None = None  # current placement (index)
+        self.migrations = 0              # hops this request survived
+        self._router = router
+        self._recipe = recipe
+        self._stream: asyncio.Queue = asyncio.Queue()
+        self._finished = asyncio.Event()
+        self._placements: asyncio.Queue = asyncio.Queue()
+        self._delivered = 0              # high-water mark across hops
+        self._current: RequestHandle | None = None
+
+    # ------------------------------------------------------- consumer API
+
+    def done(self) -> bool:
+        return self._finished.is_set()
+
+    def cancel(self) -> bool:
+        """Drop the request wherever it currently lives.  Returns False
+        if it already reached a terminal state."""
+        if self.done():
+            return False
+        fh = self._current
+        if fh is not None and not fh.done():
+            fh.cancel()  # the pump observes "cancelled" and closes us
+        else:
+            self._cancelled()  # pending in the router, or between hops
+        return True
+
+    async def result(self) -> Completion:
+        await self._finished.wait()
+        if self.error is not None:
+            raise self.error
+        if self.completion is None:
+            raise asyncio.CancelledError(f"request {self.rid} cancelled")
+        return self.completion
+
+    def __aiter__(self):
+        return self
+
+    async def __anext__(self):
+        tok = await self._stream.get()
+        if tok is _END:
+            raise StopAsyncIteration
+        return tok
+
+    # --------------------------------------------------- router plumbing
+
+    def _close(self):
+        if self._finished.is_set():
+            return False
+        self._finished.set()
+        self._stream.put_nowait(_END)
+        self._placements.put_nowait(_TERMINAL)
+        self._router._requests.pop(self.rid, None)
+        return True
+
+    def _finish(self, completion: Completion):
+        self.completion = completion
+        if self._close():
+            self.status = "done"
+
+    def _fail(self, error: Exception):
+        self.error = error
+        if self._close():
+            self.status = "error"
+
+    def _cancelled(self):
+        if self._close():
+            self.status = "cancelled"
+
+
+class ReplicaRouter:
+    """One submit() queue over N serving replicas (see module docstring).
+
+        configs = [ServingConfig(n_slots=4, capacity=256),
+                   ServingConfig(n_slots=2, capacity=128,
+                                 cache_layout="paged", allocation="lazy")]
+        async with ReplicaRouter(cfg, params, configs) as router:
+            handle = await router.submit(prompt, max_new=64)
+            async for tok in handle:
+                ...
+
+    All replicas share one model (`cfg`, `params`); each gets its own
+    engine, page pool and frontend, built from its ServingConfig."""
+
+    def __init__(self, cfg, params, configs: list[ServingConfig], *,
+                 max_pending: int = 64, migrate_auto: bool = True):
+        if not configs:
+            raise ValueError("need at least one ServingConfig")
+        self.replicas: list[_Replica] = []
+        for i, sc in enumerate(configs):
+            b = ContinuousBatcher(cfg, params, sc)
+            fe = ServingFrontend(b, max_pending=max_pending)
+            self.replicas.append(_Replica(idx=i, batcher=b, frontend=fe))
+        self.migrate_auto = migrate_auto
+        self._pending: asyncio.Queue = asyncio.Queue(maxsize=max_pending)
+        self._requests: dict[int, RouterHandle] = {}
+        self._next_rid = 0
+        self._task: asyncio.Task | None = None
+        self._pumps: set = set()
+        # per-link byte accounting (crosspod_overhead_bytes conventions):
+        # actual recipe traffic vs the counterfactual KV-page transfer
+        self.migrations = 0
+        self.failovers = 0
+        self.recipe_bytes = 0
+        self.kv_page_bytes = 0
+        self._links: dict = {}  # (src, dst) -> bytes shipped
+
+    # ---------------------------------------------------------- lifecycle
+
+    def start(self):
+        if self._task is None:
+            loop = asyncio.get_running_loop()
+            for rep in self.replicas:
+                if rep.alive:
+                    rep.frontend.start()
+            self._task = loop.create_task(self._run())
+
+    async def stop(self):
+        if self._task is not None:
+            self._task.cancel()
+            try:
+                await self._task
+            except asyncio.CancelledError:
+                pass
+            self._task = None
+        for rep in self.replicas:
+            if rep.alive:
+                await rep.frontend.stop()
+        for t in list(self._pumps):
+            t.cancel()
+        await asyncio.gather(*self._pumps, return_exceptions=True)
+
+    async def __aenter__(self):
+        self.start()
+        return self
+
+    async def __aexit__(self, *exc):
+        await self.stop()
+
+    # ------------------------------------------------------------- intake
+
+    async def submit(self, prompt, max_new: int, *,
+                     sampling: SamplingParams | None = None,
+                     priority: int = 0,
+                     deadline_ms: float | None = None,
+                     best_of: int = 1) -> RouterHandle:
+        """Enqueue one request for placement on the best replica.
+        Initial placement IS a (zero-emitted) recipe injection — one code
+        path covers admission, migration and failover."""
+        rid = self._next_rid
+        self._next_rid += 1
+        deadline = None
+        if deadline_ms is not None:
+            deadline = asyncio.get_running_loop().time() * 1e3 + deadline_ms
+        recipe = RecomputeRecipe(
+            rid=rid, prompt=tuple(prompt), max_new=max_new,
+            sampling=sampling, priority=priority, deadline=deadline,
+            best_of=best_of)
+        rh = RouterHandle(self, rid, recipe)
+        self._requests[rid] = rh
+        t = asyncio.get_running_loop().create_task(self._pump_one(rh))
+        self._pumps.add(t)
+        t.add_done_callback(self._pumps.discard)
+        await self._pending.put(rh)
+        return rh
+
+    # -------------------------------------------------- placement scoring
+
+    def _score(self, rep: _Replica, recipe: RecomputeRecipe):
+        """Eligibility + desirability of `rep` for `recipe`.  Returns
+        None when the replica cannot host the request at all; otherwise a
+        score where prefix-cache affinity attracts, open handles repel,
+        and free pool headroom breaks ties.  Eligibility requires the
+        FULL budget (prompt + max_new <= capacity): every eligible
+        replica then clamps the budget identically, so a migrated run
+        emits exactly as many tokens as the unmigrated one."""
+        if not rep.alive:
+            return None
+        b = rep.batcher
+        prompt = list(recipe.prompt)
+        if not prompt:
+            if b.bos_token is None:
+                return None
+            prompt = [b.bos_token]
+        if len(prompt) + recipe.max_new > b.capacity:
+            return None
+        probe = Request(rid=recipe.rid, prompt=prompt,
+                        max_new=recipe.max_new, sampling=recipe.sampling,
+                        best_of=recipe.best_of)
+        try:
+            b._admission_check(probe)
+        except ValueError:
+            return None
+        aff = b.prefix_affinity(prompt) / max(1, len(prompt))
+        load = rep.frontend.resident() / max(1, b.n_slots)
+        if b.cache_layout == "paged":
+            free = b.allocator.n_free / max(1, b.engine.n_pages - 1)
+        else:
+            free = sum(r is None for r in b.slot_req) / b.n_slots
+        return 1.5 * aff - load + 0.25 * free
+
+    def _best_for(self, recipe: RecomputeRecipe, exclude=None):
+        best, best_s = None, None
+        for rep in self.replicas:
+            if exclude is not None and rep.idx == exclude:
+                continue
+            s = self._score(rep, recipe)
+            if s is not None and (best_s is None or s > best_s):
+                best, best_s = rep.idx, s
+        return best
+
+    # ---------------------------------------------------------- placement
+
+    async def _place_recipe(self, rh: RouterHandle,
+                            recipe: RecomputeRecipe, dst: int):
+        rh._recipe = recipe
+        rh.replica = dst
+        fh = await self.replicas[dst].frontend.inject(recipe)
+        rh._placements.put_nowait((fh, len(recipe.emitted)))
+
+    async def _place(self, rh: RouterHandle):
+        if rh.done():
+            return  # cancelled while waiting for placement
+        dst = self._best_for(rh._recipe)
+        if dst is None:
+            r = rh._recipe
+            rh._fail(ValueError(
+                f"request {r.rid}: no alive replica can host "
+                f"prompt={len(r.prompt)} + max_new={r.max_new} "
+                f"(best_of={r.best_of})"))
+            return
+        await self._place_recipe(rh, rh._recipe, dst)
+
+    # ---------------------------------------------------------- migration
+
+    async def migrate(self, rid: int, dst: int) -> bool:
+        """Move request `rid` to replica `dst` by recipe.  Returns False
+        when there is nothing to move (unknown/terminal rid, already on
+        dst, dst dead or ineligible, or the request completed in the same
+        tick — the completion then resolves normally)."""
+        rh = self._requests.get(rid)
+        if rh is None or rh.done():
+            return False
+        src = rh.replica
+        if src is None or src == dst or not self.replicas[dst].alive:
+            return False
+        if self._score(self.replicas[dst], rh._recipe) is None:
+            return False
+        recipe = self.replicas[src].frontend.extract(rid)
+        if recipe is None:
+            return False
+        self._account(src, dst, recipe)
+        rh.migrations += 1
+        self.migrations += 1
+        await self._place_recipe(rh, recipe, dst)
+        return True
+
+    async def fail_replica(self, i: int) -> int:
+        """Ops drill / test hook: replica `i` dies NOW.  Its frontend
+        stops, and every in-flight request it held (intake, queued,
+        running) drains through the recipe path onto the best surviving
+        replica — greedy requests lose no tokens, sampled requests
+        continue seed-reproducibly.  Returns the number of requests
+        re-homed; requests no survivor can host fail loudly."""
+        rep = self.replicas[i]
+        rep.alive = False
+        await rep.frontend.stop()
+        self.failovers += 1
+        drained = 0
+        for rid in list(rep.frontend._handles):
+            rh = self._requests.get(rid)
+            if rh is None or rh.done():
+                continue
+            recipe = rep.frontend.extract(rid)
+            if recipe is None:
+                continue  # completed before the failure: resolved already
+            dst = self._best_for(recipe, exclude=i)
+            if dst is None:
+                rh._fail(ValueError(
+                    f"request {rid}: no surviving replica can host it"))
+                continue
+            self._account(i, dst, recipe)
+            rh.migrations += 1
+            self.migrations += 1
+            await self._place_recipe(rh, recipe, dst)
+            drained += 1
+        return drained
+
+    async def _rebalance(self):
+        """Work stealing: when a replica has queue backlog and zero free
+        slots while another alive replica sits with an empty queue and a
+        free slot, migrate the YOUNGEST queued request (the tail — it
+        waits longest here) to the best such destination.  At most one
+        migration per dispatcher turn keeps the policy stable."""
+        dsts = [r for r in self.replicas
+                if r.alive and not r.batcher.queue
+                and any(x is None for x in r.batcher.slot_req)]
+        if not dsts:
+            return
+        for rep in self.replicas:
+            if not rep.alive or not rep.batcher.queue:
+                continue
+            if any(x is None for x in rep.batcher.slot_req):
+                continue  # has a free slot: its queue is draining
+            for req in reversed(rep.batcher.queue):
+                rh = self._requests.get(req.rid)
+                if rh is None or rh.done() or rh.replica != rep.idx:
+                    continue
+                best, best_s = None, None
+                for d in dsts:
+                    if d.idx == rep.idx:
+                        continue
+                    s = self._score(d, rh._recipe)
+                    if s is not None and (best_s is None or s > best_s):
+                        best, best_s = d.idx, s
+                if best is None:
+                    continue
+                await self.migrate(req.rid, best)
+                return
+
+    # ------------------------------------------------------- byte ledger
+
+    @staticmethod
+    def _kv_bytes(batcher: ContinuousBatcher, n_tokens: int) -> int:
+        """Counterfactual: bytes a raw KV-state transfer of `n_tokens`
+        resident tokens would ship from this replica (page-aligned under
+        the paged layout, whole written rows under dense)."""
+        eng = batcher.engine
+        if batcher.cache_layout == "paged":
+            per_tok = eng.cache_nbytes() / (eng.n_pages * eng.page_size)
+            pages = -(-n_tokens // eng.page_size)
+            return int(pages * eng.page_size * per_tok)
+        per_tok = eng.cache_nbytes() / (batcher.n_slots * batcher.capacity)
+        return int(min(n_tokens, batcher.capacity) * per_tok)
+
+    def _account(self, src: int, dst: int, recipe: RecomputeRecipe):
+        nb = recipe.nbytes()
+        self.recipe_bytes += nb
+        self._links[(src, dst)] = self._links.get((src, dst), 0) + nb
+        self.kv_page_bytes += self._kv_bytes(
+            self.replicas[src].batcher,
+            len(recipe.prompt) + len(recipe.emitted))
+
+    def router_overhead_bytes(self) -> dict:
+        """Migration-traffic ledger, `crosspod_overhead_bytes`-style:
+        what the recipes actually cost per link, what shipping KV pages
+        for the same moves would have cost, and the gain."""
+        ratio = (self.recipe_bytes / self.kv_page_bytes
+                 if self.kv_page_bytes else 0.0)
+        return {
+            "migrations": self.migrations,
+            "failovers": self.failovers,
+            "links": {f"{a}->{b}": v
+                      for (a, b), v in sorted(self._links.items())},
+            "recipe_bytes": self.recipe_bytes,
+            "kv_page_bytes": self.kv_page_bytes,
+            "ratio_vs_kv": ratio,
+            "gain_vs_kv": 1.0 - ratio,
+        }
+
+    def stats(self) -> dict:
+        """Fleet snapshot: per-replica frontend stats, pooled TTFT/TPOT
+        percentiles over every completion anywhere in the fleet, and the
+        migration byte ledger."""
+        ttft = [x for rep in self.replicas for x in rep.frontend.ttft_ms]
+        tpot = [x for rep in self.replicas for x in rep.frontend.tpot_ms]
+        pct = (lambda xs, q: float(np.percentile(xs, q)) if xs else None)
+        return {
+            "replicas": [dict(rep.frontend.stats(), alive=rep.alive)
+                         for rep in self.replicas],
+            "open_requests": len(self._requests),
+            "completed": len(ttft),
+            "ttft_p50_ms": pct(ttft, 50),
+            "ttft_p95_ms": pct(ttft, 95),
+            "tpot_p50_ms": pct(tpot, 50),
+            "tpot_p95_ms": pct(tpot, 95),
+            "overhead": self.router_overhead_bytes(),
+        }
+
+    # ---------------------------------------------------------- dispatcher
+
+    async def _run(self):
+        try:
+            while True:
+                if self._pending.empty() and not self._requests:
+                    # fully idle: park until the next submission
+                    rh = await self._pending.get()
+                    await self._place(rh)
+                while not self._pending.empty():
+                    await self._place(self._pending.get_nowait())
+                if self.migrate_auto:
+                    await self._rebalance()
+                await asyncio.sleep(0)
+        except asyncio.CancelledError:
+            raise
+        except Exception as e:
+            # a dispatcher error must fail every open handle loudly
+            for rh in list(self._requests.values()):
+                if not rh.done():
+                    rh._fail(e)
+            self._requests.clear()
+            raise
+
+    # ------------------------------------------------------ per-request pump
+
+    async def _pump_one(self, rh: RouterHandle):
+        """Follow one request across placements: deliver each frontend
+        handle's stream past the replayed prefix, then classify how the
+        stream ended — completion, migration (next placement), error, or
+        cancellation."""
+        while True:
+            item = await rh._placements.get()
+            if item is _TERMINAL:
+                return
+            fh, replayed = item
+            if rh.done():
+                fh.cancel()  # terminal while a placement was in flight
+                continue
+            rh._current = fh
+            rh.status = "running"
+            seen = replayed
+            async for tok in fh:
+                seen += 1
+                if seen > rh._delivered:
+                    rh._stream.put_nowait(tok)
+                    rh._delivered = seen
+            if fh.completion is not None:
+                rh._finish(fh.completion)
+                return
+            if fh.status == "migrated":
+                rh.status = "queued"
+                continue  # the next placement is already queued (or coming)
+            if fh.error is not None:
+                rh._fail(fh.error)
+                return
+            rh._cancelled()
+            return

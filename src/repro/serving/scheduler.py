@@ -97,13 +97,14 @@ configured.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Iterable
 
 import numpy as np
 
 from repro.models.config import ModelConfig
+from repro.serving.config import ServingConfig
 from repro.serving.engine import DenseEngine, PagedEngine, PerSlotEngine
-from repro.serving.kvcache import DEFAULT_PAGE_SIZE
 from repro.serving.sampling import (GREEDY, SamplingParams, SlotSampling,
                                     branch_key, key_zeros)
 
@@ -179,6 +180,69 @@ def completions_equivalent(a, b, tie_tol: float = 1e-3) -> bool:
     return True
 
 
+@dataclasses.dataclass(frozen=True)
+class RecomputeRecipe:
+    """The portable form of an in-flight request: everything a DIFFERENT
+    replica needs to continue it token-identically, and nothing else.
+
+    This is the PR 5 preempt/resume contract lifted onto the wire: prompt
+    + already-emitted tokens + the effective sampling params (seed,
+    branch).  The destination chunk-prefills prompt + emitted[:-1],
+    re-feeds the last emitted token, and its next sample folds the SAME
+    noise key (branch_key(seed, branch) fold emit-index) — nothing is
+    re-sampled, the emit index never rewinds, so greedy streams lose no
+    tokens and sampled streams stay seed-reproducible across migration.
+
+    Shipping this instead of raw KV pages is the router's whole
+    communication story: a recipe is a few bytes per token (`nbytes`)
+    where a KV page transfer is 2*n_layers*n_kv_heads*head_dim*dtype
+    bytes per token — orders of magnitude apart (`router_overhead_bytes`
+    accounts both sides per link).
+
+    `margins`/`logps` ride along so the migrated Completion keeps full
+    fidelity (tie-tolerant parity checks, best-of ranking)."""
+
+    rid: int
+    prompt: tuple
+    max_new: int
+    sampling: SamplingParams | None = None
+    priority: int = 0
+    deadline: float | None = None
+    best_of: int = 1
+    emitted: tuple = ()
+    margins: tuple = ()
+    logps: tuple = ()
+
+    def nbytes(self) -> int:
+        """Wire-size estimate: int32 token ids (prompt + emitted), f32
+        margin + f32 logprob per emitted token, plus a fixed scalar
+        header (rid, max_new, priority, deadline, best_of, sampling
+        seed/branch/temperature/top_k/top_p and framing)."""
+        return (4 * (len(self.prompt) + len(self.emitted))
+                + 8 * len(self.emitted) + 72)
+
+    def to_request(self) -> Request:
+        return Request(rid=self.rid, prompt=list(self.prompt),
+                       max_new=self.max_new, sampling=self.sampling,
+                       priority=self.priority, deadline=self.deadline,
+                       best_of=self.best_of)
+
+    @classmethod
+    def from_request(cls, req: Request,
+                     default_sampling: SamplingParams | None = None,
+                     emitted=(), margins=(), logps=()) -> "RecomputeRecipe":
+        """Capture `req` (queued or running) as a recipe.  The EFFECTIVE
+        sampling is pinned (req.sampling, else the source replica's
+        default): the destination may run a different default_sampling,
+        and migration must not change the request's decode policy."""
+        return cls(rid=req.rid, prompt=tuple(req.prompt),
+                   max_new=req.max_new,
+                   sampling=req.sampling or default_sampling,
+                   priority=req.priority, deadline=req.deadline,
+                   best_of=req.best_of, emitted=tuple(emitted),
+                   margins=tuple(margins), logps=tuple(logps))
+
+
 class PageAllocator:
     """Host-side manager of the shared KV page pool.
 
@@ -211,8 +275,14 @@ class PageAllocator:
 
     def __init__(self, n_pages: int, page_size: int,
                  allocation: str = "worst_case"):
-        assert n_pages >= 2, "need at least the null page plus one"
-        assert allocation in ("worst_case", "lazy"), allocation
+        if n_pages < 2:
+            raise ValueError(
+                f"n_pages={n_pages}: need at least the null page plus one "
+                f"usable page")
+        if allocation not in ("worst_case", "lazy"):
+            raise ValueError(
+                f"allocation={allocation!r}: accepted values are "
+                f"('worst_case', 'lazy')")
         self.n_pages = n_pages
         self.page_size = page_size
         self.allocation = allocation
@@ -551,73 +621,94 @@ class _BatcherBase:
                                               * self.n_slots)
 
 
+_UNSET = object()  # sentinel: distinguishes "kwarg not passed" from None
+
+
 class ContinuousBatcher(_BatcherBase):
     """Fused slot-batched continuous batching: one jitted dispatch per
-    engine tick drives the whole slot pool (see module docstring)."""
+    engine tick drives the whole slot pool (see module docstring).
 
-    def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
-                 capacity: int = 256, bos_token: int | None = None,
-                 prefill_chunk: int = 16, prefill_mode: str = "chunked",
-                 use_pallas: bool = False, cache_layout: str = "dense",
-                 page_size: int = DEFAULT_PAGE_SIZE,
-                 n_pages: int | None = None, share_prefix: bool = True,
-                 kernel: str = "xla", allocation: str = "worst_case",
-                 default_sampling: SamplingParams | None = None,
-                 min_quantum: int = 0, mesh=None):
-        super().__init__(cfg, params, n_slots=n_slots, capacity=capacity,
-                         bos_token=bos_token,
-                         default_sampling=default_sampling)
-        assert prefill_mode in ("chunked", "decode"), prefill_mode
-        assert cache_layout in ("dense", "paged"), cache_layout
-        assert kernel in ("xla", "pallas"), kernel
-        assert allocation in ("worst_case", "lazy"), allocation
-        if cfg.is_recurrent:
-            cache_layout = "dense"  # O(1) decode state: nothing to page
-        if kernel == "pallas" and cache_layout != "paged":
-            raise ValueError(
-                "kernel='pallas' selects the paged-attention decode kernel"
-                " — it needs cache_layout='paged' on a non-recurrent arch")
-        if cache_layout == "dense":
-            # dense slots own worst-case lanes by construction: there is
-            # nothing to allocate lazily (preempt()/cancel() still work)
-            allocation = "worst_case"
-        self.cache_layout = cache_layout
-        self.allocation = allocation
-        self.prefill_mode = prefill_mode
-        self.prefill_chunk = max(1, prefill_chunk)
+    Construction: ``ContinuousBatcher(cfg, params, ServingConfig(...))``
+    is the primary path — all cross-field validation lives in
+    `ServingConfig.__post_init__` / `.resolve`.  The historical loose
+    kwargs (n_slots=..., cache_layout=..., ...) still work for one
+    release through a `DeprecationWarning` shim that packs them into a
+    ServingConfig; mixing `config` with legacy kwargs is an error."""
+
+    def __init__(self, cfg: ModelConfig, params,
+                 config: ServingConfig | None = None, *,
+                 n_slots=_UNSET, capacity=_UNSET, bos_token=_UNSET,
+                 prefill_chunk=_UNSET, prefill_mode=_UNSET,
+                 use_pallas=_UNSET, cache_layout=_UNSET, page_size=_UNSET,
+                 n_pages=_UNSET, share_prefix=_UNSET, kernel=_UNSET,
+                 allocation=_UNSET, default_sampling=_UNSET,
+                 min_quantum=_UNSET, mesh=_UNSET):
+        legacy = {k: v for k, v in dict(
+            n_slots=n_slots, capacity=capacity, bos_token=bos_token,
+            prefill_chunk=prefill_chunk, prefill_mode=prefill_mode,
+            use_pallas=use_pallas, cache_layout=cache_layout,
+            page_size=page_size, n_pages=n_pages,
+            share_prefix=share_prefix, kernel=kernel,
+            allocation=allocation, default_sampling=default_sampling,
+            min_quantum=min_quantum, mesh=mesh).items() if v is not _UNSET}
+        if legacy:
+            if config is not None:
+                raise ValueError(
+                    f"pass either a ServingConfig or legacy kwargs, not "
+                    f"both (got config= plus {sorted(legacy)})")
+            warnings.warn(
+                "ContinuousBatcher(cfg, params, n_slots=..., ...) legacy "
+                "kwargs are deprecated — construct a serving.ServingConfig "
+                "and pass ContinuousBatcher(cfg, params, config)",
+                DeprecationWarning, stacklevel=2)
+            config = ServingConfig(**legacy)
+        elif config is None:
+            config = ServingConfig()
+        sc = config.resolve(cfg)  # model-dependent coercions + validation
+        self.config = sc
+        super().__init__(cfg, params, n_slots=sc.n_slots,
+                         capacity=sc.capacity, bos_token=sc.bos_token,
+                         default_sampling=sc.default_sampling)
+        self.cache_layout = sc.cache_layout
+        self.allocation = sc.allocation
+        self.prefill_mode = sc.prefill_mode
+        self.prefill_chunk = sc.prefill_chunk
         # minimum-run quantum: a freshly admitted/resumed request cannot
         # be chosen as a preemption victim until it has run this many
         # decode ticks (0 = off) — high-priority arrival bursts can't
         # starve a victim before its first page of progress
-        self.min_quantum = max(0, min_quantum)
+        self.min_quantum = sc.min_quantum
         # best-of-n fork bookkeeping: live groups by parent rid, archived
         # per-branch completions (group_results), page-sharing counters
         self._groups: dict = {}
         self.group_results: dict = {}
-        self._cow_reserve: list = [[] for _ in range(n_slots)]
+        self._cow_reserve: list = [[] for _ in range(sc.n_slots)]
         self.cow_copies = 0         # in-dispatch CoW page copies queued
         self.fork_shared_pages = 0  # pages shared across all forks
-        if cache_layout == "dense":
-            self.engine = DenseEngine(cfg, params, n_slots=n_slots,
-                                      capacity=capacity,
-                                      use_pallas=use_pallas, mesh=mesh)
+        if sc.cache_layout == "dense":
+            self.engine = DenseEngine(cfg, params, n_slots=sc.n_slots,
+                                      capacity=sc.capacity,
+                                      use_pallas=sc.use_pallas,
+                                      mesh=sc.mesh)
         else:
-            self.engine = PagedEngine(cfg, params, n_slots=n_slots,
-                                      capacity=capacity,
-                                      page_size=page_size, n_pages=n_pages,
-                                      use_pallas=use_pallas, kernel=kernel,
-                                      mesh=mesh)
-            self.allocator = PageAllocator(self.engine.n_pages, page_size,
-                                           allocation)
-            self.slot_pages: list = [[] for _ in range(n_slots)]
+            self.engine = PagedEngine(cfg, params, n_slots=sc.n_slots,
+                                      capacity=sc.capacity,
+                                      page_size=sc.page_size,
+                                      n_pages=sc.n_pages,
+                                      use_pallas=sc.use_pallas,
+                                      kernel=sc.kernel, mesh=sc.mesh)
+            self.allocator = PageAllocator(self.engine.n_pages,
+                                           sc.page_size, sc.allocation)
+            self.slot_pages: list = [[] for _ in range(sc.n_slots)]
             logical = self.engine.ring_cap
             # sharing is sound only while the logical ring never wraps (a
             # wrapped ring overwrites the shared prefix entries)
-            self._share = share_prefix and logical >= capacity
+            self._share = sc.share_prefix and logical >= sc.capacity
             # skipping the shared tokens outright needs (a) chunked prefill
             # (the pages are fully written at the sharee's admission) and
             # (b) no recurrent state to rebuild (pure attention)
-            self._share_skip = (self._share and prefill_mode == "chunked"
+            self._share_skip = (self._share
+                                and sc.prefill_mode == "chunked"
                                 and cfg.block_kind == "attention")
         # prefill block chunking bound (logical ring under paged layout)
         self._ring_cap = self.engine.ring_cap
@@ -798,7 +889,7 @@ class ContinuousBatcher(_BatcherBase):
             head, best_of=1, sampling=dataclasses.replace(sp, branch=b))
             for b in range(n)]
         self._groups[head.rid] = {"n": n, "members": members,
-                                  "completions": {}}
+                                  "completions": {}, "head": head}
         self.queue[0] = members[0]
         admitted = self._admit_paged(free[0])
         if admitted is None:  # lazy pool can't hold the prompt pages yet
@@ -968,6 +1059,76 @@ class ContinuousBatcher(_BatcherBase):
         self.slot_req[s] = None
         self.slot_state[s] = None
         self.queue.insert(0, req)
+
+    # ------------------------------------------------ migration (router)
+
+    def export_recipe(self, rid: int) -> RecomputeRecipe | None:
+        """Extract request `rid` from this batcher as a RecomputeRecipe —
+        the router's migration/failover primitive.  The request leaves
+        this replica entirely (slot + pages reclaimed, queue entry
+        dropped); `submit_recipe` on another replica continues it
+        token-identically.  A running request goes through the host-side
+        preempt path first, so its emitted tokens ride along in the
+        recipe.  A live best-of-n group exports as a RESTART of the
+        parent request (emitted=()): branches share pages on THIS pool
+        and no branch token has been surfaced to the client yet, so the
+        destination re-forks from scratch and — by branch-key determinism
+        — elects the same winner.  Returns None when the rid is unknown
+        here (already finished, cancelled, or never submitted)."""
+        g = self._groups.get(rid)
+        if g is not None:
+            head = g["head"]
+            self.cancel(rid)  # drops every queued/running branch + pages
+            return RecomputeRecipe.from_request(head, self.default_sampling)
+        for s in range(self.n_slots):
+            req = self.slot_req[s]
+            if req is not None and req.rid == rid:
+                self._preempt(s)  # stash emitted, requeue at head
+                break
+        for i, req in enumerate(self.queue):
+            if req.rid == rid:
+                self.queue.pop(i)
+                rs = self._resume.pop(id(req), None) or ((), (), ())
+                return RecomputeRecipe.from_request(
+                    req, self.default_sampling,
+                    emitted=rs[0], margins=rs[1], logps=rs[2])
+        return None
+
+    def submit_recipe(self, recipe: RecomputeRecipe) -> Request:
+        """Admit a migrated-in recipe: normal submit-time validation,
+        then — when tokens were already emitted — the resume stash is
+        seeded so admission runs the PR 5 recompute-prefill path (which
+        also means worst-case page reservation, the anti-thrash rule: a
+        migrated request never grows post-admission, so it cannot
+        immediately bounce to a third replica under lazy allocation).
+        Returns the enqueued Request."""
+        if len(recipe.prompt) + len(recipe.emitted) >= self.capacity:
+            raise ValueError(
+                f"request {recipe.rid}: recipe carries "
+                f"{len(recipe.prompt)} prompt + {len(recipe.emitted)} "
+                f"emitted tokens — does not fit capacity {self.capacity}")
+        self.submit([recipe.to_request()])
+        req = self.queue[-1]  # submit may rewrite an empty prompt to BOS
+        if recipe.emitted:
+            self._resume[id(req)] = (list(recipe.emitted),
+                                     list(recipe.margins),
+                                     list(recipe.logps))
+        return req
+
+    def prefix_affinity(self, prompt) -> int:
+        """Leading prompt tokens already resident in this replica's
+        shared-prefix registry (0 on dense layouts or with sharing off).
+        The router's locality signal: admitting here shares those pages
+        instead of recomputing them."""
+        if self.cache_layout != "paged" or not self._share:
+            return 0
+        ps = self.engine.page_size
+        hits = 0
+        for key in self._prefix_chain(prompt, len(prompt) // ps):
+            if self.allocator.lookup_prefix(key) is None:
+                break
+            hits += 1
+        return hits * ps
 
     def _victim_order(self, s: int):
         """Sort key: the MOST preemptible running request first — lowest

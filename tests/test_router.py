@@ -1,0 +1,257 @@
+"""Replica router + ServingConfig tests: the unified construction API
+(validation, deprecation shim), load-scored placement across unequal
+pools, recompute-recipe migration token-parity (greedy and sampled),
+replica-failure failover, prefix-affinity scoring, and the TTFT/TPOT
+latency export."""
+
+import asyncio
+import dataclasses
+import types
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import params as Pm
+from repro.serving import (ContinuousBatcher, ReplicaRouter, Request,
+                           SamplingParams, ServingConfig, ServingFrontend,
+                           completions_equivalent)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("qwen3_0_6b")
+    params, _ = Pm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompts(cfg, n=3, plen=5, seed=5):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size, plen).tolist()
+            for _ in range(n)]
+
+
+def _sampling(i):
+    """Odd-indexed requests sample; even stay greedy."""
+    if i % 2 == 0:
+        return None
+    return SamplingParams(temperature=0.8, top_k=40, seed=1000 + i)
+
+
+def _baseline(cfg, params, prompts, max_new=8):
+    """Unmigrated same-seed reference run on a plain dense batcher."""
+    b = ContinuousBatcher(cfg, params, ServingConfig(n_slots=4, capacity=96))
+    b.submit([Request(rid=i, prompt=list(p), max_new=max_new,
+                      sampling=_sampling(i))
+              for i, p in enumerate(prompts)])
+    done, _ = b.run()
+    return done
+
+
+# ------------------------------------------------------- ServingConfig API
+
+
+def test_servingconfig_validation():
+    """Every enum field rejects unknown values with a ValueError that
+    names the accepted ones; cross-field rules fire at construction."""
+    for field, bad in [("prefill_mode", "eager"), ("cache_layout", "ring"),
+                       ("kernel", "triton"), ("allocation", "greedy")]:
+        with pytest.raises(ValueError, match="accepted values"):
+            ServingConfig(**{field: bad})
+    with pytest.raises(ValueError, match="paged"):
+        ServingConfig(kernel="pallas", cache_layout="dense")
+    with pytest.raises(ValueError):
+        ServingConfig(n_pages=1)
+    # dense layout silently coerces lazy allocation to worst_case
+    sc = ServingConfig(cache_layout="dense", allocation="lazy")
+    assert sc.allocation == "worst_case"
+    # frozen: fields cannot be reassigned
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        sc.n_slots = 8
+
+
+def test_servingconfig_resolve_recurrent():
+    """A recurrent arch coerces paged->dense at resolve time (O(1) decode
+    state: nothing to page) and therefore rejects the pallas kernel."""
+    recurrent = types.SimpleNamespace(is_recurrent=True)
+    attention = types.SimpleNamespace(is_recurrent=False)
+    sc = ServingConfig(cache_layout="paged", allocation="lazy")
+    assert sc.resolve(attention) is sc
+    rs = sc.resolve(recurrent)
+    assert rs.cache_layout == "dense" and rs.allocation == "worst_case"
+    with pytest.raises(ValueError, match="pallas"):
+        ServingConfig(cache_layout="paged", kernel="pallas").resolve(
+            recurrent)
+
+
+def test_legacy_kwargs_shim(setup):
+    """The historical loose kwargs still construct (one release) behind a
+    DeprecationWarning and land on the same resolved config; mixing them
+    with config= is an error; the config path warns nothing."""
+    cfg, params = setup
+    with pytest.warns(DeprecationWarning, match="ServingConfig"):
+        legacy = ContinuousBatcher(cfg, params, n_slots=2, capacity=64,
+                                   cache_layout="paged", n_pages=12,
+                                   allocation="lazy")
+    sc = ServingConfig(n_slots=2, capacity=64, cache_layout="paged",
+                       n_pages=12, allocation="lazy")
+    assert legacy.config == sc.resolve(cfg)
+    with pytest.raises(ValueError, match="not both"):
+        ContinuousBatcher(cfg, params, ServingConfig(), n_slots=2)
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        primary = ContinuousBatcher(cfg, params, sc)
+    assert primary.config == legacy.config
+    # invalid legacy values surface as ValueError (not a bare assert)
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="accepted values"):
+            ContinuousBatcher(cfg, params, prefill_mode="bogus")
+
+
+# ------------------------------------------------------------ routing
+
+
+def test_router_routes_by_load(setup):
+    """Across a 1-slot and a 4-slot replica, load scoring sends the bulk
+    of a uniform workload to the bigger pool — and everything completes
+    token-identically to an unrouted run."""
+    cfg, params = setup
+    prompts = _prompts(cfg, n=10, plen=4, seed=11)
+
+    async def go():
+        configs = [ServingConfig(n_slots=1, capacity=96),
+                   ServingConfig(n_slots=4, capacity=96)]
+        async with ReplicaRouter(cfg, params, configs,
+                                 migrate_auto=False) as router:
+            handles = [await router.submit(p, 6) for p in prompts]
+            results = [await h.result() for h in handles]
+            small = len(router.replicas[0].batcher.done)
+            big = len(router.replicas[1].batcher.done)
+        return results, small, big
+
+    results, small, big = asyncio.run(go())
+    assert len(results) == 10
+    assert small + big == 10
+    assert big > small
+
+    b = ContinuousBatcher(cfg, params, ServingConfig(n_slots=4, capacity=96))
+    b.submit([Request(rid=i, prompt=list(p), max_new=6)
+              for i, p in enumerate(prompts)])
+    base, _ = b.run()
+    by_rid = {c.rid: c.tokens for c in base}
+    for c in results:
+        assert c.tokens == by_rid[c.rid]
+
+
+def test_migration_token_parity(setup):
+    """A request migrated mid-generation (greedy AND sampled) finishes
+    token-identical to the unmigrated same-seed run: the recipe replays
+    emitted tokens, never re-samples, and the emit index never rewinds."""
+    cfg, params = setup
+    prompts = _prompts(cfg, n=4, plen=5, seed=21)
+
+    async def go():
+        configs = [ServingConfig(n_slots=2, capacity=96, cache_layout="paged",
+                                 n_pages=16, allocation="lazy"),
+                   ServingConfig(n_slots=4, capacity=96)]
+        async with ReplicaRouter(cfg, params, configs,
+                                 migrate_auto=False) as router:
+            handles = [await router.submit(p, 8, sampling=_sampling(i))
+                       for i, p in enumerate(prompts)]
+            migrated = 0
+            for h in handles[:2]:  # one greedy (rid 0), one sampled (rid 1)
+                while h._delivered < 2 and not h.done():
+                    await asyncio.sleep(0)
+                if not h.done():
+                    assert await router.migrate(h.rid, 1 - h.replica)
+                    migrated += 1
+            results = [await h.result() for h in handles]
+            assert router.migrations == migrated >= 1
+            ov = router.router_overhead_bytes()
+        return results, ov
+
+    results, ov = asyncio.run(go())
+    assert completions_equivalent(results, _baseline(cfg, params, prompts))
+    # the communication claim: recipes are orders of magnitude below KV
+    assert 0 < ov["recipe_bytes"] < 0.05 * ov["kv_page_bytes"]
+    assert ov["links"]
+
+
+def test_failover_completes_all(setup):
+    """fail_replica mid-run drains every in-flight request onto the
+    survivor through the recipe path: 100% completion, token parity with
+    an unrouted run."""
+    cfg, params = setup
+    prompts = _prompts(cfg, n=6, plen=5, seed=31)
+
+    async def go():
+        configs = [ServingConfig(n_slots=2, capacity=96),
+                   ServingConfig(n_slots=2, capacity=96, cache_layout="paged",
+                                 n_pages=16, allocation="lazy")]
+        async with ReplicaRouter(cfg, params, configs,
+                                 migrate_auto=False) as router:
+            handles = [await router.submit(p, 8, sampling=_sampling(i))
+                       for i, p in enumerate(prompts)]
+            victim = None
+            while victim is None:
+                for h in handles:
+                    if not h.done() and h.replica is not None \
+                            and h._delivered >= 1:
+                        victim = h.replica
+                        break
+                else:
+                    await asyncio.sleep(0)
+            drained = await router.fail_replica(victim)
+            results = [await h.result() for h in handles]
+            assert drained >= 1
+            assert not router.replicas[victim].alive
+            assert router.failovers == 1
+        return results
+
+    results = asyncio.run(go())
+    assert len(results) == 6  # every handle resolved with a Completion
+    assert completions_equivalent(results, _baseline(cfg, params, prompts))
+
+
+def test_prefix_affinity(setup):
+    """While a request's prompt pages are live, the registry reports the
+    shared-prefix length for an identical prompt and 0 for a foreign one
+    — the router's locality signal."""
+    cfg, params = setup
+    b = ContinuousBatcher(cfg, params, ServingConfig(
+        n_slots=2, capacity=96, cache_layout="paged", n_pages=16))
+    ps = b.page_size
+    rng = np.random.default_rng(41)
+    prompt = rng.integers(1, cfg.vocab_size, 2 * ps + 3).tolist()
+    b.submit([Request(rid=0, prompt=prompt, max_new=4)])
+    b.step()  # admit + prefill: full prompt pages are registered
+    assert b.prefix_affinity(prompt) == 2 * ps
+    other = rng.integers(1, cfg.vocab_size, 2 * ps).tolist()
+    assert b.prefix_affinity(other) == 0
+    # dense layouts have no page registry: affinity is always 0
+    d = ContinuousBatcher(cfg, params, ServingConfig(n_slots=2, capacity=96))
+    assert d.prefix_affinity(prompt) == 0
+
+
+def test_frontend_latency_stats(setup):
+    """stats() exports TTFT/TPOT p50/p95 over completed requests (None
+    before any completion; floats after)."""
+    cfg, params = setup
+    b = ContinuousBatcher(cfg, params, ServingConfig(n_slots=2, capacity=96))
+
+    async def go():
+        async with ServingFrontend(b, max_pending=8) as fe:
+            assert fe.stats()["ttft_p95_ms"] is None
+            handles = [await fe.submit(p, 6)
+                       for p in _prompts(cfg, n=3, plen=4, seed=51)]
+            for h in handles:
+                await h.result()
+            return fe.stats()
+
+    st = asyncio.run(go())
+    assert st["completed"] == 3
+    for k in ("ttft_p50_ms", "ttft_p95_ms", "tpot_p50_ms", "tpot_p95_ms"):
+        assert isinstance(st[k], float) and st[k] >= 0.0
+    assert st["ttft_p50_ms"] <= st["ttft_p95_ms"]

@@ -9,10 +9,14 @@ prefill shared by every branch) vs n independent branch-keyed requests,
 the Pallas kernel ladder (serving_pallas_ladder: fused in-kernel
 K/V scatter, multi-page tiles, S>1 chunked-prefill blocks — greedy,
 sampled, and direct-kernel equivalence vs the XLA path and ref.py),
-and the replica router (serving_router_migration: two heterogeneous
+the replica router (serving_router_migration: two heterogeneous
 replicas behind one queue, mid-flight recompute-recipe migration +
-a fail_replica drain drill, token parity vs the unrouted run, and the
-recipe-vs-KV-page byte ledger).
+a fail_replica drain drill, token parity vs the unrouted run, the
+recipe-vs-KV-page byte ledger, and a Perfetto span-trace export to
+TRACE_router_migration.json — the nightly artifact), and the telemetry
+layer itself (serving_telemetry_overhead: the same fused workload with
+a live Telemetry sink vs telemetry=None — token parity, tok/s overhead
+ratio, span count, and 1.00 dispatch/tick with tracing on).
 
 Reports decode tokens/sec, jitted device dispatches per engine tick (the
 fused engine issues exactly ONE decode dispatch per tick — greedy OR
@@ -22,8 +26,9 @@ paged pool holds only the pages the mix actually touches; the dense
 layout pays worst-case capacity on every slot), and — on the overload
 mix — mean slot occupancy plus the preemption count.  CI gates on every
 fused `*disp_per_tick` field staying <= 1.00, on lazy occupancy
-exceeding worst-case occupancy, and on the router row's migration
-parity / failover completion / recipe-vs-KV byte ratio
+exceeding worst-case occupancy, on the router row's migration
+parity / failover completion / recipe-vs-KV byte ratio, and on the
+telemetry row's parity / overhead / span presence
 (benchmarks/check_serving.py).
 
     PYTHONPATH=src python -m benchmarks.run --only serving
@@ -434,6 +439,7 @@ def run(quick: bool = False):
 
     from repro.serving.config import ServingConfig
     from repro.serving.router import ReplicaRouter
+    from repro.serving.telemetry import Telemetry
 
     n_rt = 8 if quick else 16
     rt_mix = _skewed_workload(cfg.vocab_size, n_rt, long_every=4,
@@ -450,10 +456,13 @@ def run(quick: bool = False):
     base_done, _, _, _, _ = _drive(base_eng, _clone(base_reqs))
 
     async def _router_run():
+        # per-replica telemetry: the drill's span log becomes the nightly
+        # Perfetto trace artifact (TRACE_router_migration.json)
         configs = [ServingConfig(n_slots=2, capacity=96,
                                  cache_layout="paged", n_pages=9,
-                                 allocation="lazy"),
-                   ServingConfig(n_slots=4, capacity=96)]
+                                 allocation="lazy", telemetry=Telemetry()),
+                   ServingConfig(n_slots=4, capacity=96,
+                                 telemetry=Telemetry())]
         async with ReplicaRouter(cfg, params, configs) as router:
             t0 = time.time()
             handles = [await router.submit(list(r.prompt), r.max_new,
@@ -484,6 +493,7 @@ def run(quick: bool = False):
             return results, errs, drained, router, time.time() - t0
 
     results, errs, drained, router, rt_wall = asyncio.run(_router_run())
+    trace = router.export_trace("TRACE_router_migration.json")
     ov = router.router_overhead_bytes()
     st = router.stats()
     rt_tok = sum(len(c.tokens) for c in results)
@@ -503,7 +513,50 @@ def run(quick: bool = False):
         f";recipe_kv_ratio={ov['ratio_vs_kv']:.4f}"
         f";ttft_p95_ms={st['ttft_p95_ms']:.1f}"
         f";tpot_p95_ms={st['tpot_p95_ms']:.2f}"
-        f";router_disp_per_tick={rt_disp:.4f}"))
+        f";router_disp_per_tick={rt_disp:.4f}"
+        f";trace_events={len(trace['traceEvents'])}"))
+
+    # ---- telemetry overhead: the identical fused workload with a live
+    # Telemetry sink (lifecycle spans + tick metrics + dispatch
+    # annotations) vs telemetry=None (every hot-path call site guarded
+    # out).  Gated (check_serving.py): telemetry_equiv True — the traced
+    # run token-identical to the untraced one; overhead_ratio <= 1.05 —
+    # tok/s with telemetry on within 5% of off; spans > 0 — the sink
+    # actually recorded the lifecycle; telemetry_on_disp_per_tick rides
+    # the repo-wide <= 1.00 gate (tracing must never add a dispatch).
+    # Each arm keeps the faster of two reps to damp wall-clock noise.
+    n_slots = 4 if quick else 8
+    tel = Telemetry()
+    off_eng = ContinuousBatcher(cfg, params,
+                                ServingConfig(n_slots=n_slots, capacity=64))
+    on_eng = ContinuousBatcher(cfg, params,
+                               ServingConfig(n_slots=n_slots, capacity=64,
+                                             telemetry=tel))
+    base = _workload(cfg.vocab_size, n_requests)
+    warm = (_workload(cfg.vocab_size, max(2, n_slots), seed=99)
+            + [Request(rid=-1, prompt=list(range(1, 16)), max_new=2)])
+    for eng in (off_eng, on_eng):
+        _drive(eng, _clone(warm))
+    best = {}
+    for key, eng in (("off", off_eng), ("on", on_eng)):
+        for _ in range(2):
+            done, tok, s, ticks, disp = _drive(eng, _clone(base))
+            if key not in best or tok / s > best[key][1]:
+                best[key] = (done, tok / s, ticks, disp)
+    off_done, off_tps, _, _ = best["off"]
+    on_done, on_tps, on_ticks, on_disp = best["on"]
+    tel_equiv = ({c.rid: c.tokens for c in on_done}
+                 == {c.rid: c.tokens for c in off_done})
+    snap = tel.snapshot()
+    rows.append((
+        "serving_telemetry_overhead",
+        1e6 / max(1e-9, on_tps),
+        f"slots={n_slots};telemetry_equiv={tel_equiv}"
+        f";telemetry_on_tok_s={on_tps:.1f}"
+        f";telemetry_off_tok_s={off_tps:.1f}"
+        f";overhead_ratio={off_tps / on_tps:.3f}"
+        f";spans={snap['span_events']};tel_ticks={snap['ticks']['count']}"
+        f";telemetry_on_disp_per_tick={on_disp / max(1, on_ticks):.4f}"))
 
     rows.append(_sharded_row(quick))
     return rows

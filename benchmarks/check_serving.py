@@ -33,6 +33,15 @@ fails on any of:
   `ttft_p95_ms` missing/non-numeric (the latency export dropped — a
   presence check, not a threshold: CPU wall clock includes compile);
   its `router_disp_per_tick` rides the fused-dispatch gate;
+- the `serving_telemetry_overhead` row missing, its `telemetry_equiv`
+  not True (attaching a Telemetry sink changing the decoded tokens —
+  observability must never perturb the trajectory), its
+  `overhead_ratio` above 1.05 (tok/s with telemetry on dropping more
+  than 5% below telemetry off — the host-side tracer leaking into the
+  hot path), or its `spans` not positive (the sink silently recording
+  nothing, which would make the overhead claim vacuous); its
+  `telemetry_on_disp_per_tick` rides the fused-dispatch gate — tracing
+  must never add a device dispatch;
 - any `*sharded_equiv` field not True — the mesh-sharded engines
   diverging from the single-device trajectory beyond argmax-tie
   tolerance on the (2, 2) debug mesh (an artifact with NO
@@ -61,6 +70,7 @@ MAX_DISP_PER_TICK = 1.00
 MAX_BYTES_RATIO = 0.35
 MAX_TOKS_DROP = 0.20  # fresh tok/s may drop at most 20% vs baseline
 MAX_RECIPE_KV_RATIO = 0.05  # recipe migration bytes vs KV-page shipping
+MAX_TELEMETRY_OVERHEAD = 1.05  # tok/s telemetry-off over telemetry-on
 
 BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         "baseline_serving.json")
@@ -227,6 +237,36 @@ def _check_router(rows: dict, bad: list) -> int:
     return 1
 
 
+def _check_telemetry(rows: dict, bad: list) -> int:
+    """The telemetry-overhead row must be present, token-identical to
+    the untraced run, within MAX_TELEMETRY_OVERHEAD of the untraced
+    tok/s, and have actually recorded lifecycle spans.  Its
+    telemetry_on_disp_per_tick rides the fused-dispatch gate."""
+    fields = rows.get("serving_telemetry_overhead")
+    if fields is None:
+        return 0
+    if str(fields.get("telemetry_equiv")) != "True":
+        bad.append(("serving_telemetry_overhead", "telemetry_equiv",
+                    f"{fields.get('telemetry_equiv')!r} — attaching a "
+                    f"Telemetry sink changed the decoded tokens"))
+    ratio = fields.get("overhead_ratio")
+    if not isinstance(ratio, (int, float)):
+        bad.append(("serving_telemetry_overhead", "overhead_ratio",
+                    f"non-numeric value {ratio!r} — the bench artifact "
+                    f"format changed"))
+    elif ratio > MAX_TELEMETRY_OVERHEAD:
+        bad.append(("serving_telemetry_overhead", "overhead_ratio",
+                    f"{ratio} exceeds {MAX_TELEMETRY_OVERHEAD} — the "
+                    f"host-side tracer is leaking into the decode hot "
+                    f"path"))
+    spans = fields.get("spans")
+    if not isinstance(spans, (int, float)) or spans <= 0:
+        bad.append(("serving_telemetry_overhead", "spans",
+                    f"{spans!r} — the sink recorded no lifecycle spans; "
+                    f"the overhead claim is vacuous"))
+    return 1
+
+
 def _check_baseline(quick, rows: dict, baseline_path: str, bad: list) -> int:
     """Compare every engine-throughput field (``*tok_s``, perslot baseline
     exempt) against the committed baseline; tolerate MAX_TOKS_DROP.
@@ -288,6 +328,7 @@ def check(path: str, baseline_path: str = BASELINE) -> int:
     n_fork = _check_fork(rows, bad)
     n_ladder = _check_ladder(rows, bad)
     n_router = _check_router(rows, bad)
+    n_tel = _check_telemetry(rows, bad)
     n_base = _check_baseline(quick, rows, baseline_path, bad)
     if not n_disp:
         print(f"check_serving: no fused disp_per_tick fields in {path} — "
@@ -318,6 +359,11 @@ def check(path: str, baseline_path: str = BASELINE) -> int:
               "the replica-router bench row was renamed or dropped",
               file=sys.stderr)
         return 1
+    if not n_tel:
+        print(f"check_serving: no serving_telemetry_overhead row in {path} "
+              "— the telemetry-overhead bench row was renamed or dropped",
+              file=sys.stderr)
+        return 1
     if n_base == 0 and os.path.exists(baseline_path):
         # the gate must fail loud, not silently disarm, when a rename
         # leaves nothing to compare (mode mismatch returns -1 instead)
@@ -340,7 +386,9 @@ def check(path: str, baseline_path: str = BASELINE) -> int:
           f"equivalence fields all True; best-of fork row equivalent "
           f"and sharing pages; pallas ladder rungs all equivalent; "
           f"router migration/failover equivalent with recipe_kv_ratio "
-          f"< {MAX_RECIPE_KV_RATIO}; {base_msg}")
+          f"< {MAX_RECIPE_KV_RATIO}; telemetry row token-identical with "
+          f"overhead_ratio <= {MAX_TELEMETRY_OVERHEAD} and spans "
+          f"recorded; {base_msg}")
     return 0
 
 

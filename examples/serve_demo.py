@@ -24,6 +24,12 @@ branches race under different sampling noise — prompt pages are shared
 (refcounted) until a branch writes one, and only the winner by
 cumulative logprob is recorded.
 
+Part 6 runs a two-replica router migration drill with telemetry
+attached: one request is force-migrated between replicas mid-decode and
+its full span timeline (intake -> queued -> prefill -> decode ->
+preempt -> migrate_out -> migrate_in -> ... -> finished), the fleet
+metric registry, and the Perfetto trace export are printed.
+
     PYTHONPATH=src python examples/serve_demo.py --gen 24
 """
 import argparse
@@ -195,6 +201,51 @@ def main():
           f"{eng.cow_copies} CoW copies, "
           f"{eng.decode_dispatches / max(1, eng.decode_ticks):.2f} "
           f"dispatch/tick")
+
+    print("\n== telemetry: migration drill span timeline + Perfetto "
+          "export ==")
+    from repro.serving import ReplicaRouter, Telemetry
+
+    async def telemetry_demo():
+        tels = [Telemetry(), Telemetry()]
+        configs = [ServingConfig(n_slots=2, capacity=64, telemetry=tels[0]),
+                   ServingConfig(n_slots=2, capacity=64,
+                                 cache_layout="paged", allocation="lazy",
+                                 telemetry=tels[1])]
+        rng = np.random.default_rng(21)
+        async with ReplicaRouter(cfg, params, configs,
+                                 migrate_auto=False) as router:
+            handles = [await router.submit(
+                rng.integers(1, cfg.vocab_size, 6).tolist(), 16)
+                for _ in range(3)]
+            # let decode start, then force-migrate request 0 to wherever
+            # it is NOT — the drill every failover drain runs through
+            while not any(t.ticks for t in tels):
+                await asyncio.sleep(0.01)
+            src = handles[0].replica
+            await router.migrate(0, 1 - src)
+            await asyncio.gather(*(h.result() for h in handles))
+            merged = router.merged_telemetry()
+            snap = merged.snapshot()
+            trace = router.export_trace("/tmp/serve_demo_trace.json")
+        t_base = merged.spans[0][0][0]
+        print(f"  request 0 migrated replica{src} -> replica{1 - src}; "
+              f"span timeline:")
+        for t, event, attrs in merged.spans[0]:
+            extra = (" " + " ".join(f"{k}={v}" for k, v in attrs.items())
+                     if attrs else "")
+            print(f"    +{(t - t_base) * 1e3:7.2f} ms  {event}{extra}")
+        print(f"  fleet counters: "
+              f"requests={snap['counters']['requests_total']} "
+              f"migrations={router.migrations} "
+              f"recipe_bytes={router.recipe_bytes}")
+        ttft = snap["histograms"].get("serving_ttft_ms", {})
+        print(f"  serving_ttft_ms: count={ttft.get('count')} "
+              f"p50={ttft.get('p50'):.1f}ms p95={ttft.get('p95'):.1f}ms")
+        print(f"  wrote {len(trace['traceEvents'])} Perfetto trace events "
+              f"to /tmp/serve_demo_trace.json (open in ui.perfetto.dev)")
+
+    asyncio.run(telemetry_demo())
 
 
 if __name__ == "__main__":

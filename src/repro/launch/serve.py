@@ -23,11 +23,19 @@ device only; needs --layout paged).
 requests place by load/prefix-affinity score and migrate between
 replicas as recompute recipes (never KV pages); the run reports the
 per-link byte ledger and fleet-wide TTFT/TPOT percentiles.
+
+Observability: ``--trace out.json`` attaches a telemetry sink to every
+replica and writes the run's Chrome/Perfetto trace_event JSON (open in
+ui.perfetto.dev or chrome://tracing — one process track per replica,
+engine ticks on thread 0, one thread per request);
+``--stats-interval S`` prints a one-line telemetry snapshot to stderr
+every S seconds while the run is live.
 """
 from __future__ import annotations
 
 import argparse
 import asyncio
+import sys
 import time
 
 import jax
@@ -49,7 +57,7 @@ def _parse_mesh(spec: str):
     return jax.make_mesh((d, m), ("data", "model"))
 
 
-def _serving_config(args, cfg):
+def _serving_config(args, cfg, telemetry=None):
     from repro.serving import ServingConfig
 
     layout = args.layout
@@ -73,20 +81,50 @@ def _serving_config(args, cfg):
         kw["n_pages"] = args.pages
     return ServingConfig(
         n_slots=args.slots, capacity=args.capacity, cache_layout=layout,
-        allocation=args.allocation, kernel=args.kernel, mesh=mesh, **kw)
+        allocation=args.allocation, kernel=args.kernel, mesh=mesh,
+        telemetry=telemetry, **kw)
+
+
+def _wants_telemetry(args) -> bool:
+    return bool(args.trace) or args.stats_interval is not None
+
+
+def _stats_line(stats: dict) -> str:
+    """One-line operational snapshot (the --stats-interval ticker)."""
+    fmt = (lambda v, spec="{:.1f}": "-" if v is None else spec.format(v))
+    pending = stats.get("pending", stats.get("open_requests", "-"))
+    return (f"[stats] pending={pending} "
+            f"completed={stats['completed']} "
+            f"ttft_p50={fmt(stats['ttft_p50_ms'])}ms "
+            f"ttft_p95={fmt(stats['ttft_p95_ms'])}ms "
+            f"tpot_p50={fmt(stats['tpot_p50_ms'], '{:.2f}')}ms")
+
+
+async def _stats_ticker(stats_fn, interval: float):
+    while True:
+        await asyncio.sleep(interval)
+        print(_stats_line(stats_fn()), file=sys.stderr)
 
 
 async def _serve_router(args, cfg, params):
     """--replicas N: one ReplicaRouter over N same-shaped replicas —
     load-scored placement, recipe migration, per-link byte ledger."""
-    from repro.serving import ReplicaRouter, SamplingParams
+    from repro.serving import ReplicaRouter, SamplingParams, Telemetry
 
-    configs = [_serving_config(args, cfg) for _ in range(args.replicas)]
+    configs = [_serving_config(args, cfg,
+                               telemetry=(Telemetry()
+                                          if _wants_telemetry(args)
+                                          else None))
+               for _ in range(args.replicas)]
     rng = np.random.default_rng(args.seed)
     sampled = args.temperature > 0
 
     async with ReplicaRouter(cfg, params, configs,
                              max_pending=args.max_pending) as router:
+        ticker = None
+        if args.stats_interval is not None:
+            ticker = asyncio.get_running_loop().create_task(
+                _stats_ticker(router.stats, args.stats_interval))
         handles = []
         t0 = time.time()
         for i in range(args.requests):
@@ -101,6 +139,12 @@ async def _serve_router(args, cfg, params):
         completions = await asyncio.gather(*(h.result() for h in handles))
         wall = time.time() - t0
         stats = router.stats()
+        if ticker is not None:
+            ticker.cancel()
+        if args.trace:
+            trace = router.export_trace(args.trace)
+            print(f"wrote {len(trace['traceEvents'])} trace events to "
+                  f"{args.trace} (open in ui.perfetto.dev)")
 
     toks = sum(len(c.tokens) for c in completions)
     placed = [h.replica for h in handles]
@@ -119,15 +163,22 @@ async def _serve_router(args, cfg, params):
 
 
 async def _serve(args, cfg, params):
-    from repro.serving import ContinuousBatcher, SamplingParams, ServingFrontend
+    from repro.serving import (ContinuousBatcher, SamplingParams,
+                               ServingFrontend, Telemetry, write_trace)
 
-    batcher = ContinuousBatcher(cfg, params, _serving_config(args, cfg))
+    telemetry = Telemetry() if _wants_telemetry(args) else None
+    batcher = ContinuousBatcher(cfg, params,
+                                _serving_config(args, cfg, telemetry))
 
     rng = np.random.default_rng(args.seed)
     sampled = args.temperature > 0
 
     async with ServingFrontend(batcher,
                                max_pending=args.max_pending) as frontend:
+        ticker = None
+        if args.stats_interval is not None:
+            ticker = asyncio.get_running_loop().create_task(
+                _stats_ticker(frontend.stats, args.stats_interval))
         handles = []
         t0 = time.time()
         for i in range(args.requests):
@@ -152,6 +203,12 @@ async def _serve(args, cfg, params):
         completions = await asyncio.gather(*(h.result() for h in handles))
         wall = time.time() - t0
         stats = frontend.stats()
+        if ticker is not None:
+            ticker.cancel()
+        if args.trace:
+            trace = write_trace(args.trace, frontend.telemetry)
+            print(f"wrote {len(trace['traceEvents'])} trace events to "
+                  f"{args.trace} (open in ui.perfetto.dev)")
 
     toks = sum(len(c.tokens) for c in completions)
     mode = (f"sampled(T={args.temperature}, top_k={args.top_k}, "
@@ -227,6 +284,14 @@ def main():
                          "accounting)")
     ap.add_argument("--stream", action="store_true",
                     help="print request 0's tokens as they stream")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the run's Chrome/Perfetto trace_event "
+                         "JSON here (one process track per replica, one "
+                         "thread per request)")
+    ap.add_argument("--stats-interval", type=float, default=None,
+                    metavar="S",
+                    help="print a one-line telemetry snapshot to stderr "
+                         "every S seconds")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy (default); > 0 samples")
     ap.add_argument("--top-k", type=int, default=0,

@@ -13,6 +13,52 @@ values, and fire at config time rather than deep inside an engine.
 constructor; the historical loose kwargs survive one release behind a
 `DeprecationWarning` shim.
 
+Observability contract: ``telemetry`` is the stack-wide substrate every
+layer reports through — a `Telemetry` sink carried on
+``ServingConfig(telemetry=...)`` and shared by the batcher, its engine
+and its frontend (the router holds its own plus a `merged_telemetry()`
+view over the fleet).  Three facets:
+
+- **metrics registry** — `Counter` / `Gauge` / `Histogram` (fixed
+  buckets, retained samples, p50/p95/p99, mergeable across replicas)
+  under Prometheus-style names with a ``layer_noun_unit`` convention:
+  the frontend owns ``serving_ttft_ms`` / ``serving_tpot_ms`` /
+  ``requests_intake_total`` / ``requests_total{outcome=...}`` (every
+  handle ends in exactly ONE outcome, so intake == sum over outcomes);
+  the scheduler owns ``sched_preemptions_total{reason=...}``,
+  ``engine_cow_copies_total``, ``pool_page_growths_total``,
+  ``pool_pages_in_use`` and ``engine_disp_per_tick``; the router owns
+  ``router_migrations_total`` / ``router_failovers_total`` and the
+  per-link byte ledger ``router_recipe_bytes_total{link="src->dst"}``
+  / ``router_kv_page_bytes_total``.
+- **request-lifecycle tracer** — every rid carries a span log of
+  timestamped transitions: intake -> queued -> (resume ->) prefill ->
+  decode <-> preempt{reason} -> migrate_out / migrate_in -> exactly one
+  terminal event (finished / cancelled / expired / failed /
+  migrate_out).  The frontend and scheduler dedupe terminal events
+  through `Telemetry.last_event`; per-tick engine spans
+  (`Telemetry.tick`) record dispatch wall time with CoW / page-growth /
+  preemption annotations.  A migrated request's spans live on BOTH
+  replicas' sinks and interleave by timestamp under
+  `Telemetry.merged`.
+- **exporters** — `Telemetry.snapshot()` (nested dict; both `stats()`
+  methods are compatibility views over it), Chrome/Perfetto
+  trace_event JSON (`perfetto_trace` / `write_trace`,
+  ``--trace out.json`` on launch/serve.py: one process track per
+  replica, engine ticks on thread 0, one thread per request), and an
+  optional `jax.profiler` annotation around the jitted steps
+  (``Telemetry(profile=True)``).
+
+Zero-overhead rule: ``telemetry=None`` (the default) must add NOTHING
+to the hot path — every scheduler/engine call site guards with a plain
+``is not None`` check, recording is host-side only, and the fused tick
+stays at exactly 1.00 dispatch whether or not a sink is attached (the
+``serving_telemetry_overhead`` bench row gates overhead <= 5% in CI).
+The frontend keeps a private sink when the config carries none — it
+records only at request-lifecycle boundaries, never per tick.
+Placement feedback closes the loop: the router's `_score` demotes
+replicas whose ``serving_ttft_ms`` p95 trails the fleet's best.
+
 Layer split (where requests go vs who may run vs who runs vs how it
 runs):
 
@@ -214,4 +260,14 @@ from repro.serving.frontend import (  # noqa: F401
 from repro.serving.router import (  # noqa: F401
     ReplicaRouter,
     RouterHandle,
+)
+from repro.serving.telemetry import (  # noqa: F401
+    TERMINAL_EVENTS,
+    Counter,
+    Gauge,
+    Histogram,
+    Telemetry,
+    percentile,
+    perfetto_trace,
+    write_trace,
 )

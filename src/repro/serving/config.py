@@ -70,6 +70,13 @@ class ServingConfig:
     # request defaults
     default_sampling: SamplingParams | None = None
     bos_token: int | None = None
+    # observability: a serving.telemetry.Telemetry shared by the whole
+    # replica (batcher + engine + frontend record into it).  None — the
+    # default — is a true no-op: no per-tick recording anywhere on the
+    # hot path.  Excluded from equality/repr: two replicas with the same
+    # shape but separate telemetry sinks are the "same" config.
+    telemetry: Any = dataclasses.field(default=None, compare=False,
+                                       repr=False)
 
     def __post_init__(self):
         if self.prefill_mode not in _PREFILL_MODES:

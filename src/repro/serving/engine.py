@@ -37,6 +37,8 @@ MESH tick, with slots sharded over the data axes and heads over "model".
 """
 from __future__ import annotations
 
+import contextlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -53,6 +55,10 @@ from repro.serving.serve_step import (make_engine_step,
                                       make_paged_prefill_step,
                                       make_slot_prefill_step)
 from repro.serving.sharding import as_plan, tree_device_nbytes
+
+# shared no-op context for the telemetry=None fast path: the annotate
+# wrapper costs one `is not None` check and zero allocations per dispatch
+_NULL = contextlib.nullcontext()
 
 
 def _check_mesh_kernel(plan, use_pallas: bool, kernel: str = "xla"):
@@ -79,7 +85,9 @@ class DenseEngine:
     layout = "dense"
 
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int,
-                 capacity: int, use_pallas: bool = False, mesh=None):
+                 capacity: int, use_pallas: bool = False, mesh=None,
+                 telemetry=None):
+        self.telemetry = telemetry
         self.plan = as_plan(mesh, cfg)
         self.mesh = None if self.plan is None else self.plan.mesh
         _check_mesh_kernel(self.plan, use_pallas)
@@ -152,17 +160,21 @@ class DenseEngine:
         """Write a (1, S) prompt block into slot s's lanes in one call;
         returns (token, margin, logprob) sampled from the block's last
         position."""
-        tok, margin, logprob, self.cache = self._prefill(
-            self.params, self.cache, s, jnp.asarray(block), reset, row)
+        with (self.telemetry.annotate("dense.prefill")
+              if self.telemetry is not None else _NULL):
+            tok, margin, logprob, self.cache = self._prefill(
+                self.params, self.cache, s, jnp.asarray(block), reset, row)
         self.prefill_dispatches += 1
         return int(tok), float(margin), float(logprob)
 
     def decode(self, toks, active_mask, sampling: SlotSampling):
         """One fused tick: every slot advances one token in ONE dispatch."""
-        nxt, margins, logps, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(toks),
-            jnp.asarray(self._reset_mask), jnp.asarray(active_mask),
-            sampling)
+        with (self.telemetry.annotate("dense.decode")
+              if self.telemetry is not None else _NULL):
+            nxt, margins, logps, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(self._reset_mask), jnp.asarray(active_mask),
+                sampling)
         self.decode_dispatches += 1
         self._reset_mask[:] = False
         return np.asarray(nxt), np.asarray(margins), np.asarray(logps)
@@ -199,7 +211,8 @@ class PagedEngine:
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int,
                  capacity: int, page_size: int = DEFAULT_PAGE_SIZE,
                  n_pages: int | None = None, use_pallas: bool = False,
-                 kernel: str = "xla", mesh=None):
+                 kernel: str = "xla", mesh=None, telemetry=None):
+        self.telemetry = telemetry
         if kernel not in ("xla", "pallas"):
             raise ValueError(
                 f"kernel={kernel!r}: accepted values are ('xla', 'pallas')")
@@ -310,18 +323,23 @@ class PagedEngine:
 
     def prefill_block(self, s: int, block, off: int, reset: bool,
                       row: SlotSampling):
-        tok, margin, logprob, self.cache = self._prefill(
-            self.params, self.cache, s, jnp.asarray(block), np.int32(off),
-            jnp.asarray(self.block_table[s:s + 1]), reset, row)
+        with (self.telemetry.annotate("paged.prefill")
+              if self.telemetry is not None else _NULL):
+            tok, margin, logprob, self.cache = self._prefill(
+                self.params, self.cache, s, jnp.asarray(block),
+                np.int32(off), jnp.asarray(self.block_table[s:s + 1]),
+                reset, row)
         self.prefill_dispatches += 1
         return int(tok), float(margin), float(logprob)
 
     def decode(self, toks, active_mask, sampling: SlotSampling):
-        nxt, margins, logps, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(toks),
-            jnp.asarray(self.slot_pos), jnp.asarray(self.block_table),
-            jnp.asarray(self._reset_mask), jnp.asarray(self._copy_src),
-            jnp.asarray(self._copy_dst), sampling)
+        with (self.telemetry.annotate("paged.decode")
+              if self.telemetry is not None else _NULL):
+            nxt, margins, logps, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(self.slot_pos), jnp.asarray(self.block_table),
+                jnp.asarray(self._reset_mask), jnp.asarray(self._copy_src),
+                jnp.asarray(self._copy_dst), sampling)
         self.decode_dispatches += 1
         self._reset_mask[:] = False
         self._copy_src[:] = 0
@@ -352,7 +370,8 @@ class PerSlotEngine:
     layout = "per_slot"
 
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int,
-                 capacity: int, use_pallas: bool = False):
+                 capacity: int, use_pallas: bool = False, telemetry=None):
+        self.telemetry = telemetry
         self.cfg, self.params = cfg, params
         self.n_slots, self.capacity = n_slots, capacity
         self.plan, self.mesh, self.n_slot_groups = None, None, 1
@@ -381,9 +400,11 @@ class PerSlotEngine:
 
     def step(self, s: int, tok: int, row: SlotSampling):
         """Advance one slot by one token (its own batch-1 dispatch)."""
-        t, m, lp, self.caches[s] = self._step(
-            self.params, self.caches[s], jnp.asarray([[tok]], jnp.int32),
-            row)
+        with (self.telemetry.annotate("per_slot.step")
+              if self.telemetry is not None else _NULL):
+            t, m, lp, self.caches[s] = self._step(
+                self.params, self.caches[s],
+                jnp.asarray([[tok]], jnp.int32), row)
         self.decode_dispatches += 1
         return int(t), float(m), float(lp)
 

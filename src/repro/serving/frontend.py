@@ -50,6 +50,16 @@ Lifecycle semantics:
 - **latency**: every completion books TTFT (arrival to first streamed
   token) and TPOT (mean inter-token time) samples; `stats()` reports
   their p50/p95.
+- **telemetry**: the frontend records into the batcher's
+  `serving.telemetry.Telemetry` sink when the `ServingConfig` carries
+  one (a private sink is created otherwise, so latency stats always
+  work): `serving_ttft_ms`/`serving_tpot_ms` histograms,
+  `requests_intake_total` and `requests_total{outcome=...}` counters —
+  every handle terminates in exactly one outcome (completed / cancelled
+  / expired / failed / migrated), so intake == sum of outcomes — and
+  the request-lifecycle span events it owns: "intake", "migrate_in" /
+  "migrate_out" (the router boundary) and the terminal event, deduped
+  against the batcher side via `Telemetry.last_event`.
 
 Invalid requests (empty prompt, prompt >= capacity, infeasible page
 budget, ...) fail their OWN handle — `result()` re-raises the
@@ -59,13 +69,18 @@ from __future__ import annotations
 
 import asyncio
 
-import numpy as np
-
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import (Completion, DeadlineExpired,
                                      RecomputeRecipe, Request)
+from repro.serving.telemetry import (TERMINAL_EVENTS, Telemetry,
+                                     percentile)
 
 _END = object()  # stream terminator sentinel
+
+# terminal outcome (the requests_total label) -> lifecycle span event
+_OUTCOME_EVENTS = {"completed": "finished", "cancelled": "cancelled",
+                   "expired": "expired", "failed": "failed",
+                   "migrated": "migrate_out"}
 
 
 class RequestHandle:
@@ -136,17 +151,22 @@ class RequestHandle:
         self.completion = completion
         self.status = "done"
         self._frontend._record_latency(self, completion)
+        self._frontend._record_outcome(self, "completed")
         self._finished.set()
         self._stream.put_nowait(_END)
 
     def _fail(self, error: Exception):
         self.error = error
         self.status = "error"
+        self._frontend._record_outcome(
+            self, "expired" if isinstance(error, DeadlineExpired)
+            else "failed")
         self._finished.set()
         self._stream.put_nowait(_END)
 
     def _cancelled(self):
         self.status = "cancelled"
+        self._frontend._record_outcome(self, "cancelled")
         self._finished.set()
         self._stream.put_nowait(_END)
 
@@ -155,6 +175,7 @@ class RequestHandle:
         ends (the router's wrapper handle keeps delivering from the
         destination frontend) and its terminal status records why."""
         self.status = "migrated"
+        self._frontend._record_outcome(self, "migrated")
         self._finished.set()
         self._stream.put_nowait(_END)
 
@@ -184,11 +205,12 @@ class ServingFrontend:
         self._next_rid = 0
         self._done_seen = len(batcher.done)
         self._task: asyncio.Task | None = None
-        # per-completed-request latency samples (loop-clock milliseconds):
-        # TTFT = arrival -> first streamed token; TPOT = mean inter-token
-        # time past the first (requests emitting 1 token record no TPOT)
-        self.ttft_ms: list = []
-        self.tpot_ms: list = []
+        # the stack-wide metrics/tracing sink: shared with the batcher
+        # and engines when the ServingConfig carries one, private
+        # otherwise — the frontend only records at request-lifecycle
+        # boundaries (intake, first token, terminal outcome), never per
+        # tick, so a private sink costs nothing on the engine hot path
+        self.telemetry = getattr(batcher, "telemetry", None) or Telemetry()
 
     # ---------------------------------------------------------- lifecycle
 
@@ -237,6 +259,8 @@ class ServingFrontend:
                       deadline=deadline, best_of=best_of)
         handle = RequestHandle(self, rid, req)
         self._handles[rid] = handle
+        self.telemetry.counter("requests_intake_total").inc()
+        self.telemetry.trace(rid, "intake", prompt=len(req.prompt))
         try:
             await self._intake.put(handle)
         except asyncio.CancelledError:
@@ -263,6 +287,14 @@ class ServingFrontend:
         self._handles[recipe.rid] = handle
         # keep this frontend's own rid counter clear of injected rids
         self._next_rid = max(self._next_rid, recipe.rid + 1)
+        self.telemetry.counter("requests_intake_total").inc()
+        self.telemetry.trace(recipe.rid, "intake",
+                             prompt=len(recipe.prompt))
+        if recipe.emitted:
+            # migrated in mid-generation (a fresh router placement is
+            # just an intake): the span marks where the request landed
+            self.telemetry.trace(recipe.rid, "migrate_in",
+                                 replayed=len(recipe.emitted))
         try:
             await self._intake.put(handle)
         except asyncio.CancelledError:
@@ -368,26 +400,54 @@ class ServingFrontend:
 
     # ------------------------------------------------------------- status
 
+    @property
+    def ttft_ms(self) -> list:
+        """Raw TTFT samples (ms) — a view of the `serving_ttft_ms`
+        histogram's retained samples (compatibility with the pre-telemetry
+        list attribute)."""
+        h = self.telemetry.histograms.get("serving_ttft_ms")
+        return h.samples if h is not None else []
+
+    @property
+    def tpot_ms(self) -> list:
+        h = self.telemetry.histograms.get("serving_tpot_ms")
+        return h.samples if h is not None else []
+
     def _record_latency(self, handle: RequestHandle,
                         completion: Completion):
-        """Book TTFT/TPOT for a completed request (loop-clock ms).  A
-        handle that streamed no token on THIS frontend (a migrated-in
-        request whose replayed tokens covered everything it would ever
-        deliver here) records nothing — the samples describe tokens this
-        frontend actually surfaced."""
+        """Book TTFT/TPOT for a completed request (loop-clock ms) into
+        the telemetry histograms.  A handle that streamed no token on
+        THIS frontend (a migrated-in request whose replayed tokens
+        covered everything it would ever deliver here) records nothing —
+        the samples describe tokens this frontend actually surfaced."""
         if handle._t_first is None:
             return
         now = asyncio.get_running_loop().time()
-        self.ttft_ms.append((handle._t_first - handle._t0) * 1e3)
+        self.telemetry.histogram("serving_ttft_ms").observe(
+            (handle._t_first - handle._t0) * 1e3)
         n_after_first = handle._sent - (len(handle._recipe.emitted)
                                         if handle._recipe else 0) - 1
         if n_after_first > 0:
-            self.tpot_ms.append(
+            self.telemetry.histogram("serving_tpot_ms").observe(
                 (now - handle._t_first) * 1e3 / n_after_first)
+
+    def _record_outcome(self, handle: RequestHandle, outcome: str):
+        """Book a handle's terminal outcome: the
+        `requests_total{outcome=...}` counter ALWAYS increments (the
+        drain invariant: intake == sum over outcomes), while the
+        terminal span event is deduped against the batcher side —
+        whichever of the two shares the sink and records first wins,
+        so every rid carries exactly one terminal event."""
+        tel = self.telemetry
+        tel.counter("requests_total").inc(outcome=outcome)
+        if tel.last_event(handle.rid) not in TERMINAL_EVENTS:
+            tel.trace(handle.rid, _OUTCOME_EVENTS[outcome])
 
     @staticmethod
     def _pct(samples: list, q: float):
-        return float(np.percentile(samples, q)) if samples else None
+        # compatibility shim: the percentile math lives in
+        # serving.telemetry (shared with the router and histograms)
+        return percentile(samples, q)
 
     def stats(self) -> dict:
         """Operational snapshot of the batcher under this frontend —
@@ -396,9 +456,15 @@ class ServingFrontend:
         operator sees both total state and the per-chip HBM/skew picture.
         Latency percentiles (TTFT = time to first streamed token, TPOT =
         mean inter-token time) cover requests COMPLETED here; both are
-        None until the first completion."""
+        None until the first completion.  A compatibility view over
+        `Telemetry.snapshot()` — the full registry rides under
+        ``"telemetry"``."""
         b = self.batcher
         mesh = getattr(b, "mesh", None)
+        snap = self.telemetry.snapshot()
+        hists = self.telemetry.histograms
+        ttft = hists.get("serving_ttft_ms")
+        tpot = hists.get("serving_tpot_ms")
         return {
             "n_slots": b.n_slots,
             "mesh": (None if mesh is None
@@ -411,11 +477,12 @@ class ServingFrontend:
             "decode_dispatches": b.decode_dispatches,
             "preemptions": b.preemptions,
             "pending": len(b.queue),
-            "completed": len(self.ttft_ms),
-            "ttft_p50_ms": self._pct(self.ttft_ms, 50),
-            "ttft_p95_ms": self._pct(self.ttft_ms, 95),
-            "tpot_p50_ms": self._pct(self.tpot_ms, 50),
-            "tpot_p95_ms": self._pct(self.tpot_ms, 95),
+            "completed": ttft.count if ttft is not None else 0,
+            "ttft_p50_ms": ttft.percentile(50) if ttft is not None else None,
+            "ttft_p95_ms": ttft.percentile(95) if ttft is not None else None,
+            "tpot_p50_ms": tpot.percentile(50) if tpot is not None else None,
+            "tpot_p95_ms": tpot.percentile(95) if tpot is not None else None,
+            "telemetry": snap,
         }
 
     # -------------------------------------------------------------- loop

@@ -41,13 +41,12 @@ from __future__ import annotations
 import asyncio
 import dataclasses
 
-import numpy as np
-
 from repro.serving.config import ServingConfig
 from repro.serving.frontend import RequestHandle, ServingFrontend
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import (Completion, ContinuousBatcher,
                                      RecomputeRecipe, Request)
+from repro.serving.telemetry import Telemetry, write_trace
 
 _END = object()       # RouterHandle stream terminator
 _TERMINAL = object()  # placement-queue terminator (handle reached an end)
@@ -163,7 +162,8 @@ class ReplicaRouter:
     engine, page pool and frontend, built from its ServingConfig."""
 
     def __init__(self, cfg, params, configs: list[ServingConfig], *,
-                 max_pending: int = 64, migrate_auto: bool = True):
+                 max_pending: int = 64, migrate_auto: bool = True,
+                 telemetry: Telemetry | None = None):
         if not configs:
             raise ValueError("need at least one ServingConfig")
         self.replicas: list[_Replica] = []
@@ -177,13 +177,31 @@ class ReplicaRouter:
         self._next_rid = 0
         self._task: asyncio.Task | None = None
         self._pumps: set = set()
-        # per-link byte accounting (crosspod_overhead_bytes conventions):
-        # actual recipe traffic vs the counterfactual KV-page transfer
-        self.migrations = 0
-        self.failovers = 0
-        self.recipe_bytes = 0
-        self.kv_page_bytes = 0
-        self._links: dict = {}  # (src, dst) -> bytes shipped
+        # the router's own sink holds the fleet-level series: the
+        # per-link byte ledger (crosspod_overhead_bytes conventions —
+        # actual recipe traffic vs the counterfactual KV-page transfer)
+        # and the migration/failover counters; the legacy attribute
+        # names survive as counter-backed properties below
+        self.telemetry = telemetry or Telemetry()
+
+    # counter-backed views of the pre-telemetry ledger attributes
+    @property
+    def migrations(self) -> int:
+        return int(self.telemetry.counter("router_migrations_total").total)
+
+    @property
+    def failovers(self) -> int:
+        return int(self.telemetry.counter("router_failovers_total").total)
+
+    @property
+    def recipe_bytes(self) -> int:
+        return int(
+            self.telemetry.counter("router_recipe_bytes_total").total)
+
+    @property
+    def kv_page_bytes(self) -> int:
+        return int(
+            self.telemetry.counter("router_kv_page_bytes_total").total)
 
     # ---------------------------------------------------------- lifecycle
 
@@ -277,7 +295,27 @@ class ReplicaRouter:
             free = b.allocator.n_free / max(1, b.engine.n_pages - 1)
         else:
             free = sum(r is None for r in b.slot_req) / b.n_slots
-        return 1.5 * aff - load + 0.25 * free
+        score = 1.5 * aff - load + 0.25 * free
+        # tail-latency feedback (the ROADMAP "feed percentiles back into
+        # placement" item): a replica whose completed-request TTFT p95
+        # trails the fleet's best is demoted proportionally, capped at
+        # one full load unit, so degraded replicas draw fewer placements
+        # under otherwise equal load
+        p95 = self._ttft_p95(rep)
+        if p95 is not None:
+            best = min((p for p in (self._ttft_p95(r)
+                                    for r in self.replicas if r.alive)
+                        if p is not None), default=None)
+            if best and p95 > best:
+                score -= min(1.0, 0.5 * (p95 / best - 1.0))
+        return score
+
+    @staticmethod
+    def _ttft_p95(rep: _Replica):
+        """Replica-local TTFT p95 from its frontend's telemetry registry
+        (None until the replica completes its first request)."""
+        h = rep.frontend.telemetry.histograms.get("serving_ttft_ms")
+        return h.percentile(95) if h is not None and h.count else None
 
     def _best_for(self, recipe: RecomputeRecipe, exclude=None):
         best, best_s = None, None
@@ -331,7 +369,7 @@ class ReplicaRouter:
             return False
         self._account(src, dst, recipe)
         rh.migrations += 1
-        self.migrations += 1
+        self.telemetry.counter("router_migrations_total").inc()
         await self._place_recipe(rh, recipe, dst)
         return True
 
@@ -345,7 +383,7 @@ class ReplicaRouter:
         rep = self.replicas[i]
         rep.alive = False
         await rep.frontend.stop()
-        self.failovers += 1
+        self.telemetry.counter("router_failovers_total").inc()
         drained = 0
         for rid in list(rep.frontend._handles):
             rh = self._requests.get(rid)
@@ -361,7 +399,7 @@ class ReplicaRouter:
                 continue
             self._account(i, dst, recipe)
             rh.migrations += 1
-            self.migrations += 1
+            self.telemetry.counter("router_migrations_total").inc()
             await self._place_recipe(rh, recipe, dst)
             drained += 1
         return drained
@@ -415,46 +453,68 @@ class ReplicaRouter:
 
     def _account(self, src: int, dst: int, recipe: RecomputeRecipe):
         nb = recipe.nbytes()
-        self.recipe_bytes += nb
-        self._links[(src, dst)] = self._links.get((src, dst), 0) + nb
-        self.kv_page_bytes += self._kv_bytes(
-            self.replicas[src].batcher,
-            len(recipe.prompt) + len(recipe.emitted))
+        self.telemetry.counter("router_recipe_bytes_total").inc(
+            nb, link=f"{src}->{dst}")
+        self.telemetry.counter("router_kv_page_bytes_total").inc(
+            self._kv_bytes(self.replicas[src].batcher,
+                           len(recipe.prompt) + len(recipe.emitted)))
 
     def router_overhead_bytes(self) -> dict:
         """Migration-traffic ledger, `crosspod_overhead_bytes`-style:
         what the recipes actually cost per link, what shipping KV pages
-        for the same moves would have cost, and the gain."""
+        for the same moves would have cost, and the gain.  A view over
+        the `router_*_total` counters."""
+        by_link = self.telemetry.counter("router_recipe_bytes_total").values
         ratio = (self.recipe_bytes / self.kv_page_bytes
                  if self.kv_page_bytes else 0.0)
         return {
             "migrations": self.migrations,
             "failovers": self.failovers,
-            "links": {f"{a}->{b}": v
-                      for (a, b), v in sorted(self._links.items())},
+            "links": {dict(k)["link"]: v
+                      for k, v in sorted(by_link.items())},
             "recipe_bytes": self.recipe_bytes,
             "kv_page_bytes": self.kv_page_bytes,
             "ratio_vs_kv": ratio,
             "gain_vs_kv": 1.0 - ratio,
         }
 
+    def merged_telemetry(self) -> Telemetry:
+        """One registry over the whole fleet: the router's own sink plus
+        every replica's (deduped — replicas configured onto one shared
+        sink are merged once).  Spans from a migrated request's source
+        and destination replicas interleave by timestamp."""
+        return Telemetry.merged(
+            [self.telemetry]
+            + [rep.frontend.telemetry for rep in self.replicas])
+
+    def export_trace(self, path: str) -> dict:
+        """Write the fleet's Chrome/Perfetto trace_event JSON to `path`:
+        one process track per replica (engine ticks on thread 0, one
+        thread per request) plus the router's own.  Returns the trace
+        dict."""
+        tels = [rep.frontend.telemetry for rep in self.replicas]
+        names = [f"replica{rep.idx}" for rep in self.replicas]
+        return write_trace(path, tels + [self.telemetry],
+                           names + ["router"])
+
     def stats(self) -> dict:
         """Fleet snapshot: per-replica frontend stats, pooled TTFT/TPOT
-        percentiles over every completion anywhere in the fleet, and the
-        migration byte ledger."""
-        ttft = [x for rep in self.replicas for x in rep.frontend.ttft_ms]
-        tpot = [x for rep in self.replicas for x in rep.frontend.tpot_ms]
-        pct = (lambda xs, q: float(np.percentile(xs, q)) if xs else None)
+        percentiles over every completion anywhere in the fleet (via the
+        merged telemetry registries), and the migration byte ledger."""
+        merged = self.merged_telemetry()
+        ttft = merged.histograms.get("serving_ttft_ms")
+        tpot = merged.histograms.get("serving_tpot_ms")
         return {
             "replicas": [dict(rep.frontend.stats(), alive=rep.alive)
                          for rep in self.replicas],
             "open_requests": len(self._requests),
-            "completed": len(ttft),
-            "ttft_p50_ms": pct(ttft, 50),
-            "ttft_p95_ms": pct(ttft, 95),
-            "tpot_p50_ms": pct(tpot, 50),
-            "tpot_p95_ms": pct(tpot, 95),
+            "completed": ttft.count if ttft is not None else 0,
+            "ttft_p50_ms": ttft.percentile(50) if ttft is not None else None,
+            "ttft_p95_ms": ttft.percentile(95) if ttft is not None else None,
+            "tpot_p50_ms": tpot.percentile(50) if tpot is not None else None,
+            "tpot_p95_ms": tpot.percentile(95) if tpot is not None else None,
             "overhead": self.router_overhead_bytes(),
+            "telemetry": merged.snapshot(),
         }
 
     # ---------------------------------------------------------- dispatcher

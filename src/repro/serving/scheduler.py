@@ -107,6 +107,7 @@ from repro.serving.config import ServingConfig
 from repro.serving.engine import DenseEngine, PagedEngine, PerSlotEngine
 from repro.serving.sampling import (GREEDY, SamplingParams, SlotSampling,
                                     branch_key, key_zeros)
+from repro.serving.telemetry import TERMINAL_EVENTS
 
 
 class DeadlineExpired(Exception):
@@ -368,10 +369,15 @@ class _BatcherBase:
     # re-binding old positional call sites would be worse than a TypeError
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
                  capacity: int = 256, bos_token: int | None = None,
-                 default_sampling: SamplingParams | None = None):
+                 default_sampling: SamplingParams | None = None,
+                 telemetry=None):
         assert cfg.num_codebooks == 1, "scheduler covers text archs"
         self.cfg = cfg
         self.params = params
+        # serving.telemetry.Telemetry sink, or None — every recording
+        # call below is guarded at the call site, so None is a true
+        # zero-overhead no-op on the per-tick hot path
+        self.telemetry = telemetry
         self.n_slots = n_slots
         self.capacity = capacity
         self.bos_token = bos_token
@@ -396,6 +402,15 @@ class _BatcherBase:
         # re-sampling anything
         self._resume: dict = {}
         self._admit_seq = 0           # admission order, for victim choice
+
+    # ---------------------------------------------------------- telemetry
+
+    def _trace(self, rid: int, event: str, **attrs):
+        """Record a lifecycle transition (no-op without a telemetry
+        sink).  Off-hot-path convenience — per-tick code guards inline
+        instead so `telemetry=None` allocates nothing per tick."""
+        if self.telemetry is not None:
+            self.telemetry.trace(rid, event, **attrs)
 
     # ------------------------------------------------- engine delegation
 
@@ -450,6 +465,10 @@ class _BatcherBase:
             accepted.append(req)
         # atomic: a batch with an invalid request enqueues nothing
         self.queue.extend(accepted)
+        if self.telemetry is not None:
+            for req in accepted:
+                self.telemetry.trace(req.rid, "queued",
+                                     prompt=len(req.prompt))
 
     def _admission_check(self, req: Request):
         """Hook: layout-specific submit-time feasibility check."""
@@ -527,18 +546,22 @@ class _BatcherBase:
         """Hook: record a finished sequence (best-of-n group members are
         intercepted by the paged batcher's winner selection)."""
         self.done.append(c)
+        self._trace(c.rid, "finished", tokens=len(c.tokens))
 
     def _release_slot(self, s: int):
         """Hook: layout-specific reclaim when slot s's sequence finishes."""
 
-    def cancel(self, rid: int) -> bool:
+    def cancel(self, rid: int, *, _outcome: str | None = "cancelled") \
+            -> bool:
         """Drop request `rid` at whatever lifecycle stage it is in —
         queued (including preempted-and-requeued), mid-prefill or
         mid-decode.  Its slot and pages are reclaimed immediately and no
         Completion is recorded.  A best-of-n request drops EVERY live
         branch (queued and running members share the rid).  Returns False
         when the rid is unknown (never submitted, already finished, or
-        already cancelled)."""
+        already cancelled).  `_outcome` names the terminal span event to
+        trace ("cancelled" / "expired"; None suppresses it — migration
+        paths trace their own)."""
         hit = False
         for i in range(len(self.queue) - 1, -1, -1):
             req = self.queue[i]
@@ -555,6 +578,12 @@ class _BatcherBase:
                 hit = True
         if hit:
             self._drop_group(rid)
+            # skip when a frontend already traced this rid's terminal
+            # event (its handle closes before the batcher-side drop)
+            if _outcome is not None and self.telemetry is not None \
+                    and self.telemetry.last_event(rid) \
+                    not in TERMINAL_EVENTS:
+                self.telemetry.trace(rid, _outcome)
         return hit
 
     def _drop_group(self, rid: int):
@@ -578,10 +607,41 @@ class _BatcherBase:
                     and req.deadline <= now and req.rid not in expired:
                 expired.append(req.rid)
         for rid in expired:
-            self.cancel(rid)
+            self.cancel(rid, _outcome="expired")
         return expired
 
     # --------------------------------------------------------------- loop
+
+    def step(self):
+        """One engine tick.  With a telemetry sink attached, the tick is
+        timed and annotated (active slots, dispatches, CoW copies, page
+        growths, preemptions) and the dispatch-rate / pool gauges are
+        refreshed; ``telemetry=None`` falls straight through to the
+        layout-specific `_step_inner` — zero per-tick overhead."""
+        tel = self.telemetry
+        if tel is None:
+            return self._step_inner()
+        t0 = tel.now()
+        d0 = self.engine.decode_dispatches + self.engine.prefill_dispatches
+        a0 = self.decode_active_slots
+        c0 = getattr(self, "cow_copies", 0)
+        g0 = getattr(self, "page_growths", 0)
+        p0 = self.preemptions
+        out = self._step_inner()
+        tel.tick(
+            t0, tel.now() - t0,
+            active=self.decode_active_slots - a0,
+            dispatches=self.engine.decode_dispatches
+            + self.engine.prefill_dispatches - d0,
+            cow_copies=getattr(self, "cow_copies", 0) - c0,
+            page_growths=getattr(self, "page_growths", 0) - g0,
+            preemptions=self.preemptions - p0)
+        tel.gauge("engine_disp_per_tick").set(
+            self.decode_dispatches / max(1, self.decode_ticks))
+        alloc = getattr(self, "allocator", None)
+        if alloc is not None:
+            tel.gauge("pool_pages_in_use").set(alloc.in_use)
+        return out
 
     def run(self, max_steps: int = 10_000):
         """Drive the engine until queue and slots drain (or max_steps).
@@ -668,7 +728,8 @@ class ContinuousBatcher(_BatcherBase):
         self.config = sc
         super().__init__(cfg, params, n_slots=sc.n_slots,
                          capacity=sc.capacity, bos_token=sc.bos_token,
-                         default_sampling=sc.default_sampling)
+                         default_sampling=sc.default_sampling,
+                         telemetry=sc.telemetry)
         self.cache_layout = sc.cache_layout
         self.allocation = sc.allocation
         self.prefill_mode = sc.prefill_mode
@@ -685,18 +746,21 @@ class ContinuousBatcher(_BatcherBase):
         self._cow_reserve: list = [[] for _ in range(sc.n_slots)]
         self.cow_copies = 0         # in-dispatch CoW page copies queued
         self.fork_shared_pages = 0  # pages shared across all forks
+        self.page_growths = 0       # lazy on-demand decode pages acquired
         if sc.cache_layout == "dense":
             self.engine = DenseEngine(cfg, params, n_slots=sc.n_slots,
                                       capacity=sc.capacity,
                                       use_pallas=sc.use_pallas,
-                                      mesh=sc.mesh)
+                                      mesh=sc.mesh,
+                                      telemetry=sc.telemetry)
         else:
             self.engine = PagedEngine(cfg, params, n_slots=sc.n_slots,
                                       capacity=sc.capacity,
                                       page_size=sc.page_size,
                                       n_pages=sc.n_pages,
                                       use_pallas=sc.use_pallas,
-                                      kernel=sc.kernel, mesh=sc.mesh)
+                                      kernel=sc.kernel, mesh=sc.mesh,
+                                      telemetry=sc.telemetry)
             self.allocator = PageAllocator(self.engine.n_pages,
                                            sc.page_size, sc.allocation)
             self.slot_pages: list = [[] for _ in range(sc.n_slots)]
@@ -852,13 +916,25 @@ class ContinuousBatcher(_BatcherBase):
         if rs is not None:
             st["emitted"], st["margins"], st["logps"] = rs
         self.slot_state[s] = st
+        tel = self.telemetry
+        if tel is not None:
+            # a zero-emitted preemption leaves no resume stash, so pair
+            # the preempt off the span log instead
+            if rs is not None or tel.last_event(req.rid) == "preempt":
+                tel.trace(req.rid, "resume", slot=s,
+                          replayed=len(st["emitted"]))
+            tel.trace(req.rid, "prefill", slot=s, feed=len(feed) - fed0)
         if self.prefill_mode == "chunked":
             self._prefill_slot(s, feed, fresh=rs is None)
+            if tel is not None and self.slot_req[s] is req:
+                tel.trace(req.rid, "decode", slot=s)
         else:
             # prompt (and, on resume, the replayed generated
             # tokens) will be fed through decode ticks; zero the
             # slot's lanes inside the next fused dispatch
             self.engine.mark_reset(s)
+            if tel is not None:
+                tel.trace(req.rid, "decode", slot=s)
 
     def _admit_group(self, head: Request) -> bool:
         """Admit a best_of=n request: prefill the prompt ONCE into a
@@ -1019,6 +1095,7 @@ class ContinuousBatcher(_BatcherBase):
         g = self._groups.get(c.rid)
         if g is None or not any(m is req for m in g["members"]):
             self.done.append(c)
+            self._trace(c.rid, "finished", tokens=len(c.tokens))
             return
         g["completions"][req.sampling.branch] = c
         if len(g["completions"]) == g["n"]:
@@ -1028,6 +1105,8 @@ class ContinuousBatcher(_BatcherBase):
             self.group_results[c.rid] = by_branch
             del self._groups[c.rid]
             self.done.append(winner)
+            self._trace(c.rid, "finished", tokens=len(winner.tokens),
+                        branches=g["n"])
 
     def _drop_group(self, rid: int):
         self._groups.pop(rid, None)
@@ -1046,11 +1125,18 @@ class ContinuousBatcher(_BatcherBase):
                 return True
         return False
 
-    def _preempt(self, s: int):
+    def _preempt(self, s: int, reason: str = "forced"):
         """Host-side only: release slot s's pages/lane, stash its emitted
-        tokens for a resume prefill, requeue it at the head."""
+        tokens for a resume prefill, requeue it at the head.  `reason`
+        labels the preemption ("forced" — the public `preempt()`;
+        "pool_exhausted" — lazy growth; "migrate" — recipe export)."""
         req, st = self.slot_req[s], self.slot_state[s]
         self.preemptions += 1
+        if self.telemetry is not None:
+            self.telemetry.counter("sched_preemptions_total").inc(
+                reason=reason)
+            self.telemetry.trace(req.rid, "preempt", reason=reason,
+                                 slot=s, emitted=len(st["emitted"]))
         if st["emitted"]:
             self._resume[id(req)] = (list(st["emitted"]),
                                      list(st["margins"]),
@@ -1078,12 +1164,15 @@ class ContinuousBatcher(_BatcherBase):
         g = self._groups.get(rid)
         if g is not None:
             head = g["head"]
-            self.cancel(rid)  # drops every queued/running branch + pages
+            # drops every queued/running branch + pages; _outcome=None —
+            # the request is migrating, not cancelled (the router traces
+            # migrate_out/migrate_in at the frontend boundary)
+            self.cancel(rid, _outcome=None)
             return RecomputeRecipe.from_request(head, self.default_sampling)
         for s in range(self.n_slots):
             req = self.slot_req[s]
             if req is not None and req.rid == rid:
-                self._preempt(s)  # stash emitted, requeue at head
+                self._preempt(s, reason="migrate")  # stash, requeue at head
                 break
         for i, req in enumerate(self.queue):
             if req.rid == rid:
@@ -1151,7 +1240,7 @@ class ContinuousBatcher(_BatcherBase):
             ripe = [v for v in live
                     if self.slot_state[v]["ran"] >= self.min_quantum]
             victim = min(ripe or live, key=self._victim_order)
-            self._preempt(victim)
+            self._preempt(victim, reason="pool_exhausted")
             if victim == s:
                 return False  # the grower was the weakest: it yielded
         return self.slot_req[s] is not None
@@ -1193,6 +1282,10 @@ class ContinuousBatcher(_BatcherBase):
                 pid = self.allocator.alloc()
                 self.slot_pages[s].append(pid)
                 self.engine.set_page(s, idx, pid)
+                self.page_growths += 1
+                if self.telemetry is not None:
+                    self.telemetry.counter(
+                        "pool_page_growths_total").inc()
                 continue
             pid = self.slot_pages[s][idx]
             if pid == 0 or self.allocator.refcount[pid] <= 1:
@@ -1208,6 +1301,8 @@ class ContinuousBatcher(_BatcherBase):
             self.engine.set_page(s, idx, new)
             self.engine.queue_copy(s, pid, new)
             self.cow_copies += 1
+            if self.telemetry is not None:
+                self.telemetry.counter("engine_cow_copies_total").inc()
 
     # ------------------------------------------------------------ prefill
 
@@ -1259,7 +1354,7 @@ class ContinuousBatcher(_BatcherBase):
 
     # --------------------------------------------------------------- step
 
-    def step(self):
+    def _step_inner(self):
         """One engine tick: a SINGLE fused dispatch advances every active
         slot by one token (prompt feed in decode prefill mode, replayed
         tokens on a decode-mode resume, or generated — sampled or greedy
@@ -1317,12 +1412,14 @@ class PerSlotBatcher(_BatcherBase):
 
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
                  capacity: int = 256, bos_token: int | None = None,
-                 default_sampling: SamplingParams | None = None):
+                 default_sampling: SamplingParams | None = None,
+                 telemetry=None):
         super().__init__(cfg, params, n_slots=n_slots, capacity=capacity,
                          bos_token=bos_token,
-                         default_sampling=default_sampling)
+                         default_sampling=default_sampling,
+                         telemetry=telemetry)
         self.engine = PerSlotEngine(cfg, params, n_slots=n_slots,
-                                    capacity=capacity)
+                                    capacity=capacity, telemetry=telemetry)
 
     @property
     def caches(self):
@@ -1341,8 +1438,12 @@ class PerSlotBatcher(_BatcherBase):
                 self.slot_req[s] = req
                 self.slot_state[s] = self._new_slot_state(req)
                 self.engine.reset_slot(s)
+                if self.telemetry is not None:
+                    self._trace(req.rid, "prefill", slot=s,
+                                feed=len(req.prompt))
+                    self._trace(req.rid, "decode", slot=s)
 
-    def step(self):
+    def _step_inner(self):
         """One engine step: each active slot consumes one token (prompt feed
         or generated) and produces at most one new token."""
         self._fill_slots()

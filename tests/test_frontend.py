@@ -94,15 +94,21 @@ def test_cancellation_at_every_stage_reclaims_pages(setup):
         h_ok = await fe.submit(prompts[3], 6)
         comp = await h_ok.result()
         await fe.stop()
-        return eng, free0, got, comp, (h_intake.status, h_queue.status)
+        snap = fe.telemetry.snapshot()
+        return eng, free0, got, comp, (h_intake.status, h_queue.status), snap
 
-    eng, free0, got, comp, statuses = asyncio.run(go())
+    eng, free0, got, comp, statuses, snap = asyncio.run(go())
     assert statuses == ("cancelled", "cancelled")
     assert 4 <= len(got) <= 6  # stream ended promptly after cancel
     assert len(comp.tokens) == 6
     assert eng.allocator.n_free == free0 and eng.allocator.in_use == 0
     # cancelled rids recorded no Completion
     assert {c.rid for c in eng.done} == {comp.rid}
+    # terminal-outcome accounting: every intake books exactly one outcome
+    outcomes = snap["counters"]["requests_total"]
+    assert outcomes == {"outcome=cancelled": 3, "outcome=completed": 1}
+    assert snap["counters"]["requests_intake_total"] \
+        == sum(outcomes.values()) == 4
 
 
 def test_bounded_intake_backpressure(setup):
@@ -276,9 +282,11 @@ def test_deadline_expiry_fails_handle_and_reclaims_pages(setup):
                 await doomed.result()
             streamed = [tok async for tok in doomed]
             comp = await ok.result()
-        return eng, free0, doomed.status, streamed, comp
+            spans = dict(fe.telemetry.spans)
+            snap = fe.telemetry.snapshot()
+        return eng, free0, doomed.status, streamed, comp, spans, snap
 
-    eng, free0, status, streamed, comp = asyncio.run(go())
+    eng, free0, status, streamed, comp, spans, snap = asyncio.run(go())
     assert status == "error"
     # expiry is enforced between ticks: at most a few tokens streamed
     # before the cancel, and the stream terminated far short of budget
@@ -287,6 +295,11 @@ def test_deadline_expiry_fails_handle_and_reclaims_pages(setup):
     assert eng.allocator.n_free == free0
     # the expired rid recorded no Completion
     assert {c.rid for c in eng.done} == {comp.rid}
+    # exactly one terminal span per rid, and the expiry is booked as an
+    # outcome
+    assert spans[0][-1][1] == "expired" and spans[1][-1][1] == "finished"
+    assert snap["counters"]["requests_total"] == \
+        {"outcome=completed": 1, "outcome=expired": 1}
 
 
 def test_generous_deadline_expires_nothing(setup):

@@ -348,9 +348,9 @@ def test_min_quantum_no_thrash_on_overload_mix(setup):
     orig = eng._preempt
     runs = []
 
-    def spy(s):
+    def spy(s, **kw):
         runs.append(eng.slot_state[s]["ran"])
-        orig(s)
+        orig(s, **kw)
 
     eng._preempt = spy
     eng.submit(_reqs(cfg))

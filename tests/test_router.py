@@ -1,8 +1,9 @@
 """Replica router + ServingConfig tests: the unified construction API
 (validation, deprecation shim), load-scored placement across unequal
 pools, recompute-recipe migration token-parity (greedy and sampled),
-replica-failure failover, prefix-affinity scoring, and the TTFT/TPOT
-latency export."""
+replica-failure failover, prefix-affinity scoring, the TTFT/TPOT
+latency export, and the tail-latency placement penalty (a degraded-p95
+replica draws fewer requests)."""
 
 import asyncio
 import dataclasses
@@ -255,3 +256,36 @@ def test_frontend_latency_stats(setup):
     for k in ("ttft_p50_ms", "ttft_p95_ms", "tpot_p50_ms", "tpot_p95_ms"):
         assert isinstance(st[k], float) and st[k] >= 0.0
     assert st["ttft_p50_ms"] <= st["ttft_p95_ms"]
+
+
+def test_degraded_p95_replica_draws_fewer_placements(setup):
+    """Tail-latency feedback: of two otherwise-identical replicas, the
+    one whose recorded TTFT p95 trails 100x must lose placement under
+    equal load — here every sequentially-submitted request (both
+    replicas idle at each decision) lands on the healthy one."""
+    cfg, params = setup
+    prompts = _prompts(cfg, n=6, plen=4, seed=61)
+
+    async def go():
+        configs = [ServingConfig(n_slots=2, capacity=96),
+                   ServingConfig(n_slots=2, capacity=96)]
+        async with ReplicaRouter(cfg, params, configs,
+                                 migrate_auto=False) as router:
+            # seed the registries as if replica 1 had a degraded tail;
+            # enough samples that this run's own completions cannot move
+            # either p95
+            for idx, ms in ((0, 5.0), (1, 500.0)):
+                h = router.replicas[idx].frontend.telemetry.histogram(
+                    "serving_ttft_ms")
+                for _ in range(400):
+                    h.observe(ms)
+            results = []
+            for p in prompts:
+                results.append(await (await router.submit(p, 6)).result())
+            placed = [len(r.batcher.done) for r in router.replicas]
+        return results, placed
+
+    results, placed = asyncio.run(go())
+    assert len(results) == 6 and sum(placed) == 6
+    assert placed[0] > placed[1]  # the degraded replica drew fewer
+    assert placed == [6, 0]  # idle-vs-idle: the penalty decides each one
